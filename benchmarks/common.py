@@ -1,0 +1,33 @@
+"""Shared helpers for the paper-reproduction benchmarks."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.workload import (WHISPER_TINY, WHISPER_BASE, WHISPER_SMALL,
+                                 whisper_workload)   # noqa: E402
+
+
+def fmt_table(headers, rows, title=""):
+    widths = [max(len(str(h)), *(len(str(r[i])) for r in rows))
+              for i, h in enumerate(headers)]
+    out = []
+    if title:
+        out.append(f"\n## {title}")
+    out.append("| " + " | ".join(str(h).ljust(w)
+                                 for h, w in zip(headers, widths)) + " |")
+    out.append("|" + "|".join("-" * (w + 2) for w in widths) + "|")
+    for r in rows:
+        out.append("| " + " | ".join(str(c).ljust(w)
+                                     for c, w in zip(r, widths)) + " |")
+    return "\n".join(out)
+
+
+def pct(x):
+    return f"{x:.2f}%"
+
+
+def workloads():
+    return (whisper_workload(WHISPER_TINY, dtype="f16"),
+            whisper_workload(WHISPER_TINY, dtype="q8_0"))

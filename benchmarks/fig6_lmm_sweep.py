@@ -1,0 +1,54 @@
+"""Fig 6: latency & PDP vs LMM size — the PDP minimum must sit at 32 KB.
+
+This is the paper's headline design-space exploration: 16 KB forces CPU
+fallbacks (latency up); 64+ KB buys little latency but much static power
+(PDP up). Also runs the TPU binding of the same knob: the Pallas VMEM
+block budget sweep (no static-power term on fixed silicon -> latency-
+monotone instead of U-shaped; reported for contrast).
+"""
+
+from benchmarks.common import fmt_table, workloads
+from repro.core.energy import calibrate_imax, lmm_sweep
+from repro.core.footprint import select_blocks
+
+
+def run():
+    w16, w8 = workloads()
+    calib = calibrate_imax(w16, w8)
+    out = []
+    mins = {}
+    for kern, work in (("fp16", w16), ("q8_0", w8)):
+        pts = lmm_sweep(work, calib.model, kern,
+                        budgets=tuple(k * 1024 for k in (16, 32, 64, 128)))
+        for p in pts:
+            out.append([kern, f"{p.budget_bytes // 1024}KB",
+                        f"{p.latency_s:.2f}", f"{p.power_w:.3f}",
+                        f"{p.pdp_j:.1f}",
+                        f"{p.breakdown.exec_share:.1%}"])
+        mins[kern] = min(pts, key=lambda p: p.pdp_j).budget_bytes
+    table = fmt_table(["kernel", "LMM", "latency (s)", "power (W)",
+                       "PDP (J)", "EXEC share"], out,
+                      "Fig 6 — latency & PDP vs LMM size")
+
+    # TPU VMEM-budget analogue: block shapes chosen under the budget
+    vm_rows = []
+    for budget_kb in (128, 512, 2048, 8192):
+        b = select_blocks(1024, 8192, 8192, budget_kb * 1024)
+        vm_rows.append([f"{budget_kb}KB", f"({b.bm},{b.bn},{b.bk})",
+                        f"{b.vmem_bytes // 1024}KB",
+                        f"{2 * b.bm * b.bn * b.bk / (b.vmem_bytes):.1f}"])
+    vm_table = fmt_table(
+        ["VMEM budget", "block (bm,bn,bk)", "used", "FLOPs/byte"],
+        vm_rows, "TPU binding — Pallas block shapes under a VMEM budget")
+
+    checks = {
+        "PDP min at 32KB (fp16)": mins["fp16"] == 32 * 1024,
+        "PDP min at 32KB (q8_0)": mins["q8_0"] == 32 * 1024,
+    }
+    return table + "\n" + vm_table, checks
+
+
+if __name__ == "__main__":
+    t, c = run()
+    print(t)
+    print(c)

@@ -1,0 +1,41 @@
+"""Fig 7: EXEC / LOAD+DRAIN / CONF execution-time breakdown on the
+calibrated accelerator model; checks the compute-bound claim (EXEC 60.89%
+FP16, 74.70% Q8_0 — the Q8 row is a *prediction*, see energy.py)."""
+
+from benchmarks.common import fmt_table, workloads
+from repro import hw
+from repro.core.energy import calibrate_imax
+from repro.core.offload import execution_breakdown
+
+
+def run():
+    w16, w8 = workloads()
+    calib = calibrate_imax(w16, w8)
+    rows = []
+    shares = {}
+    for kern, work in (("fp16", w16), ("q8_0", w8)):
+        bd = execution_breakdown(work, calib.model, 32 * 1024)
+        shares[kern] = bd.exec_share
+        rows.append([kern, f"{bd.exec_s:.2f}", f"{bd.load_s:.2f}",
+                     f"{bd.conf_s:.2f}", f"{bd.host_s:.2f}",
+                     f"{bd.exec_share:.2%}",
+                     f"{hw.PAPER_EXEC_SHARE[kern]:.2%}"])
+    table = fmt_table(
+        ["kernel", "EXEC (s)", "LOAD (s)", "CONF (s)", "host (s)",
+         "EXEC share (ours)", "(paper)"],
+        rows, "Fig 7 — execution-time breakdown (32 KB LMM)")
+    checks = {
+        "fp16 EXEC share ~60.9% (fit)":
+            abs(shares["fp16"] - hw.PAPER_EXEC_SHARE["fp16"]) < 0.02,
+        "q8 EXEC share ~74.7% (prediction within 10pp)":
+            abs(shares["q8_0"] - hw.PAPER_EXEC_SHARE["q8_0"]) < 0.10,
+        "q8 more compute-bound than fp16":
+            shares["q8_0"] > shares["fp16"],
+    }
+    return table, checks
+
+
+if __name__ == "__main__":
+    t, c = run()
+    print(t)
+    print(c)

@@ -1,0 +1,50 @@
+"""Benchmark driver: one module per paper table/figure + the roofline
+table. ``python -m benchmarks.run`` prints every table and a check
+summary; non-zero exit if a reproduction check fails.
+"""
+
+import importlib
+import sys
+import traceback
+
+MODULES = [
+    "benchmarks.table1_coverage",
+    "benchmarks.table2_power",
+    "benchmarks.table4_scaling",
+    "benchmarks.secIIIB_burst_dse",
+    "benchmarks.fig4_fig5_platforms",
+    "benchmarks.fig6_lmm_sweep",
+    "benchmarks.fig7_breakdown",
+    "benchmarks.roofline_table",
+]
+
+
+def main():
+    failures = []
+    for name in MODULES:
+        try:
+            mod = importlib.import_module(name)
+            table, checks = mod.run()
+            print(table)
+            print("\nchecks:")
+            for k, v in checks.items():
+                if isinstance(v, bool):
+                    print(f"  [{'PASS' if v else 'FAIL'}] {k}")
+                    if not v:
+                        failures.append(f"{name}: {k}")
+                else:
+                    print(f"  [info] {k}: {v}")
+        except Exception:
+            traceback.print_exc()
+            failures.append(f"{name}: exception")
+        print()
+    if failures:
+        print(f"{len(failures)} BENCHMARK CHECK FAILURES:")
+        for f in failures:
+            print("  ", f)
+        sys.exit(1)
+    print("all benchmark checks passed")
+
+
+if __name__ == "__main__":
+    main()

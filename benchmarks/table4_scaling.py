@@ -1,0 +1,71 @@
+"""Table IV + Sec V-C: scaling to base/small — coverage and dot-op counts.
+
+The paper's scalability claim: a modest LMM bump (32->64 KB) recovers
+>94 % coverage for base/small; dot-product counts grow 477k -> 645k ->
+1.92M (tiny -> base -> small).
+"""
+
+from benchmarks.common import fmt_table, pct
+from repro import hw
+from repro.core.footprint import coverage_cdf
+from repro.core.workload import (WHISPER_TINY, WHISPER_BASE, WHISPER_SMALL,
+                                 total_calls, whisper_workload)
+
+
+def run():
+    rows = []
+    counts = {}
+    for dims, paper_key in ((WHISPER_TINY, "tiny"), (WHISPER_BASE, "base"),
+                            (WHISPER_SMALL, "small")):
+        work = whisper_workload(dims)
+        cov = {r.limit_bytes // 1024: r.coverage_pct
+               for r in coverage_cdf(work, "optimized")}
+        counts[paper_key] = total_calls(work)
+        paper = hw.PAPER_TABLE4[paper_key]
+        rows.append([paper_key] +
+                    [f"{pct(cov[k])} / {paper[k]:.2f}%"
+                     for k in (16, 32, 64, 128, 256)])
+    table = fmt_table(
+        ["model", "16KB ours/paper", "32KB", "64KB", "128KB", "256KB"],
+        rows, "Table IV — optimized coverage by LMM (tiny/base/small)")
+
+    dot_rows = [[k, f"{counts[k]:,}", f"{hw.PAPER_DOT_COUNTS[k]:,}",
+                 f"{counts[k] / counts['tiny']:.2f}x",
+                 f"{hw.PAPER_DOT_COUNTS[k] / hw.PAPER_DOT_COUNTS['tiny']:.2f}x"]
+                for k in ("tiny", "base", "small")]
+    dot_table = fmt_table(["model", "kernel calls (ours)", "paper dot-ops",
+                           "scaling (ours)", "scaling (paper)"], dot_rows,
+                          "Sec V-C — dot-product workload scaling per run")
+
+    cov = {}
+    for dims, key in ((WHISPER_TINY, "tiny"), (WHISPER_BASE, "base"),
+                      (WHISPER_SMALL, "small")):
+        cov[key] = {r.limit_bytes // 1024: r.coverage_pct
+                    for r in coverage_cdf(whisper_workload(dims),
+                                          "optimized")}
+    # Paper Table IV signature (exact call-weighting differs from
+    # whisper.cpp's internal counter; the *structure* is the claim):
+    checks = {
+        "tiny jumps 16->32KB (d_ff=1536 fits at 32)":
+            cov["tiny"][32] - cov["tiny"][16] > 3.0,
+        "base flat 16->32KB (d_ff=2048 doesn't fit)":
+            cov["base"][32] - cov["base"][16] < 2.0,
+        "small flat 16->32KB (d_ff=3072 doesn't fit)":
+            cov["small"][32] - cov["small"][16] < 2.0,
+        "base 64KB recovers (>94% like paper)":
+            cov["base"][64] - cov["base"][32] > 3.0 and cov["base"][64] > 94,
+        "small 64KB recovers": cov["small"][64] > 94,
+        "counts ordered tiny<base<small":
+            counts["tiny"] < counts["base"] < counts["small"],
+        "count scaling small/tiny in paper band (~4x)":
+            2.5 < counts["small"] / counts["tiny"] < 6.5,
+        "note": ("our counter = per-B-row kernel invocations; whisper.cpp's"
+                 " printed totals include beam/windowing internals"),
+    }
+    return table + "\n" + dot_table, checks
+
+
+if __name__ == "__main__":
+    t, c = run()
+    print(t)
+    print(c)

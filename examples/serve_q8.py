@@ -1,0 +1,85 @@
+"""Serving scenario: continuous batching with Q8_0-quantized weights —
+the paper's quantized-inference variant behind a production scheduler.
+
+Compares BF16 vs Q8_0 serving of the same model: identical scheduler
+behaviour, ~1.9x smaller resident weights (the paper's LOAD saving),
+and reports occupancy / TTFT / tok/s.
+
+Run:  PYTHONPATH=src python examples/serve_q8.py
+"""
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.core.quantize import Q8Tensor, quantize_tree
+from repro.models.model import build
+from repro.serving.engine import Request, ServeEngine
+from repro.serving.scheduler import BatchScheduler
+
+
+def weight_bytes(params):
+    total = 0
+    for leaf in jax.tree.leaves(params):
+        if isinstance(leaf, (jnp.ndarray,)) or hasattr(leaf, "nbytes"):
+            total += leaf.nbytes
+    return total
+
+
+def serve(params, model, vocab, tag):
+    engine = ServeEngine(model, params, n_slots=4, max_len=128)
+    sched = BatchScheduler(engine)
+    rng = np.random.default_rng(0)
+    for uid in range(12):
+        n = int(rng.integers(4, 32))
+        sched.submit(Request(uid=uid,
+                             tokens=rng.integers(3, vocab, n).tolist(),
+                             max_new=12, eos_id=-1))
+    t0 = time.monotonic()
+    sched.run_until_drained()
+    dt = time.monotonic() - t0
+    m = sched.metrics
+    toks = sum(len(st.out) for st in sched.results.values())
+    print(f"  [{tag}] {m.completed} reqs, {toks} tokens in {m.ticks} ticks "
+          f"({dt:.1f}s) | occupancy {m.mean_occupancy:.2f} | "
+          f"TTFT {m.mean_ttft:.1f} ticks | {toks / dt:.1f} tok/s")
+    return {uid: st.out for uid, st in sched.results.items()}
+
+
+def main():
+    cfg = reduced(get_config("qwen3-4b"))
+    model = build(cfg)
+    params = model.init_values(jax.random.key(0))
+    q8 = quantize_tree(params)
+
+    bf16_b = weight_bytes(params)
+    q8_b = sum(l.nbytes_packed if isinstance(l, Q8Tensor) else l.nbytes
+               for l in jax.tree.leaves(q8)
+               if hasattr(l, "nbytes") or isinstance(l, Q8Tensor))
+    # Q8Tensor flattens to (q, scale) leaves; recompute properly:
+    q8_b = 0
+    for leaf in jax.tree.leaves(q8):
+        q8_b += leaf.nbytes
+    print(f"weights: f32 {bf16_b / 1e6:.1f} MB -> Q8_0 {q8_b / 1e6:.1f} MB "
+          f"({bf16_b / q8_b:.2f}x smaller resident set)")
+
+    print("serving BF16/F32 weights:")
+    out_fp = serve(params, model, cfg.vocab, "f32 ")
+    print("serving Q8_0 weights (paper variant):")
+    out_q8 = serve(q8, model, cfg.vocab, "q8_0")
+
+    agree = sum(a == b for a, b in
+                zip(out_fp.values(), out_q8.values()))
+    print(f"greedy outputs identical for {agree}/{len(out_fp)} requests "
+          "(Q8_0 rounding can flip near-ties; that is expected)")
+
+
+if __name__ == "__main__":
+    main()

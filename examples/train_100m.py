@@ -1,0 +1,69 @@
+"""End-to-end driver: train a ~100M-param qwen3-family model for a few
+hundred steps on CPU with the full production stack — synthetic sharded
+data, AdamW + warmup-cosine, fault-tolerant loop, async checkpointing.
+
+Run:  PYTHONPATH=src python examples/train_100m.py [--steps 300]
+(~100M params; a couple of minutes for the default 200 steps on CPU.)
+"""
+
+import argparse
+import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.checkpoint.store import CheckpointManager
+from repro.configs import get_config
+from repro.data.synthetic import SyntheticDataset
+from repro.models.model import build
+from repro.optim.adamw import AdamWConfig
+from repro.train.loop import LoopConfig, TrainLoop
+from repro.train.step import init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt", default="/tmp/ckpt-train100m")
+    args = ap.parse_args()
+
+    # ~100M params: a narrow qwen3 (12L x 512d, ff 2048, 32k vocab)
+    cfg = dataclasses.replace(
+        get_config("qwen3-4b"), n_layers=12, d_model=512, n_heads=8,
+        n_kv_heads=4, d_head=64, d_ff=2048, vocab=32000, remat=False)
+    model = build(cfg)
+    print(f"training {model.n_params() / 1e6:.0f}M-param model "
+          f"({cfg.n_layers}L x {cfg.d_model}d) for {args.steps} steps")
+
+    opt_cfg = AdamWConfig(lr=6e-4, warmup_steps=20, total_steps=args.steps)
+    step_fn = jax.jit(make_train_step(model, opt_cfg), donate_argnums=0)
+    ds = SyntheticDataset(cfg, seq_len=args.seq, global_batch=args.batch,
+                          seed=0, n_shards=2)
+    ckpt = CheckpointManager(args.ckpt, keep=2)
+
+    def on_step(step, loss):
+        if step % 20 == 0 or step in (1, 5, 10):
+            print(f"  step {step:4d}  loss {loss:.4f}", flush=True)
+
+    loop = TrainLoop(step_fn, ds, ckpt,
+                     LoopConfig(total_steps=args.steps, save_every=100,
+                                handle_signals=True),
+                     on_step=on_step)
+    state = init_train_state(model, jax.random.key(0))
+    state, result = loop.run(state)
+
+    import numpy as np
+    first, last = np.mean(result.losses[:10]), np.mean(result.losses[-10:])
+    print(f"done: loss {first:.3f} -> {last:.3f} over "
+          f"{result.final_step} steps "
+          f"({'improved' if last < first else 'NO IMPROVEMENT'})")
+    assert last < first, "training must reduce loss"
+
+
+if __name__ == "__main__":
+    main()

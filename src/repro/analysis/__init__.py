@@ -1,0 +1,3 @@
+from repro.analysis.hlo import analyze_hlo, collective_bytes, HloCost
+from repro.analysis.roofline import (Roofline, roofline_from_compiled,
+                                     roofline_from_hlocost, model_flops)

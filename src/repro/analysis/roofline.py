@@ -1,0 +1,140 @@
+"""Three-term roofline from a compiled dry-run artifact.
+
+Per the brief::
+
+    compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory term     = HLO_bytes / (chips × HBM_bw)
+    collective term = collective_bytes / (chips × link_bw)
+
+FLOPs/bytes/collective-bytes come from the while-aware HLO cost model
+(analysis.hlo) over ``compiled.as_text()`` — raw ``cost_analysis()``
+counts scan bodies once, so it is kept only as a reference field
+(``xla_flops`` / ``xla_bytes``). The compiled module is the
+SPMD-partitioned per-device program, so analyzer outputs are per-device;
+globals scale by the chip count, which cancels back out in the terms.
+
+The dominant term is the modeled step-latency bound;
+MODEL_FLOPS/HLO_FLOPs measures how much compiled compute is "useful"
+(catches remat recompute and sharding-induced redundancy).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro import hw
+from repro.analysis.hlo import HloCost, analyze_hlo
+from repro.configs import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float            # global (= per-device × chips)
+    hlo_bytes: float
+    collective_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    collectives: dict            # opcode -> per-device bytes
+    collective_counts: dict
+    xla_flops: float = 0.0       # raw cost_analysis (scan-undercounted)
+    xla_bytes: float = 0.0
+    notes: tuple = ()
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        """Roofline latency bound = max of the three terms (resources
+        overlap on real hardware; the slowest one binds)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-FLOPs time at peak / modeled bound. 1.0 = perfectly
+        compute-bound with zero waste (the score axis)."""
+        if self.bound_s <= 0:
+            return 0.0
+        ideal = self.model_flops / (self.chips * hw.TPU_V5E.peak_flops_bf16)
+        return ideal / self.bound_s
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "compute_ms": 1e3 * self.compute_s,
+            "memory_ms": 1e3 * self.memory_s,
+            "collective_ms": 1e3 * self.collective_s,
+            "dominant": self.dominant,
+            "useful_ratio": self.useful_flops_ratio,
+            "roofline_frac": self.roofline_fraction,
+        }
+
+
+def roofline_from_compiled(compiled, *, arch: str, shape: str, mesh: str,
+                           chips: int, model_flops: float,
+                           chip: hw.ChipSpec = hw.TPU_V5E,
+                           hlo_text: Optional[str] = None) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    hc = analyze_hlo(text)
+    return roofline_from_hlocost(
+        hc, arch=arch, shape=shape, mesh=mesh, chips=chips,
+        model_flops=model_flops, chip=chip,
+        xla_flops=float(cost.get("flops", 0.0)),
+        xla_bytes=float(cost.get("bytes accessed", 0.0)))
+
+
+def roofline_from_hlocost(hc: HloCost, *, arch: str, shape: str, mesh: str,
+                          chips: int, model_flops: float,
+                          chip: hw.ChipSpec = hw.TPU_V5E,
+                          xla_flops: float = 0.0,
+                          xla_bytes: float = 0.0) -> Roofline:
+    notes = []
+    if hc.unknown_trip_loops:
+        notes.append(f"{len(hc.unknown_trip_loops)} loops with unresolved "
+                     "trip counts (counted once)")
+    if hc.unknown_customcalls:
+        notes.append("custom-calls not costed: "
+                     + ",".join(hc.unknown_customcalls))
+    g_flops = hc.flops * chips
+    g_bytes = hc.bytes * chips
+    g_coll = hc.collective_bytes * chips
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh, chips=chips,
+        hlo_flops=g_flops, hlo_bytes=g_bytes, collective_bytes=g_coll,
+        compute_s=g_flops / (chips * chip.peak_flops_bf16),
+        memory_s=g_bytes / (chips * chip.hbm_bandwidth),
+        collective_s=g_coll / (chips * chip.ici_bandwidth),
+        model_flops=model_flops,
+        collectives=dict(hc.collectives),
+        collective_counts=dict(hc.collective_counts),
+        xla_flops=xla_flops, xla_bytes=xla_bytes,
+        notes=tuple(notes),
+    )
+
+
+def model_flops(cfg: ArchConfig, n_params: int, n_active: int,
+                tokens: int, kind: str) -> float:
+    """MODEL_FLOPS = 6·N·D (train) / 2·N·D (fwd-only) with N = active
+    params for MoE. ``tokens`` = global tokens in the step (decode: one
+    per sequence)."""
+    n = n_active if cfg.is_moe else n_params
+    per_tok = 6 * n if kind == "train" else 2 * n
+    return float(per_tok) * tokens

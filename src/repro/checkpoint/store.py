@@ -1,0 +1,184 @@
+"""Atomic, async, *elastic* checkpointing.
+
+Fault-tolerance contract (DESIGN.md §4):
+
+* **atomic** — a step directory is written under ``<root>/tmp-<step>`` and
+  ``os.rename``d into place only after every leaf + manifest is on disk;
+  a crash mid-write never corrupts the latest checkpoint.
+* **async** — ``CheckpointManager.save`` snapshots device arrays to host
+  (blocking only for the copy) and writes in a background thread; training
+  proceeds during serialization. ``wait()`` joins the writer.
+* **elastic** — arrays are stored *unsharded* (global view) with their
+  pytree paths; ``restore_checkpoint`` re-shards onto whatever mesh the
+  restoring job brings (different DP/TP degree, different host count),
+  which is the mesh-reshape restore path the tests exercise.
+* **retention** — keeps the last ``keep`` checkpoints; GC never touches
+  the newest.
+
+Layout::
+
+    <root>/step-000123/
+        manifest.json          # step, leaf index, shapes/dtypes, config note
+        arr-00000.npy ...      # one .npy per leaf (np.save, mmap-able)
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# numpy can't serialize ml_dtypes (bfloat16, fp8) natively: store them as
+# same-width uint views and record the logical dtype in the manifest.
+_EXOTIC = {"bfloat16": (ml_dtypes.bfloat16, np.uint16),
+           "float8_e4m3fn": (ml_dtypes.float8_e4m3fn, np.uint8),
+           "float8_e5m2": (ml_dtypes.float8_e5m2, np.uint8)}
+
+
+def _flatten_with_names(tree: Any) -> list[tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        out.append((name, leaf))
+    return out
+
+
+def _step_dir(root: str, step: int) -> str:
+    return os.path.join(root, f"step-{step:09d}")
+
+
+def latest_step(root: str) -> Optional[int]:
+    if not os.path.isdir(root):
+        return None
+    steps = [int(d.split("-")[1]) for d in os.listdir(root)
+             if d.startswith("step-") and
+             os.path.exists(os.path.join(root, d, "manifest.json"))]
+    return max(steps) if steps else None
+
+
+def save_checkpoint(root: str, step: int, tree: Any,
+                    note: str = "") -> str:
+    """Synchronous atomic save of a (host-resident) pytree."""
+    os.makedirs(root, exist_ok=True)
+    tmp = os.path.join(root, f"tmp-{step:09d}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    leaves = _flatten_with_names(tree)
+    index = []
+    for i, (name, leaf) in enumerate(leaves):
+        arr = np.asarray(leaf)
+        dtype_name = str(arr.dtype)
+        if dtype_name in _EXOTIC:
+            arr = arr.view(_EXOTIC[dtype_name][1])
+        fname = f"arr-{i:05d}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        index.append({"name": name, "file": fname,
+                      "shape": list(arr.shape), "dtype": dtype_name})
+    manifest = {"step": step, "note": note, "leaves": index}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    final = _step_dir(root, step)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)   # atomic publish
+    return final
+
+
+def restore_checkpoint(root: str, like: Any, step: Optional[int] = None,
+                       shardings: Any = None) -> tuple[Any, int]:
+    """Restore into the structure of ``like``. ``shardings`` (same
+    structure, optional) re-shards each global array onto the restoring
+    job's mesh — the elastic path. Returns (tree, step)."""
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {root}")
+    d = _step_dir(root, step)
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_name = {e["name"]: e for e in manifest["leaves"]}
+
+    names = [n for n, _ in _flatten_with_names(like)]
+    like_leaves = jax.tree_util.tree_leaves(like)
+    treedef = jax.tree_util.tree_structure(like)
+    shard_leaves = (jax.tree_util.tree_leaves(shardings)
+                    if shardings is not None else [None] * len(like_leaves))
+    assert len(names) == len(like_leaves)
+
+    out = []
+    for name, proto, shard in zip(names, like_leaves, shard_leaves):
+        entry = by_name.get(name)
+        if entry is None:
+            raise KeyError(f"checkpoint {d} missing leaf {name!r}")
+        arr = np.load(os.path.join(d, entry["file"]))
+        if entry["dtype"] in _EXOTIC:
+            arr = arr.view(_EXOTIC[entry["dtype"]][0])
+        want = tuple(proto.shape) if hasattr(proto, "shape") else None
+        if want is not None and tuple(arr.shape) != want:
+            raise ValueError(
+                f"leaf {name!r}: checkpoint shape {arr.shape} != {want}")
+        if shard is not None:
+            out.append(jax.device_put(arr, shard))
+        else:
+            out.append(jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), step
+
+
+def _gc(root: str, keep: int) -> None:
+    if keep <= 0 or not os.path.isdir(root):
+        return
+    steps = sorted(int(d.split("-")[1]) for d in os.listdir(root)
+                   if d.startswith("step-"))
+    for s in steps[:-keep]:
+        shutil.rmtree(_step_dir(root, s), ignore_errors=True)
+
+
+class CheckpointManager:
+    """Async writer with retention. One in-flight save at a time (a newer
+    save waits for the previous write to land, preserving ordering)."""
+
+    def __init__(self, root: str, keep: int = 3):
+        self.root = root
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, tree: Any, note: str = "") -> None:
+        self.wait()
+        # snapshot to host *before* returning so training can mutate state
+        host = jax.tree.map(lambda x: np.asarray(x), tree)
+
+        def write():
+            try:
+                save_checkpoint(self.root, step, host, note)
+                _gc(self.root, self.keep)
+            except BaseException as e:     # surfaced by wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=write, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def restore(self, like: Any, step: Optional[int] = None,
+                shardings: Any = None) -> tuple[Any, int]:
+        self.wait()
+        return restore_checkpoint(self.root, like, step, shardings)
+
+    def latest_step(self) -> Optional[int]:
+        return latest_step(self.root)

@@ -1,0 +1,136 @@
+"""Architecture configs: the 10 assigned archs + the paper's Whisper models.
+
+Each assigned architecture has its own ``<id>.py`` exporting ``CONFIG``;
+``get_config(name)`` resolves ids with dashes or underscores. ``reduced()``
+produces the CPU-smoke-test shrink of any config (same family/block
+pattern, tiny dims).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                 # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int = 0             # 0 -> d_model // n_heads
+
+    # attention features
+    qk_norm: bool = False
+    attn_softcap: Optional[float] = None    # gemma2: 50.0 on attn logits
+    final_softcap: Optional[float] = None   # gemma2: 30.0 on lm logits
+    sliding_window: Optional[int] = None    # mixtral SWA
+    local_global: bool = False              # gemma2 alternating local/global
+    local_window: int = 4096
+    rope_theta: float = 10000.0
+    attn_bias: bool = False                 # qwen1.5-family qkv bias
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+
+    # SSM / hybrid (zamba2)
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    attn_every: int = 0          # hybrid: one shared attn block every N
+
+    # xLSTM
+    xlstm: bool = False
+    proj_factor: float = 2.0
+
+    # encoder-decoder (whisper)
+    enc_dec: bool = False
+    enc_layers: int = 0
+
+    # VLM (llava)
+    vlm: bool = False
+    n_img_tokens: int = 0
+
+    # general
+    norm_eps: float = 1e-6
+    act: str = "silu"            # silu | gelu
+    tie_embeddings: bool = False
+    remat: bool = True
+    dtype: str = "bf16"          # activation/compute dtype
+    source: str = ""             # provenance note
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def scan_unit(self) -> int:
+        """Layers per scanned segment (heterogeneous stacks scan groups)."""
+        if self.family == "hybrid" and self.attn_every:
+            return self.attn_every
+        if self.xlstm or self.local_global:
+            return 2
+        return 1
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Whether long_500k decode is runnable (state-based memory)."""
+        return self.family in ("ssm", "hybrid")
+
+
+_REGISTRY = [
+    "whisper_base", "qwen3_moe_30b_a3b", "mixtral_8x7b", "gemma2_2b",
+    "qwen3_4b", "deepseek_7b", "codeqwen15_7b", "xlstm_350m", "zamba2_7b",
+    "llava_next_34b", "whisper_tiny_en",
+]
+
+
+def list_archs() -> list[str]:
+    return [n.replace("_", "-") for n in _REGISTRY]
+
+
+def get_config(name: str) -> ArchConfig:
+    mod_name = name.replace("-", "_").replace(".", "")
+    if mod_name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {list_archs()}")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def reduced(cfg: ArchConfig) -> ArchConfig:
+    """Smoke-test shrink: same family and block pattern, tiny dims."""
+    unit = cfg.scan_unit
+    kv = min(cfg.n_kv_heads, 2)
+    heads = max(4, kv * max(1, min(2, cfg.n_heads // max(cfg.n_kv_heads, 1))))
+    heads = (heads // kv) * kv or kv
+    return dataclasses.replace(
+        cfg,
+        n_layers=2 * unit,
+        enc_layers=2 if cfg.enc_dec else 0,
+        d_model=128,
+        n_heads=heads,
+        n_kv_heads=kv,
+        d_head=32,
+        d_ff=0 if cfg.d_ff == 0 else 256,
+        vocab=512,
+        n_experts=min(cfg.n_experts, 4),
+        top_k=min(cfg.top_k, 2),
+        sliding_window=64 if cfg.sliding_window else None,
+        local_window=32 if cfg.local_global else cfg.local_window,
+        ssm_state=min(cfg.ssm_state, 16) if cfg.ssm_state else 0,
+        ssm_head_dim=32 if cfg.ssm_state else cfg.ssm_head_dim,
+        n_img_tokens=16 if cfg.vlm else 0,
+        remat=False,
+    )

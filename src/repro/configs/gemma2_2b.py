@@ -1,0 +1,12 @@
+"""gemma2-2b [arXiv:2408.00118]: alternating local/global attn, softcaps."""
+from repro.configs import ArchConfig
+
+CONFIG = ArchConfig(
+    name="gemma2-2b", family="dense",
+    n_layers=26, d_model=2304, n_heads=8, n_kv_heads=4, d_head=256,
+    d_ff=9216, vocab=256000,
+    local_global=True, local_window=4096,
+    attn_softcap=50.0, final_softcap=30.0,
+    act="gelu", tie_embeddings=True,
+    source="arXiv:2408.00118 (hf tier)",
+)

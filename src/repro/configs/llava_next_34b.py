@@ -1,0 +1,14 @@
+"""llava-next-34b [hf:llava-hf/llava-v1.6]: VLM, anyres tiling stubbed.
+
+Yi-34B-style backbone: 60L, d_model=7168, 56H (kv=8), d_ff=20480. The
+vision frontend is a stub per the brief: input_specs() provides
+precomputed patch embeddings (n_img_tokens=2880 for anyres 2x2+base).
+"""
+from repro.configs import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llava-next-34b", family="vlm", vlm=True, n_img_tokens=2880,
+    n_layers=60, d_model=7168, n_heads=56, n_kv_heads=8, d_head=128,
+    d_ff=20480, vocab=64000, rope_theta=5e6,
+    source="hf:llava-hf/llava-v1.6-mistral-7b-hf (unverified tier)",
+)

@@ -1,0 +1,14 @@
+"""whisper-base [arXiv:2212.04356]: enc-dec, conv frontend stubbed.
+
+6L encoder + 6L decoder, d_model=512, 8H (kv=8), d_ff=2048, vocab=51865.
+GELU MLP, LayerNorm, learned decoder positions (modeled), tied embeddings.
+"""
+from repro.configs import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-base", family="audio",
+    n_layers=6, enc_layers=6, enc_dec=True,
+    d_model=512, n_heads=8, n_kv_heads=8, d_ff=2048, vocab=51865,
+    act="gelu", tie_embeddings=True,
+    source="arXiv:2212.04356 (unverified tier)",
+)

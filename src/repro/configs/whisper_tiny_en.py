@@ -1,0 +1,10 @@
+"""whisper-tiny.en — the paper's own evaluation model (Sec IV-A)."""
+from repro.configs import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-tiny.en", family="audio",
+    n_layers=4, enc_layers=4, enc_dec=True,
+    d_model=384, n_heads=6, n_kv_heads=6, d_ff=1536, vocab=51865,
+    act="gelu", tie_embeddings=True,
+    source="whisper.cpp / arXiv:2212.04356",
+)

@@ -1,0 +1,13 @@
+"""xlstm-350m [arXiv:2405.04517]: alternating mLSTM/sLSTM blocks.
+
+d_ff=0 per the assignment: blocks carry their own 2x up/down projections
+(proj_factor). 4 heads; 24 blocks = 12 (mLSTM, sLSTM) pairs.
+"""
+from repro.configs import ArchConfig
+
+CONFIG = ArchConfig(
+    name="xlstm-350m", family="ssm",
+    n_layers=24, d_model=1024, n_heads=4, n_kv_heads=4, d_ff=0,
+    vocab=50304, xlstm=True, proj_factor=2.0,
+    source="arXiv:2405.04517 (unverified tier)",
+)

@@ -1,0 +1,15 @@
+"""zamba2-7b [arXiv:2411.15242]: Mamba2 backbone + shared attention blocks.
+
+81 layers, ssm_state=64; one attention block every 6 blocks. The model
+scans 13 segments of (5 mamba + 1 attn) plus a tail scan of 3 mamba-only
+blocks, preserving exactly 81 layers.
+"""
+from repro.configs import ArchConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-7b", family="hybrid",
+    n_layers=81, d_model=3584, n_heads=32, n_kv_heads=32, d_ff=14336,
+    vocab=32000, ssm_state=64, ssm_conv=4, ssm_head_dim=64, ssm_expand=2,
+    attn_every=6,
+    source="arXiv:2411.15242 (unverified tier)",
+)

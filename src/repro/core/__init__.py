@@ -1,0 +1,29 @@
+"""Core library: the paper's contribution as reusable components.
+
+C1 quantized kernels      -> repro.core.quantize (+ repro.kernels.*)
+C2 mixed execution        -> repro.core.burst
+C3 packing / footprints   -> repro.core.footprint, repro.core.quantize
+C4 LMM/VMEM sizing DSE    -> repro.core.footprint, repro.core.energy
+C5 energy methodology     -> repro.core.energy, repro.core.offload
+workload extraction       -> repro.core.workload
+"""
+
+from repro.core.burst import (BurstSplit, burst_cost, offload_rate,
+                              optimal_burst, split_burst)
+from repro.core.footprint import (BlockShape, coverage_cdf, kernel_footprint,
+                                  select_blocks)
+from repro.core.offload import (AccelModel, Breakdown, Plan,
+                                execution_breakdown, plan_offload)
+from repro.core.quantize import (QBLOCK, Q8Tensor, dequantize_q8_0,
+                                 pad_to_block, quantize_q8_0, quantize_tree)
+from repro.core.workload import (KernelSpec, WhisperDims, k_length_histogram,
+                                 lm_workload, whisper_workload)
+
+__all__ = [
+    "AccelModel", "BlockShape", "Breakdown", "BurstSplit", "KernelSpec",
+    "Plan", "QBLOCK", "Q8Tensor", "WhisperDims", "burst_cost",
+    "coverage_cdf", "dequantize_q8_0", "execution_breakdown",
+    "k_length_histogram", "kernel_footprint", "lm_workload", "offload_rate",
+    "optimal_burst", "pad_to_block", "plan_offload", "quantize_q8_0",
+    "quantize_tree", "select_blocks", "split_burst", "whisper_workload",
+]

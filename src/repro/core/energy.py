@@ -1,0 +1,208 @@
+"""Energy model: power, PDP, calibration, LMM/VMEM sweeps (paper C5).
+
+Reproduces the paper's evaluation methodology:
+
+* ``imax_power`` / ``vmem_static_power`` — Table II power-vs-LMM curves.
+* ``calibrate_imax`` — closed-form fit of the 4-parameter AccelModel to the
+  paper's published observables (FP16/Q8_0 E2E latency 13.5 s / 11.1 s,
+  EXEC shares 60.89 % / 74.70 %, host-only latency 24.4 s / 19.6 s). The
+  paper's numbers over-determine the model; the residual mismatch is
+  reported by the benchmark as a reproduction check.
+* ``pdp`` and ``lmm_sweep`` — Figs 4/5/6: latency & PDP vs LMM size, with
+  the PDP minimum expected at 32 KB.
+
+The same machinery runs against TPU v5e constants (uncalibrated, honest
+roofline) to place a TPU projection on the paper's axes and to drive the
+VMEM-block-budget sweep of the Pallas kernels.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from repro import hw
+from repro.core.burst import split_burst
+from repro.core.offload import AccelModel, Breakdown, execution_breakdown, staged_bytes, plan_offload
+from repro.core.workload import KernelSpec, total_flops
+
+
+def interp_power(table: dict[int, float], size_bytes: int) -> float:
+    """Log-linear interpolation of a power-vs-size table (Table II)."""
+    pts = sorted(table.items())
+    if size_bytes <= pts[0][0]:
+        return pts[0][1]
+    if size_bytes >= pts[-1][0]:
+        return pts[-1][1]
+    for (s0, p0), (s1, p1) in zip(pts, pts[1:]):
+        if s0 <= size_bytes <= s1:
+            t = (size_bytes - s0) / (s1 - s0)
+            return p0 + t * (p1 - p0)
+    raise AssertionError
+
+
+def imax_power(lmm_bytes: int, kernel: str = "fp16", lanes: int = 1) -> float:
+    table = hw.IMAX_POWER_FP16_W if kernel == "fp16" else hw.IMAX_POWER_Q8_W
+    return lanes * interp_power(table, lmm_bytes)
+
+
+def pdp(latency_s: float, power_w: float) -> float:
+    """Power-Delay Product (paper Eq. 1), in joules."""
+    return latency_s * power_w
+
+
+def phase_pdp(breakdown, accel_power_w: float,
+              host_power_w: float = hw.PLATFORM_POWER_W["cortex-a72"]) -> float:
+    """Phase-wise energy: the accelerator draws power only while a kernel
+    is resident (EXEC+LOAD+CONF); the host CPU draws power for the whole
+    run (orchestration + residual + fallback). This is the accounting
+    that reproduces the paper's published Fig-5 Q8_0 PDP (12.6 J), which
+    nominal-power x latency (Eq 1: 11.1 x 1.32 = 14.7 J) does not — their
+    §IV-A notes power was measured per phase."""
+    return (accel_power_w * breakdown.accel_s
+            + host_power_w * breakdown.total_s)
+
+
+# ----------------------------------------------------------------------------
+# Calibration to the paper's observables
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Calibration:
+    model: AccelModel
+    residuals: dict[str, float]   # relative errors vs paper observables
+
+
+def calibrate_imax(work_fp16: Sequence[KernelSpec],
+                   work_q8: Sequence[KernelSpec],
+                   budget_bytes: int = 32 * 1024,
+                   conf_share: float = 0.04) -> Calibration:
+    """Closed-form fit of (flops_rate, mem_bw, conf_time, host_rate) to the
+    paper's *FP16* observables only; the Q8_0 observables are then
+    **predictions** and their residuals are the cross-validation of the
+    model (reported by benchmarks/fig7_breakdown.py).
+
+    FP16 observables used: E2E latency 13.5 s, EXEC share 60.89 %, host-only
+    latency 24.4 s. ``conf_share`` apportions the paper's unlabeled
+    CONF/REGV/RANGE/REFILL sliver of Fig 7 (~4 % of accel time).
+    """
+    t16 = hw.PAPER_LATENCY_S[("imax3-28nm", "fp16")]
+    t8 = hw.PAPER_LATENCY_S[("imax3-28nm", "q8_0")]
+    s16, s8 = hw.PAPER_EXEC_SHARE["fp16"], hw.PAPER_EXEC_SHARE["q8_0"]
+    host16 = hw.PAPER_LATENCY_S[("cortex-a72", "fp16")]
+    host8 = hw.PAPER_LATENCY_S[("cortex-a72", "q8_0")]
+
+    f_total = total_flops(list(work_fp16))
+    host_rate16 = f_total / host16
+    host_rate8 = total_flops(list(work_q8)) / host8
+
+    plan16 = plan_offload(work_fp16, budget_bytes)
+    b16 = sum(staged_bytes(s) * s.calls for s in plan16.accel)
+    calls16 = sum(s.calls for s in plan16.accel)
+    f_off16 = sum(s.flops * split_burst(s.k).offload_fraction
+                  for s in plan16.accel)
+    f_host16 = f_total - f_off16
+    host_s16 = f_host16 / host_rate16
+
+    accel16 = max(t16 - host_s16, 1e-9)        # EXEC + LOAD + CONF
+    exec_s = accel16 * s16
+    conf_total = accel16 * conf_share
+    load16 = accel16 - exec_s - conf_total
+
+    model = AccelModel(
+        name="imax3-28nm(calibrated)",
+        flops_rate=f_off16 / exec_s,
+        mem_bw=b16 / load16,
+        conf_time=conf_total / max(calls16, 1),
+        host_flops_rate=(host_rate16 + host_rate8) / 2,
+    )
+    # fp16 residuals close by construction; q8 rows are predictions.
+    bd16 = execution_breakdown(work_fp16, model, budget_bytes)
+    bd8 = execution_breakdown(work_q8, model, budget_bytes)
+    residuals = {
+        "latency_fp16(fit)": bd16.total_s / t16 - 1.0,
+        "exec_share_fp16(fit)": bd16.exec_share / s16 - 1.0,
+        "latency_q8(pred)": bd8.total_s / t8 - 1.0,
+        "exec_share_q8(pred)": bd8.exec_share / s8 - 1.0,
+    }
+    return Calibration(model=model, residuals=residuals)
+
+
+# ----------------------------------------------------------------------------
+# LMM / VMEM-budget sweep (Fig 6)
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SweepPoint:
+    budget_bytes: int
+    latency_s: float
+    power_w: float
+    pdp_j: float
+    breakdown: Breakdown
+
+
+def lmm_sweep(work: Sequence[KernelSpec], model: AccelModel, kernel: str,
+              budgets: Sequence[int] = tuple(k * 1024 for k in (16, 32, 64, 128)),
+              lanes: int = 1) -> list[SweepPoint]:
+    """Latency/power/PDP vs local-memory budget (Fig 6). Larger budgets
+    admit more kernels (less host fallback) but cost static power
+    (Table II); the paper's minimum is at 32 KB."""
+    out = []
+    for budget in budgets:
+        bd = execution_breakdown(work, model, budget)
+        p = imax_power(budget, kernel, lanes)
+        out.append(SweepPoint(budget, bd.total_s, p, pdp(bd.total_s, p), bd))
+    return out
+
+
+# ----------------------------------------------------------------------------
+# TPU projection (beyond-paper platform row; honest v5e constants)
+# ----------------------------------------------------------------------------
+
+def tpu_accel_model(chip: hw.ChipSpec = hw.TPU_V5E,
+                    mxu_efficiency: float = 0.5,
+                    conf_time: float = 2e-6) -> AccelModel:
+    """v5e as the 'accelerator': matvec-dominated decode is HBM-bound, so
+    mem_bw is the binding constant; mxu_efficiency derates peak for the
+    small-GEMM regime. The 'host' fallback is the same chip's VPU at a
+    scalar-ish rate (kernels that skip the MXU path)."""
+    return AccelModel(
+        name=chip.name,
+        flops_rate=chip.peak_flops_bf16 * mxu_efficiency,
+        mem_bw=chip.hbm_bandwidth,
+        conf_time=conf_time,
+        host_flops_rate=2e12,   # VPU-path effective rate
+    )
+
+
+def platform_pdp_table(work_fp16, work_q8, calib: Calibration,
+                       budget_bytes: int = 32 * 1024) -> list[dict]:
+    """Fig 4 + Fig 5 in one table: paper platforms (paper numbers) + our
+    calibrated IMAX model + the TPU v5e projection."""
+    rows = []
+    for (dev, kern), lat in sorted(hw.PAPER_LATENCY_S.items()):
+        if dev == "imax3-28nm":
+            power = imax_power(budget_bytes, "fp16" if kern == "fp16" else "q8_0")
+        else:
+            power = hw.PLATFORM_POWER_W.get(dev, float("nan"))
+        rows.append(dict(device=dev, kernel=kern, latency_s=lat,
+                         power_w=power, pdp_j=pdp(lat, power),
+                         source="paper"))
+    for kern, work in (("fp16", work_fp16), ("q8_0", work_q8)):
+        bd = execution_breakdown(work, calib.model, budget_bytes)
+        power = imax_power(budget_bytes, kern)
+        rows.append(dict(device="imax3-28nm(model)", kernel=kern,
+                         latency_s=bd.total_s, power_w=power,
+                         pdp_j=pdp(bd.total_s, power),
+                         pdp_phase_j=phase_pdp(bd, power), source="model"))
+    tpu = tpu_accel_model()
+    for kern, work in (("fp16", work_fp16), ("q8_0", work_q8)):
+        bd = execution_breakdown(work, tpu, hw.TPU_V5E.vmem_bytes)
+        # utilization-scaled power
+        util = bd.exec_s / max(bd.total_s, 1e-12)
+        power = hw.TPU_V5E.idle_power_w + util * (
+            hw.TPU_V5E.power_w - hw.TPU_V5E.idle_power_w)
+        rows.append(dict(device="tpu-v5e(projection)", kernel=kern,
+                         latency_s=bd.total_s, power_w=power,
+                         pdp_j=pdp(bd.total_s, power), source="model"))
+    return rows

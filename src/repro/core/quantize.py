@@ -1,0 +1,153 @@
+"""Q8_0 blockwise quantization (paper contribution C1/C3).
+
+The paper reuses ggml's Q8_0 format: the innermost dimension is split into
+blocks of 32 elements; each block stores 32 int8 values plus one fp16 scale
+``d = max(|x|)/127`` (1.0625 bytes/element vs 2 for fp16).
+
+On TPU we keep the exact format but store the int8 plane and the scale plane
+as two dense arrays (the paper's "padding removal": no interleaved headers,
+no row-alignment padding), which is what the Pallas kernel consumes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+QBLOCK = 32  # ggml Q8_0 block size (elements)
+Q8_BYTES_PER_BLOCK = QBLOCK + 2  # 32 int8 + fp16 scale
+Q8_BYTES_PER_ELEM = Q8_BYTES_PER_BLOCK / QBLOCK  # 1.0625
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Q8Tensor:
+    """A Q8_0-quantized tensor. ``q``: int8 of the original shape.
+    ``scale``: float16/float32, original shape with last dim // QBLOCK."""
+
+    q: jax.Array
+    scale: jax.Array
+
+    def tree_flatten(self):
+        return (self.q, self.scale), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+    @property
+    def nbytes_packed(self) -> int:
+        """Dense-packed storage bytes (optimized policy, C3)."""
+        return int(self.q.size) + 2 * int(self.scale.size)
+
+
+def _check_last_dim(k: int) -> None:
+    if k % QBLOCK != 0:
+        raise ValueError(
+            f"Q8_0 requires the last dim ({k}) to be a multiple of {QBLOCK}; "
+            "pad with pad_to_block() first."
+        )
+
+
+def pad_to_block(x: jax.Array, block: int = QBLOCK) -> jax.Array:
+    """Zero-pad the last dim up to a multiple of ``block``."""
+    k = x.shape[-1]
+    rem = (-k) % block
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * (x.ndim - 1) + [(0, rem)]
+    return jnp.pad(x, pad)
+
+
+def quantize_q8_0(x: jax.Array, scale_dtype=jnp.float16,
+                  axis: int = -1) -> Q8Tensor:
+    """Quantize to Q8_0 with 32-element blocks along ``axis`` (the
+    contraction dim for weights consumed by the Pallas kernel, which stores
+    W as (K, N) and quantizes along K). ``axis`` dim must be a multiple of
+    QBLOCK."""
+    axis = axis % x.ndim
+    xm = jnp.moveaxis(x, axis, -1)
+    _check_last_dim(xm.shape[-1])
+    blocks = xm.astype(jnp.float32).reshape(*xm.shape[:-1], -1, QBLOCK)
+    amax = jnp.max(jnp.abs(blocks), axis=-1)
+    d = (amax / 127.0).astype(scale_dtype)
+    # ggml: inverse scale with zero guard.
+    inv = jnp.where(d > 0, 1.0 / d.astype(jnp.float32), 0.0)
+    q = jnp.clip(jnp.round(blocks * inv[..., None]), -127, 127).astype(jnp.int8)
+    q = jnp.moveaxis(q.reshape(xm.shape), -1, axis)
+    scale = jnp.moveaxis(d, -1, axis)
+    return Q8Tensor(q=q, scale=scale)
+
+
+def dequantize_q8_0(t: Q8Tensor, dtype=jnp.float32, axis: int = -1) -> jax.Array:
+    """Exact inverse of the storage transform (not of quantize: lossy)."""
+    axis = axis % t.q.ndim
+    qm = jnp.moveaxis(t.q, axis, -1)
+    sm = jnp.moveaxis(t.scale, axis, -1)
+    q = qm.reshape(*qm.shape[:-1], -1, QBLOCK).astype(jnp.float32)
+    x = q * sm.astype(jnp.float32)[..., None]
+    return jnp.moveaxis(x.reshape(qm.shape), -1, axis).astype(dtype)
+
+
+def quantization_error_bound(t: Q8Tensor) -> jax.Array:
+    """Per-block worst-case absolute error: d/2 (round-to-nearest)."""
+    return t.scale.astype(jnp.float32) / 2.0
+
+
+def as_array(leaf: Any, dtype=jnp.bfloat16, axis: int = -2) -> jax.Array:
+    """Dequantize a Q8Tensor (blocked along ``axis``, the quantize_tree
+    convention) or cast a plain array — for params consumed outside the
+    Q8-aware ``mm`` path (positional tables, frontends)."""
+    if isinstance(leaf, Q8Tensor):
+        return dequantize_q8_0(leaf, dtype, axis=axis)
+    return leaf.astype(dtype)
+
+
+def quantize_tree(params: Any, predicate=None) -> Any:
+    """Quantize every float leaf (matching ``predicate(path, leaf)``) of a
+    param pytree to Q8Tensor; other leaves pass through. Used to build the
+    Q8_0 serving variant of any architecture (paper Sec III-A)."""
+
+    def _q(path, leaf):
+        if not isinstance(leaf, jax.Array) and not hasattr(leaf, "dtype"):
+            return leaf
+        if leaf.ndim < 2 or leaf.dtype not in (jnp.float32, jnp.bfloat16, jnp.float16):
+            return leaf
+        # weights are stored (…, K, N); quantize along the contraction dim
+        if leaf.shape[-2] % QBLOCK != 0:
+            return leaf
+        if predicate is not None and not predicate(path, leaf):
+            return leaf
+        return quantize_q8_0(leaf, axis=-2)
+
+    return jax.tree_util.tree_map_with_path(_q, params)
+
+
+# ----------------------------------------------------------------------------
+# Storage accounting (paper C3: padding removal)
+# ----------------------------------------------------------------------------
+
+def stored_bytes(shape, dtype: str, policy: str = "optimized",
+                 align_bytes: int = 32) -> int:
+    """Bytes occupied by a tensor under a packing policy.
+
+    ``baseline`` models whisper.cpp's row layout where each row (last dim) is
+    padded up to ``align_bytes`` alignment; ``optimized`` is the paper's dense
+    packing (C3).
+    """
+    elem = {"f32": 4.0, "f16": 2.0, "bf16": 2.0, "q8_0": Q8_BYTES_PER_ELEM}[dtype]
+    *lead, k = shape
+    rows = 1
+    for d in lead:
+        rows *= d
+    row_bytes = k * elem
+    if policy == "baseline":
+        row_bytes = -(-row_bytes // align_bytes) * align_bytes
+    return int(rows * row_bytes)

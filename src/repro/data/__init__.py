@@ -1,0 +1,1 @@
+from repro.data.synthetic import SyntheticDataset, batch_for_step

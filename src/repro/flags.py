@@ -1,0 +1,18 @@
+"""Paper-faithful-baseline switch for §Perf A/B measurements.
+
+``REPRO_BASELINE=1`` re-enables every pre-hillclimb code path so the
+baseline can be re-measured under the *final* analyzer convention
+(before/after numbers must share one accounting):
+
+* attention: f32 HBM upcasts of Q/K/V/P before the dots (vs C1-inline
+  bf16-into-MXU);
+* decode: ys-stacked cache re-materialization (vs stacked-carry in-place
+  token writes);
+* sharding: seq-sharded serve KV when kv%tp != 0 (vs head_dim-sharded);
+* MoE: global-token dispatch (vs GShard grouped);
+* sLSTM: gate projections inside the timestep scan (vs hoisted Wx).
+"""
+
+import os
+
+BASELINE = os.environ.get("REPRO_BASELINE", "") == "1"

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+Each kernel ships as <name>/<name>.py (pl.pallas_call + BlockSpec),
+ops.py (jit'd public wrapper incl. the C2 mixed-execution split), and
+ref.py (pure-jnp oracle used by the allclose test sweeps).
+"""
+from repro.kernels.q8_matmul.ops import q8_matmul, q8_matmul_xla
+from repro.kernels.fp16_matmul.ops import fp16_matmul, offload_info
+from repro.kernels.flash_attention.ops import flash_attention

@@ -1,0 +1,44 @@
+"""Public wrapper: GQA-aware flash attention over (B, S, H, D) layouts."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+
+
+def _choose_block(s: int, pref: int = 128) -> int:
+    b = min(pref, s)
+    while s % b != 0:
+        b //= 2
+    return max(b, 1)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True,
+                    window: int | None = None,
+                    softcap: float | None = None,
+                    interpret: bool = True) -> jax.Array:
+    """q: (B, S, H, D); k, v: (B, S, Hkv, D) with H % Hkv == 0 (GQA).
+    Returns (B, S, H, D)."""
+    b, s, h, d = q.shape
+    hkv = k.shape[2]
+    assert h % hkv == 0, (h, hkv)
+    rep = h // hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    bq = _choose_block(s)
+    bk = _choose_block(s)
+    out = flash_attention_pallas(qf, kf, vf, causal=causal, window=window,
+                                 softcap=softcap, bq=bq, bk=bk,
+                                 interpret=interpret)
+    return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,1 @@
+from repro.kernels.fp16_matmul.ops import *  # noqa

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle: dense decode attention over a dequantized Q8 cache."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import QBLOCK
+
+
+def dequant(q8: jax.Array, scale: jax.Array) -> jax.Array:
+    """q8: (..., S, D) int8; scale: (..., S, D//QBLOCK) -> f32."""
+    return (q8.astype(jnp.float32)
+            * jnp.repeat(scale.astype(jnp.float32), QBLOCK, axis=-1))
+
+
+def q8_decode_attention_ref(q, kq, ks, vq, vs, length) -> jax.Array:
+    """q: (BH, 1, D); int8 caches + scales; attend [0, length)."""
+    k = dequant(kq, ks)
+    v = dequant(vq, vs)
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k) * (d ** -0.5)
+    mask = jnp.arange(k.shape[1]) < length
+    s = jnp.where(mask[None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", w, v).astype(q.dtype)

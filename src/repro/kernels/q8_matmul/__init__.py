@@ -1,0 +1,1 @@
+from repro.kernels.q8_matmul.ops import *  # noqa

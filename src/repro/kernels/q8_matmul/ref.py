@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the Q8_0 GEMM kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import QBLOCK
+
+
+def dequant_ref(wq: jax.Array, ws: jax.Array) -> jax.Array:
+    """wq: (K, N) int8, ws: (K//QBLOCK, N) -> (K, N) f32."""
+    k, n = wq.shape
+    scales = jnp.repeat(ws.astype(jnp.float32), QBLOCK, axis=0)
+    return wq.astype(jnp.float32) * scales
+
+
+def q8_matmul_ref(x: jax.Array, wq: jax.Array, ws: jax.Array,
+                  out_dtype=jnp.float32) -> jax.Array:
+    """y = x @ dequant(wq, ws), f32 accumulation."""
+    w = dequant_ref(wq, ws)
+    return jnp.dot(x.astype(jnp.float32), w,
+                   preferred_element_type=jnp.float32).astype(out_dtype)

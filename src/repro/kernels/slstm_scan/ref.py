@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the sLSTM time-chunk kernel: plain lax.scan over
+timesteps with the model's stabilized gate math (xlstm._slstm_step)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def slstm_scan_ref(wx: jax.Array, r_all: jax.Array, state0: jax.Array):
+    """wx: (S, 4, B, H, hd); r_all: (4, H, hd, hd); state0: (4, B, H, hd).
+    Returns (hs: (S, B, H, hd) f32, state_final: (4, B, H, hd))."""
+    def step(st, wx_t):
+        c, n, h, m = st[0], st[1], st[2], st[3]
+        pre = wx_t + jnp.einsum("bhe,ghef->gbhf", h,
+                                r_all.astype(jnp.float32))
+        i_r, f_r, z_r, o_r = pre[0], pre[1], pre[2], pre[3]
+        logf = jax.nn.log_sigmoid(f_r)
+        m_new = jnp.maximum(logf + m, i_r)
+        i_g = jnp.exp(i_r - m_new)
+        f_g = jnp.exp(logf + m - m_new)
+        c_new = f_g * c + i_g * jnp.tanh(z_r)
+        n_new = f_g * n + i_g
+        h_new = jax.nn.sigmoid(o_r) * c_new / jnp.maximum(n_new, 1e-6)
+        st = jnp.stack([c_new, n_new, h_new, m_new])
+        return st, h_new
+
+    state, hs = jax.lax.scan(step, state0.astype(jnp.float32),
+                             wx.astype(jnp.float32))
+    return hs, state

@@ -1,0 +1,35 @@
+"""Production mesh construction (brief-mandated shapes).
+
+``make_production_mesh`` is a FUNCTION so importing this module never
+touches jax device state; callers (dryrun.py) set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import to get placeholder devices.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(data: int = 2, model: int = 2, pod: int = 0):
+    """Small mesh for CPU subprocess tests (forced host devices)."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_chips(mesh) -> int:
+    n = 1
+    for v in mesh.shape.values():
+        n *= v
+    return n
+
+
+def mesh_label(mesh) -> str:
+    return "x".join(str(v) for v in mesh.shape.values())

@@ -1,0 +1,2 @@
+from repro.models.model import Model, build, input_specs, SHAPES, shape_applicable
+from repro.models.layers import Param, split_params

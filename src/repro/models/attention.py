@@ -1,0 +1,303 @@
+"""Attention block: GQA/SWA/local-global/softcap/qk-norm, three modes.
+
+Train/prefill use a chunked online-softmax scan (the XLA binding of the
+flash_attention Pallas kernel — DESIGN.md §7) so 32k-prefill cells never
+materialize S×S scores. Decode updates a KV cache in place and runs the
+matvec path. Sharding is expressed through logical-axis constraints; the
+head-vs-context-parallel fallback is decided by the rules (sharding.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import flags
+from repro.configs import ArchConfig
+from repro.models.layers import (KeyGen, Param, mm, mm_out, ninit, rmsnorm,
+                                 rope)
+from repro.parallel.sharding import constrain
+
+NEG_INF = -1e30
+DEFAULT_CHUNK = 512
+
+
+def init_attention(keys: KeyGen, cfg: ArchConfig) -> dict:
+    d, h, hk, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": Param(ninit(keys(), (d, h, dh), d), ("param_embed", "heads", "head_dim")),
+        "wk": Param(ninit(keys(), (d, hk, dh), d), ("param_embed", "kv_heads", "head_dim")),
+        "wv": Param(ninit(keys(), (d, hk, dh), d), ("param_embed", "kv_heads", "head_dim")),
+        "wo": Param(ninit(keys(), (h, dh, d), h * dh), ("heads", "head_dim", "param_embed")),
+    }
+    if cfg.attn_bias:
+        p["bq"] = Param(jnp.zeros((h, dh), jnp.float32), ("heads", "head_dim"))
+        p["bk"] = Param(jnp.zeros((hk, dh), jnp.float32), ("kv_heads", "head_dim"))
+        p["bv"] = Param(jnp.zeros((hk, dh), jnp.float32), ("kv_heads", "head_dim"))
+    if cfg.qk_norm:
+        p["q_norm"] = Param(jnp.ones((dh,), jnp.float32), ("head_dim",))
+        p["k_norm"] = Param(jnp.ones((dh,), jnp.float32), ("head_dim",))
+    return p
+
+
+def init_cross_attention(keys: KeyGen, cfg: ArchConfig) -> dict:
+    return init_attention(keys, cfg)
+
+
+def _project_qkv(p: dict, x: jax.Array, cfg: ArchConfig,
+                 x_kv: Optional[jax.Array] = None):
+    x_kv = x if x_kv is None else x_kv
+    q = mm(x, p["wq"])
+    k = mm(x_kv, p["wk"])
+    v = mm(x_kv, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    if "q_norm" in p:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    return q, k, v
+
+
+def _repeat_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    hk = k.shape[2]
+    if hk == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // hk, axis=2)
+
+
+def _window_for(cfg: ArchConfig, kind: str) -> Optional[int]:
+    if kind == "local":
+        return cfg.local_window
+    if cfg.sliding_window is not None and kind != "bidir":
+        return cfg.sliding_window
+    return None
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool, window: Optional[int],
+                      softcap: Optional[float],
+                      q_offset=0,
+                      chunk: int = DEFAULT_CHUNK) -> jax.Array:
+    """Online-softmax over KV chunks. q: (B,Sq,H,D); k,v: (B,Sk,H,D).
+    ``q_offset``: absolute position of q[0] (decode/chunked prefill)."""
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    scale = d ** -0.5
+    # C1-inline: operands stay bf16; the MXU upconverts in-core and
+    # accumulates f32 (no HBM-materialized f32 copies of Q/K/V/P).
+    # (REPRO_BASELINE=1: pre-hillclimb f32-in-HBM upcasts.)
+    cdt = jnp.float32 if flags.BASELINE else jnp.bfloat16
+    qf = q.astype(cdt)
+    chunk = min(chunk, sk)
+    n_chunks = -(-sk // chunk)
+    pad = n_chunks * chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, n_chunks, chunk, h, d)
+    vc = v.reshape(b, n_chunks, chunk, h, d)
+
+    qpos = q_offset + jnp.arange(sq)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kb, vb, ci = xs
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kb.astype(cdt),
+                       preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        kpos = ci * chunk + jnp.arange(chunk)
+        mask = kpos[None, :] < sk  # chunk padding
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= (qpos[:, None] - kpos[None, :]) < window
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(cdt), vb.astype(cdt),
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4),
+         jnp.arange(n_chunks)))
+    l = jnp.where(l == 0.0, 1.0, l)
+    out = (acc / l[..., None]).transpose(0, 2, 1, 3)  # (B,Sq,H,D)
+    return out.astype(q.dtype)
+
+
+def attention(p: dict, x: jax.Array, cfg: ArchConfig, *,
+              kind: str = "global", mode: str = "train",
+              cache: Optional[dict] = None, pos=None,
+              x_kv: Optional[jax.Array] = None,
+              positions: Optional[jax.Array] = None,
+              use_rope: bool = True,
+              layer_idx=None):
+    """Returns (y, new_cache). Modes:
+      train   — full-sequence, no cache
+      prefill — full-sequence, fills and returns cache
+      decode  — x is (B, 1, d); cache holds (k, v) of length max_len;
+                ``pos`` is the current absolute position (scalar int32)
+    ``kind``: global | local | bidir. Cross-attention passes x_kv (encoder
+    states) in prefill and reuses cached cross K/V in decode.
+
+    ``layer_idx`` (decode only): the cache is the whole STACKED
+    (L, B, S, Hkv, D) tree carried through the layer scan; this layer
+    writes its one new token in place at (layer_idx, :, pos) — a
+    token-sized dynamic-update-slice instead of re-materializing the full
+    per-layer cache through the scan's output stacking (§Perf cell C:
+    the baseline rewrote the entire KV cache every decode step).
+    """
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    causal = kind != "bidir" and x_kv is None
+    window = _window_for(cfg, kind)
+    softcap = cfg.attn_softcap
+
+    if mode in ("train", "prefill"):
+        q, k, v = _project_qkv(p, x, cfg, x_kv)
+        if use_rope and x_kv is None:
+            if positions is None:
+                positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+            q = rope(q, positions, cfg.rope_theta)
+            k = rope(k, positions, cfg.rope_theta)
+        q = constrain(q, "batch", "q_seq", "heads", "head_dim")
+        k = constrain(k, "batch", "kv_seq", "kv_heads", "head_dim")
+        v = constrain(v, "batch", "kv_seq", "kv_heads", "head_dim")
+        out = chunked_attention(q, _repeat_kv(k, h), _repeat_kv(v, h),
+                                causal=causal, window=window,
+                                softcap=softcap)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = _write_prefill_cache(cache, k, v)
+        y = mm_out(out, p["wo"])
+        return constrain(y, "batch", "q_seq", "embed"), new_cache
+
+    assert mode == "decode" and cache is not None
+    # ``pos`` may be a scalar (lockstep decode; all the dry-run decode
+    # cells) or a (B,) vector (continuous batching: each serving slot at
+    # its own position — serving/engine.py).
+    pos_v = jnp.asarray(pos, jnp.int32)
+    per_lane = pos_v.ndim == 1
+    pos_b = pos_v if per_lane else jnp.broadcast_to(pos_v, (b,))
+    stacked = layer_idx is not None
+    if x_kv is None:
+        q, k_new, v_new = _project_qkv(p, x, cfg)
+        if use_rope:
+            q = rope(q, pos_b[:, None], cfg.rope_theta)
+            k_new = rope(k_new, pos_b[:, None], cfg.rope_theta)
+        if stacked:
+            # token-sized in-place write into the (L,B,S,Hkv,D) stack
+            def upd5(c, new):
+                if not per_lane:
+                    # one DUS, update (1, B, 1, Hkv, D) — lowers to an
+                    # in-place slab write (no scatter, no transpose)
+                    return jax.lax.dynamic_update_slice(
+                        c, new[None, :].astype(c.dtype),
+                        (layer_idx, 0, pos_v, 0, 0))
+                # continuous batching: per-lane positions -> scatter;
+                # vmap over batch, per-lane target (L, S, Hkv, D)
+                return jax.vmap(
+                    lambda cb, kn, pp: jax.lax.dynamic_update_slice(
+                        cb, kn[None, None].astype(cb.dtype),
+                        (layer_idx, pp, 0, 0)),
+                    in_axes=(1, 0, 0), out_axes=1)(c, new[:, 0], pos_b)
+            k_cache = upd5(cache["k"], k_new)
+            v_cache = upd5(cache["v"], v_new)
+            new_cache = {"k": k_cache, "v": v_cache}
+            k_layer = jax.lax.dynamic_index_in_dim(k_cache, layer_idx, 0,
+                                                   keepdims=False)
+            v_layer = jax.lax.dynamic_index_in_dim(v_cache, layer_idx, 0,
+                                                   keepdims=False)
+            kv_len = cache["k"].shape[2]
+        else:
+            if per_lane:
+                upd = jax.vmap(
+                    lambda c, kn, pp: jax.lax.dynamic_update_slice(
+                        c, kn, (pp, 0, 0)))
+                k_cache = upd(cache["k"], k_new.astype(cache["k"].dtype),
+                              pos_b)
+                v_cache = upd(cache["v"], v_new.astype(cache["v"].dtype),
+                              pos_b)
+            else:
+                k_cache = jax.lax.dynamic_update_slice(
+                    cache["k"], k_new.astype(cache["k"].dtype),
+                    (0, pos_v, 0, 0))
+                v_cache = jax.lax.dynamic_update_slice(
+                    cache["v"], v_new.astype(cache["v"].dtype),
+                    (0, pos_v, 0, 0))
+            new_cache = {"k": constrain(k_cache, "batch", "cache_seq", "kv_heads", "head_dim"),
+                         "v": constrain(v_cache, "batch", "cache_seq", "kv_heads", "head_dim")}
+            k_layer, v_layer = k_cache, v_cache
+            kv_len = cache["k"].shape[1]
+        kpos = jnp.arange(kv_len)
+        mask = kpos[None, :] <= pos_b[:, None]           # (B, K)
+        if window is not None:
+            mask &= (pos_b[:, None] - kpos[None, :]) < window
+    else:  # cross-attention decode: cached encoder K/V, all valid
+        q = mm(x, p["wq"])
+        if "bq" in p:
+            q = q + p["bq"].astype(q.dtype)
+        if "q_norm" in p:
+            q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        new_cache = cache
+        if stacked:   # read-only slice of the stacked cross cache
+            k_layer = jax.lax.dynamic_index_in_dim(cache["k"], layer_idx,
+                                                   0, keepdims=False)
+            v_layer = jax.lax.dynamic_index_in_dim(cache["v"], layer_idx,
+                                                   0, keepdims=False)
+            kv_len = cache["k"].shape[2]
+        else:
+            k_layer, v_layer = cache["k"], cache["v"]
+            kv_len = cache["k"].shape[1]
+        mask = jnp.ones((b, kv_len), bool)
+
+    q = constrain(q, "batch", None, "heads", "head_dim")
+    k = _repeat_kv(k_layer, h)
+    v = _repeat_kv(v_layer, h)
+    scale = cfg.head_dim ** -0.5
+    # C1-inline: the KV cache streams bf16 straight into the MXU with f32
+    # accumulation — the baseline upconverted the whole cache to f32 in
+    # HBM first (the dominant memory bytes of every decode cell).
+    ddt = jnp.float32 if flags.BASELINE else jnp.bfloat16
+    s_ = jnp.einsum("bqhd,bkhd->bhqk", q.astype(ddt), k.astype(ddt),
+                    preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s_ = softcap * jnp.tanh(s_ / softcap)
+    s_ = jnp.where(mask[:, None, None, :], s_, NEG_INF)
+    w = jax.nn.softmax(s_, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w.astype(ddt), v.astype(ddt),
+                     preferred_element_type=jnp.float32)
+    y = mm_out(out.astype(x.dtype), p["wo"])
+    return constrain(y, "batch", None, "embed"), new_cache
+
+
+def _write_prefill_cache(cache: Optional[dict], k: jax.Array, v: jax.Array):
+    """Store prefill K/V (padding up to cache length if one was allocated)."""
+    if cache is None:
+        return {"k": k, "v": v}
+    kv_len = cache["k"].shape[1]
+    s = k.shape[1]
+    if s < kv_len:
+        k = jnp.pad(k, ((0, 0), (0, kv_len - s), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, kv_len - s), (0, 0), (0, 0)))
+    return {"k": k.astype(cache["k"].dtype), "v": v.astype(cache["v"].dtype)}
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int,
+                  dtype=jnp.bfloat16) -> dict:
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}

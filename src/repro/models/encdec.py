@@ -1,0 +1,190 @@
+"""Whisper-style encoder-decoder (the paper's model family).
+
+The conv/mel frontend is a STUB per the brief: ``input_specs()`` provides
+precomputed frame embeddings (B, S_enc, d_model); a tiny learnable
+projection stands in for conv2 so the frontend remains trainable end to
+end. Encoder: sinusoidal positions + bidirectional attention. Decoder:
+learned positions, causal self-attn + cross-attn + GELU MLP (whisper uses
+LayerNorm and untied... tied token embeddings — we tie, per whisper).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.core.quantize import as_array
+from repro.models import attention as attn_mod
+from repro.models.layers import (KeyGen, Param, embed, init_embedding,
+                                 init_layernorm, init_mlp, layernorm,
+                                 logits_head, mlp, ninit,
+                                 sinusoidal_positions, split_params,
+                                 stack_axes)
+from repro.parallel.sharding import constrain
+
+MAX_DEC_POS = 32768  # learned decoder positions (whisper: 448; the
+                     # assigned decode_32k shape needs 32k (DESIGN.md §5)
+
+
+def _init_enc_layer(k, cfg: ArchConfig) -> dict:
+    kg = KeyGen(k)
+    return {
+        "ln1": init_layernorm(kg, cfg.d_model),
+        "attn": attn_mod.init_attention(kg, cfg),
+        "ln2": init_layernorm(kg, cfg.d_model),
+        "mlp": init_mlp(kg, cfg.d_model, cfg.d_ff, gated=False),
+    }
+
+
+def _init_dec_layer(k, cfg: ArchConfig) -> dict:
+    kg = KeyGen(k)
+    return {
+        "ln1": init_layernorm(kg, cfg.d_model),
+        "self_attn": attn_mod.init_attention(kg, cfg),
+        "ln_x": init_layernorm(kg, cfg.d_model),
+        "cross_attn": attn_mod.init_cross_attention(kg, cfg),
+        "ln2": init_layernorm(kg, cfg.d_model),
+        "mlp": init_mlp(kg, cfg.d_model, cfg.d_ff, gated=False),
+    }
+
+
+def init_encdec(key, cfg: ArchConfig) -> dict:
+    keys = KeyGen(key)
+    enc_keys = jax.random.split(keys(), cfg.enc_layers)
+    dec_keys = jax.random.split(keys(), cfg.n_layers)
+    kg = KeyGen(keys())
+    return {
+        "frontend": Param(ninit(keys(), (cfg.d_model, cfg.d_model),
+                                cfg.d_model), ("param_embed", "embed")),
+        "embed": init_embedding(kg, cfg.vocab, cfg.d_model),
+        "dec_pos": Param(0.02 * jax.random.normal(
+            keys(), (MAX_DEC_POS, cfg.d_model)), (None, "param_embed")),
+        "enc_layers": stack_axes(jax.vmap(
+            lambda k: _init_enc_layer(k, cfg))(enc_keys), "layers"),
+        "enc_ln": init_layernorm(kg, cfg.d_model),
+        "dec_layers": stack_axes(jax.vmap(
+            lambda k: _init_dec_layer(k, cfg))(dec_keys), "layers"),
+        "dec_ln": init_layernorm(kg, cfg.d_model),
+    }
+
+
+def encode(params: dict, cfg: ArchConfig, frames: jax.Array) -> jax.Array:
+    """frames: (B, S_enc, d_model) stub embeddings -> encoder states."""
+    b, s, d = frames.shape
+    x = jnp.einsum("bsd,de->bse", frames.astype(jnp.bfloat16),
+                   as_array(params["frontend"]))
+    x = x + sinusoidal_positions(s, d).astype(x.dtype)[None]
+    x = constrain(x, "batch", "q_seq", "embed")
+
+    def layer(x, lp):
+        h = layernorm(lp["ln1"], x)
+        a, _ = attn_mod.attention(lp["attn"], h, cfg, kind="bidir",
+                                  mode="train", use_rope=False)
+        x = x + a
+        h = layernorm(lp["ln2"], x)
+        x = x + mlp(lp["mlp"], h, cfg.act)
+        return constrain(x, "batch", "q_seq", "embed"), None
+
+    if cfg.remat:
+        layer = jax.checkpoint(layer)
+    x, _ = jax.lax.scan(layer, x, params["enc_layers"])
+    return layernorm(params["enc_ln"], x)
+
+
+def decode_tokens(params: dict, cfg: ArchConfig, tokens: jax.Array,
+                  enc_out: Optional[jax.Array] = None, *,
+                  mode: str = "train", cache=None, pos=None):
+    """Decoder pass. train/prefill: tokens (B, S) with enc_out given.
+    decode: tokens (B, 1), cache holds self KV + cross KV."""
+    b, s = tokens.shape
+    x = embed(params["embed"], tokens)
+    if mode == "decode":
+        posv = jnp.asarray(pos, jnp.int32)
+        dec_pos = as_array(params["dec_pos"], x.dtype)
+        if posv.ndim == 1:    # per-lane positions (continuous batching)
+            pe = jnp.take(dec_pos, posv, axis=0)[:, None]
+        else:
+            pe = jax.lax.dynamic_slice_in_dim(dec_pos, posv, 1,
+                                              axis=0)[None]
+        x = x + pe.astype(x.dtype)
+    else:
+        x = x + as_array(params["dec_pos"], x.dtype)[:s][None]
+    x = constrain(x, "batch", "q_seq", "embed")
+
+    def layer(x, lp, lc, layer_idx=None):
+        h = layernorm(lp["ln1"], x)
+        a, self_c = attn_mod.attention(
+            lp["self_attn"], h, cfg, kind="global", mode=mode,
+            cache=None if lc is None else lc["self"], pos=pos,
+            use_rope=False, layer_idx=layer_idx)
+        x = x + a
+        h = layernorm(lp["ln_x"], x)
+        if mode == "decode":
+            c, cross_c = attn_mod.attention(
+                lp["cross_attn"], h, cfg, kind="bidir", mode=mode,
+                cache=lc["cross"], pos=pos, use_rope=False,
+                x_kv=h,  # x_kv flags the cross path; cached K/V are used
+                layer_idx=layer_idx)
+        else:
+            c, cross_c = attn_mod.attention(
+                lp["cross_attn"], h, cfg, kind="bidir", mode=mode,
+                cache=None if lc is None else lc["cross"],
+                x_kv=enc_out, use_rope=False)
+        x = x + c
+        h = layernorm(lp["ln2"], x)
+        x = x + mlp(lp["mlp"], h, cfg.act)
+        x = constrain(x, "batch", "q_seq", "embed")
+        nc = None
+        if mode != "train":
+            nc = {"self": self_c, "cross": cross_c}
+        return x, nc
+
+    if cfg.remat and mode == "train":
+        layer = jax.checkpoint(
+            layer, policy=jax.checkpoint_policies.nothing_saveable)
+
+    from repro import flags as _flags
+    if mode == "decode" and not _flags.BASELINE:
+        # stacked cache as scan carry: each layer writes its token in
+        # place (token-sized DUS) instead of re-stacking the full cache
+        # per step (§Perf cell C)
+        n_layers = cfg.n_layers
+
+        def layer_dec(carry, xs):
+            x, cache_all = carry
+            lp, idx = xs
+            x, nc = layer(x, lp, cache_all, layer_idx=idx)
+            return (x, nc), None
+
+        (x, new_layers), _ = jax.lax.scan(
+            layer_dec, (x, cache["layers"]),
+            (params["dec_layers"], jnp.arange(n_layers)))
+        x = layernorm(params["dec_ln"], x)
+        logits = logits_head(params["embed"], x, cfg.vocab,
+                             softcap=cfg.final_softcap)
+        return logits, {"layers": new_layers}
+
+    if cache is None:
+        x, ys = jax.lax.scan(lambda c, lp: layer(c, lp, None),
+                             x, params["dec_layers"])
+    else:
+        x, ys = jax.lax.scan(lambda c, xs: layer(c, xs[0], xs[1]),
+                             x, (params["dec_layers"], cache["layers"]))
+    x = layernorm(params["dec_ln"], x)
+    logits = logits_head(params["embed"], x, cfg.vocab,
+                         softcap=cfg.final_softcap)
+    new_cache = None if mode == "train" else {"layers": ys}
+    return logits, new_cache
+
+
+def init_encdec_cache(cfg: ArchConfig, batch: int, max_len: int,
+                      enc_len: int, dtype=jnp.bfloat16) -> dict:
+    one = {"self": {"kv": None}, "cross": {"kv": None}}  # structure doc
+    self_kv = attn_mod.init_kv_cache(cfg, batch, max_len, dtype)
+    cross_kv = attn_mod.init_kv_cache(cfg, batch, enc_len, dtype)
+    layer = {"self": self_kv, "cross": cross_kv}
+    return {"layers": jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape), layer)}

@@ -1,0 +1,232 @@
+"""Shared model primitives + the Param/logical-axes machinery."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import Q8Tensor
+from repro.kernels.q8_matmul.ref import q8_matmul_ref
+from repro.parallel.sharding import constrain
+
+
+# ----------------------------------------------------------------------------
+# Param: a pytree wrapper carrying logical axis names as static aux data.
+# ----------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Param:
+    value: Any
+    axes: tuple
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux)
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def split_params(tree):
+    """Param tree -> (values tree, axes tree)."""
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=is_param)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=is_param)
+    return values, axes
+
+
+def stack_axes(tree, axis_name: str = "layers"):
+    """Prepend a logical axis to every Param's axes (after vmap-stacking)."""
+    return jax.tree.map(lambda p: Param(p.value, (axis_name,) + p.axes),
+                        tree, is_leaf=is_param)
+
+
+class KeyGen:
+    """Deterministic sequential key splitter for init functions."""
+
+    def __init__(self, key):
+        self._key = key
+        self._n = 0
+
+    def __call__(self):
+        self._n += 1
+        return jax.random.fold_in(self._key, self._n)
+
+
+def ninit(key, shape, fan_in: int, dtype=jnp.float32) -> jax.Array:
+    """Scaled-normal init (1/sqrt(fan_in))."""
+    return (jax.random.normal(key, shape, jnp.float32)
+            * (fan_in ** -0.5)).astype(dtype)
+
+
+# ----------------------------------------------------------------------------
+# Linear / matmul with Q8Tensor support (C1: serving path uses quantized
+# weights; the XLA dequant path is what the dry-run lowers — DESIGN.md §7).
+# ----------------------------------------------------------------------------
+
+def mm(x: jax.Array, w, compute_dtype=jnp.bfloat16) -> jax.Array:
+    """x @ w where w may be a Q8Tensor (dequant-in-HLO path) or an array.
+    Contraction over x's last dim and w's first (or first-two for fused
+    head layouts)."""
+    if isinstance(w, Q8Tensor):
+        lead = x.shape[:-1]
+        k = x.shape[-1]
+        wq2 = w.q.reshape(k, -1)
+        ws2 = w.scale.reshape(w.scale.shape[0], -1)
+        y = q8_matmul_ref(x.reshape(-1, k), wq2, ws2,
+                          out_dtype=compute_dtype)
+        return y.reshape(*lead, *w.q.shape[1:])
+    w = w.astype(compute_dtype)
+    x = x.astype(compute_dtype)
+    if w.ndim == 2:
+        return jnp.einsum("...k,kn->...n", x, w)
+    if w.ndim == 3:   # (k, heads, head_dim)
+        return jnp.einsum("...k,khd->...hd", x, w)
+    raise ValueError(f"unsupported weight rank {w.ndim}")
+
+
+def mm_out(x: jax.Array, w, compute_dtype=jnp.bfloat16) -> jax.Array:
+    """(…, h, d) @ (h, d, n) -> (…, n) output projection."""
+    if isinstance(w, Q8Tensor):
+        h, d, n = w.q.shape
+        y = q8_matmul_ref(x.reshape(-1, h * d), w.q.reshape(h * d, n),
+                          w.scale.reshape(-1, n), out_dtype=compute_dtype)
+        return y.reshape(*x.shape[:-2], n)
+    return jnp.einsum("...hd,hdn->...n", x.astype(compute_dtype),
+                      w.astype(compute_dtype))
+
+
+# ----------------------------------------------------------------------------
+# Norms
+# ----------------------------------------------------------------------------
+
+def init_rmsnorm(d: int) -> Param:
+    return Param(jnp.ones((d,), jnp.float32), ("embed",))
+
+
+def rmsnorm(w: jax.Array, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(dt)
+
+
+def init_layernorm(keys: KeyGen, d: int) -> dict:
+    return {"scale": Param(jnp.ones((d,), jnp.float32), ("embed",)),
+            "bias": Param(jnp.zeros((d,), jnp.float32), ("embed",))}
+
+
+def layernorm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+# ----------------------------------------------------------------------------
+# Rotary position embedding
+# ----------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq      # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(s: int, d: int) -> jax.Array:
+    """Whisper-encoder style sinusoids (S, D)."""
+    half = d // 2
+    freq = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / (half - 1))
+    ang = jnp.arange(s)[:, None] * freq[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=1)
+
+
+# ----------------------------------------------------------------------------
+# Embedding + logits head (vocab padded to mesh*lane multiple, DESIGN.md §4)
+# ----------------------------------------------------------------------------
+
+VOCAB_MULT = 2048
+
+
+def pad_vocab(v: int, mult: int = VOCAB_MULT) -> int:
+    return -(-v // mult) * mult
+
+
+def init_embedding(keys: KeyGen, vocab: int, d: int) -> dict:
+    vp = pad_vocab(vocab)
+    return {"table": Param(ninit(keys(), (vp, d), d), ("vocab", "param_embed"))}
+
+
+def embed(p: dict, tokens: jax.Array, compute_dtype=jnp.bfloat16) -> jax.Array:
+    tbl = p["table"]
+    if isinstance(tbl, Q8Tensor):
+        from repro.core.quantize import dequantize_q8_0
+        tbl = dequantize_q8_0(tbl, axis=-2)
+    x = jnp.take(tbl.astype(compute_dtype), tokens, axis=0)
+    return constrain(x, "batch", "q_seq", "embed")
+
+
+def logits_head(p: dict, x: jax.Array, vocab: int,
+                softcap: Optional[float] = None,
+                head=None) -> jax.Array:
+    """Project to (padded) vocab; mask padding with a large negative."""
+    if head is not None:
+        y = mm(x, head, jnp.float32)
+    else:
+        tbl = p["table"]
+        if isinstance(tbl, Q8Tensor):
+            from repro.core.quantize import dequantize_q8_0
+            tbl = dequantize_q8_0(tbl, axis=-2)
+        y = jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                       tbl.astype(jnp.float32))
+    if softcap is not None:
+        y = softcap * jnp.tanh(y / softcap)
+    vp = y.shape[-1]
+    pad_mask = jnp.arange(vp) >= vocab
+    y = y - 1e9 * pad_mask.astype(y.dtype)
+    return constrain(y, "batch", "q_seq", "vocab")
+
+
+# ----------------------------------------------------------------------------
+# MLP (gated SwiGLU/GeGLU, or plain 2-layer for whisper)
+# ----------------------------------------------------------------------------
+
+def init_mlp(keys: KeyGen, d: int, ff: int, gated: bool = True) -> dict:
+    p = {"up": Param(ninit(keys(), (d, ff), d), ("param_embed", "ff")),
+         "down": Param(ninit(keys(), (ff, d), ff), ("ff", "param_embed"))}
+    if gated:
+        p["gate"] = Param(ninit(keys(), (d, ff), d), ("param_embed", "ff"))
+    return p
+
+
+def _act(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+def mlp(p: dict, x: jax.Array, act: str = "silu") -> jax.Array:
+    up = mm(x, p["up"])
+    up = constrain(up, "batch", "q_seq", "ff")
+    if "gate" in p:
+        g = _act(act)(mm(x, p["gate"]))
+        h = constrain(g, "batch", "q_seq", "ff") * up
+    else:
+        h = _act(act)(up)
+    y = mm(h, p["down"])
+    return constrain(y, "batch", "q_seq", "embed")

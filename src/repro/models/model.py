@@ -1,0 +1,160 @@
+"""Unified model API over all architecture families + dry-run input specs."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.models import encdec as encdec_mod
+from repro.models import transformer as tf_mod
+from repro.models.layers import split_params
+
+# assigned input shapes: name -> (seq_len, global_batch, kind)
+SHAPES = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ArchConfig, shape: str) -> tuple[bool, str]:
+    """long_500k only for sub-quadratic (ssm/hybrid) archs, per the brief."""
+    if shape == "long_500k" and not cfg.sub_quadratic:
+        return False, ("skipped: pure full-attention arch; 500k dense-KV "
+                       "decode reserved for SSM/hybrid (DESIGN.md §5)")
+    return True, ""
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    # ---- init -------------------------------------------------------------
+    def init(self, key) -> Any:
+        """Returns a Param tree (use split_params to get values + axes)."""
+        if self.cfg.enc_dec:
+            return encdec_mod.init_encdec(key, self.cfg)
+        return tf_mod.init_decoder(key, self.cfg)
+
+    def init_values(self, key):
+        values, _ = split_params(self.init(key))
+        return values
+
+    def param_axes(self):
+        boxed = jax.eval_shape(self.init, jax.random.key(0))
+        _, axes = split_params(boxed)
+        return axes
+
+    def param_shapes(self, dtype=None):
+        """``dtype`` casts float leaves (serving lowers bf16 weights)."""
+        boxed = jax.eval_shape(self.init, jax.random.key(0))
+        shapes, _ = split_params(boxed)
+        if dtype is not None:
+            shapes = jax.tree.map(
+                lambda l: jax.ShapeDtypeStruct(l.shape, dtype)
+                if jnp.issubdtype(l.dtype, jnp.floating) else l, shapes)
+        return shapes
+
+    # ---- forward ----------------------------------------------------------
+    def forward(self, values, batch: dict, *, mode: str = "train",
+                cache=None, pos=None):
+        """Returns (logits, new_cache). ``batch`` keys by family:
+        tokens (all); enc_frames (audio); img_embed (vlm, train/prefill)."""
+        cfg = self.cfg
+        if cfg.enc_dec:
+            if mode == "decode":
+                return encdec_mod.decode_tokens(values, cfg, batch["tokens"],
+                                                mode="decode", cache=cache,
+                                                pos=pos)
+            enc_out = encdec_mod.encode(values, cfg, batch["enc_frames"])
+            return encdec_mod.decode_tokens(values, cfg, batch["tokens"],
+                                            enc_out, mode=mode, cache=cache)
+        prefix = batch.get("img_embed") if mode != "decode" else None
+        return tf_mod.decoder_forward(values, cfg, batch["tokens"],
+                                      mode=mode, cache=cache, pos=pos,
+                                      prefix_embed=prefix)
+
+    # ---- cache ------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int, enc_len: int = 1500,
+                   dtype=jnp.bfloat16):
+        if self.cfg.enc_dec:
+            return encdec_mod.init_encdec_cache(self.cfg, batch, max_len,
+                                                enc_len, dtype)
+        return tf_mod.init_decoder_cache(self.cfg, batch, max_len, dtype)
+
+    def cache_specs(self, batch: int, max_len: int, enc_len: int = 1500):
+        return jax.eval_shape(
+            lambda: self.init_cache(batch, max_len, enc_len))
+
+    # ---- count ------------------------------------------------------------
+    def n_params(self) -> int:
+        import math
+        shapes = self.param_shapes()
+        # python ints: stacked-layer shapes overflow int32 jnp.prod
+        return sum(math.prod(l.shape) for l in jax.tree.leaves(shapes))
+
+    def n_active_params(self) -> int:
+        """MoE: experts count at top_k/E of their size (for 6·N·D)."""
+        cfg = self.cfg
+        total = 0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(
+                self.param_shapes())[0]:
+            size = 1
+            for s in leaf.shape:
+                size *= int(s)
+            keys = "/".join(str(getattr(k, "key", k)) for k in path)
+            if cfg.is_moe and any(s in keys for s in ("gate", "up", "down")) \
+                    and "moe" in keys:
+                size = size * cfg.top_k // max(cfg.n_experts, 1)
+            total += size
+        return total
+
+
+def build(cfg: ArchConfig) -> Model:
+    return Model(cfg)
+
+
+# ----------------------------------------------------------------------------
+# Dry-run input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ----------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: str) -> dict:
+    """Inputs for the step function of a (arch, shape) cell.
+
+    train:   {tokens, targets[, enc_frames | img_embed]}
+    prefill: {tokens[, enc_frames | img_embed]}
+    decode:  {tokens (B,1), pos ()}  (cache specs come from Model.cache_specs)
+    """
+    seq, gbatch, kind = SHAPES[shape]
+    f = jax.ShapeDtypeStruct
+    i32, bf16 = jnp.int32, jnp.bfloat16
+    d = cfg.d_model
+    if kind == "train":
+        if cfg.enc_dec:
+            s2 = seq // 2
+            return {"enc_frames": f((gbatch, s2, d), bf16),
+                    "tokens": f((gbatch, s2), i32),
+                    "targets": f((gbatch, s2), i32)}
+        if cfg.vlm:
+            s_text = seq - cfg.n_img_tokens
+            return {"img_embed": f((gbatch, cfg.n_img_tokens, d), bf16),
+                    "tokens": f((gbatch, s_text), i32),
+                    "targets": f((gbatch, seq), i32)}
+        return {"tokens": f((gbatch, seq), i32),
+                "targets": f((gbatch, seq), i32)}
+    if kind == "prefill":
+        out = {"tokens": f((gbatch, seq), i32)}
+        if cfg.enc_dec:
+            out["enc_frames"] = f((gbatch, 1500, d), bf16)
+        if cfg.vlm:
+            out["tokens"] = f((gbatch, seq - cfg.n_img_tokens), i32)
+            out["img_embed"] = f((gbatch, cfg.n_img_tokens, d), bf16)
+        return out
+    # decode
+    return {"tokens": f((gbatch, 1), i32),
+            "pos": f((), i32)}

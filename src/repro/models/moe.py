@@ -1,0 +1,139 @@
+"""Mixture-of-Experts FFN: top-k routing with per-expert capacity.
+
+GShard-style capacity semantics implemented as a *gather* formulation that
+is GSPMD-friendly at 128-expert scale (the one-hot dispatch einsum would
+materialize tokens×E×C): each expert top-k's its own highest-gate tokens up
+to capacity C, gathers them, runs the gated FFN, and scatter-adds weighted
+outputs back. Compute is top_k×capacity_factor of the dense equivalent —
+the correct active-FLOPs profile for the roofline (DESIGN.md §4).
+
+Sharding: experts over 'model' when E % tp == 0 (qwen3-moe: EP), otherwise
+per-expert d_ff over 'model' (mixtral: TP-in-expert).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.models.layers import KeyGen, Param, _act, ninit
+from repro.parallel.sharding import constrain
+
+
+def init_moe(keys: KeyGen, cfg: ArchConfig) -> dict:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": Param(ninit(keys(), (d, e), d), ("param_embed", None)),
+        "gate": Param(ninit(keys(), (e, d, ff), d), ("experts", "param_embed", "expert_ff")),
+        "up": Param(ninit(keys(), (e, d, ff), d), ("experts", "param_embed", "expert_ff")),
+        "down": Param(ninit(keys(), (e, ff, d), ff), ("experts", "expert_ff", "param_embed")),
+    }
+
+
+def moe_ffn(p: dict, x: jax.Array, cfg: ArchConfig,
+            grouped: bool = None) -> jax.Array:
+    """x: (B, S, d) -> (B, S, d).
+
+    ``grouped=True`` (default; §Perf hillclimb B): GShard-style *groups* —
+    capacity and expert top-C selection are per batch row, so dispatch
+    tensors carry a leading B dim that shards over ('pod','data') and the
+    expert dim shards over 'model' (EP) when divisible: the dispatch is
+    fully 2-D-sharded and no collective crosses the data axis inside the
+    layer. The ``grouped=False`` baseline top-k'd over the globally
+    flattened token dim — replicated (E, global_cap, d) dispatch tensors
+    and (n_global, d) all-reduces every layer made mixtral-8x7b the only
+    collective-bound cell of the baseline table (EXPERIMENTS.md §Perf).
+    """
+    if grouped is None:
+        from repro import flags
+        grouped = not flags.BASELINE
+    if not grouped:
+        return _moe_ffn_global(p, x, cfg)
+    b, s, d = x.shape
+    e, top_k = cfg.n_experts, cfg.top_k
+    cap = min(s, max(top_k, int(cfg.capacity_factor * s * top_k / e)))
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, top_k)             # (b, s, k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    # per-row dense gate (b, s, e), then per-(row, expert) top-C tokens
+    gate = jnp.zeros((b, s, e), jnp.float32)
+    gate = gate.at[jnp.arange(b)[:, None, None],
+                   jnp.arange(s)[None, :, None], top_i].set(top_p)
+    gate_t = constrain(gate.swapaxes(1, 2), "batch", "experts", None)
+    sel_gate, sel_tok = jax.lax.top_k(gate_t, cap)         # (b, e, cap)
+
+    x_e = jnp.take_along_axis(
+        x[:, None].astype(jnp.bfloat16),                   # (b, 1, s, d)
+        sel_tok[..., None], axis=2)                        # (b, e, cap, d)
+    x_e = constrain(x_e, "batch", "experts", None, "embed")
+    g = _act(cfg.act)(jnp.einsum("becd,edf->becf", x_e,
+                                 p["gate"].astype(jnp.bfloat16)))
+    u = jnp.einsum("becd,edf->becf", x_e, p["up"].astype(jnp.bfloat16))
+    h = constrain(g * u, "batch", "experts", None, "expert_ff")
+    y_e = jnp.einsum("becf,efd->becd", h, p["down"].astype(jnp.bfloat16))
+    y_e = y_e * sel_gate[..., None].astype(jnp.bfloat16)   # combine weights
+    y_e = constrain(y_e, "batch", "experts", None, "embed")
+
+    def combine_row(sel, ye):                              # (e,cap),(e,cap,d)
+        out = jnp.zeros((s, d), jnp.float32)
+        return out.at[sel.reshape(-1)].add(
+            ye.reshape(e * cap, d).astype(jnp.float32))
+
+    out = jax.vmap(combine_row)(sel_tok, y_e).astype(x.dtype)
+    return constrain(out, "batch", "q_seq", "embed")
+
+
+def _moe_ffn_global(p: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Baseline (pre-hillclimb) dispatch: global-token top-C. Kept for
+    the §Perf A/B and the equivalence tests."""
+    b, s, d = x.shape
+    e, top_k = cfg.n_experts, cfg.top_k
+    n = b * s
+    cap = max(top_k, int(cfg.capacity_factor * n * top_k / e))
+    cap = min(cap, n)
+
+    xf = x.reshape(n, d)
+    logits = jnp.einsum("nd,de->ne", xf.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, top_k)             # (n, k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)  # renormalize
+
+    gate = jnp.zeros((n, e), jnp.float32)
+    gate = gate.at[jnp.arange(n)[:, None], top_i].set(top_p)
+    gate_t = constrain(gate.T, "experts", None)            # (e, n)
+    sel_gate, sel_tok = jax.lax.top_k(gate_t, cap)         # (e, cap)
+
+    x_e = jnp.take(xf, sel_tok.reshape(-1), axis=0).reshape(e, cap, d)
+    x_e = constrain(x_e, "experts", None, "embed")
+    g = _act(cfg.act)(jnp.einsum("ecd,edf->ecf", x_e.astype(jnp.bfloat16),
+                                 p["gate"].astype(jnp.bfloat16)))
+    u = jnp.einsum("ecd,edf->ecf", x_e.astype(jnp.bfloat16),
+                   p["up"].astype(jnp.bfloat16))
+    h = constrain(g * u, "experts", None, "expert_ff")
+    y_e = jnp.einsum("ecf,efd->ecd", h, p["down"].astype(jnp.bfloat16))
+    y_e = y_e.astype(jnp.float32) * sel_gate[..., None]    # combine weights
+    y_e = constrain(y_e, "experts", None, "embed")
+
+    out = jnp.zeros((n, d), jnp.float32)
+    out = out.at[sel_tok.reshape(-1)].add(y_e.reshape(e * cap, d))
+    out = out.astype(x.dtype).reshape(b, s, d)
+    return constrain(out, "batch", "q_seq", "embed")
+
+
+def load_balance_loss(p: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Auxiliary load-balancing loss (Switch/GShard)."""
+    b, s, d = x.shape
+    xf = x.reshape(-1, d)
+    logits = jnp.einsum("nd,de->ne", xf.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top1 = jnp.argmax(probs, axis=-1)
+    frac_tokens = jnp.mean(jax.nn.one_hot(top1, cfg.n_experts), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    return cfg.n_experts * jnp.sum(frac_tokens * frac_probs)

@@ -1,0 +1,203 @@
+"""Mamba2 (SSD) block — zamba2's backbone.
+
+Train/prefill run the chunked SSD algorithm (matmul-dominated, MXU-
+friendly: intra-chunk quadratic term + inter-chunk state recurrence via
+lax.scan). Decode is the O(1) recurrent state update. All decay
+exponentials are of non-positive arguments (log a <= 0), so the chunked
+form is numerically stable without extra rescaling.
+
+Cache = {"conv": (B, w-1, C_conv), "h": (B, H, hd, N)} — constant-size
+state, which is why zamba2/xlstm are the long_500k-eligible archs.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.models.layers import KeyGen, Param, ninit, rmsnorm
+from repro.parallel.sharding import constrain
+
+CHUNK = 256
+
+
+def _dims(cfg: ArchConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    n_heads = d_in // cfg.ssm_head_dim
+    return d_in, n_heads, cfg.ssm_state, cfg.ssm_head_dim
+
+
+def init_mamba(keys: KeyGen, cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    d_in, h, n, hd = _dims(cfg)
+    w = cfg.ssm_conv
+    return {
+        "wz": Param(ninit(keys(), (d, d_in), d), ("param_embed", "inner")),
+        "wx": Param(ninit(keys(), (d, d_in), d), ("param_embed", "inner")),
+        "wB": Param(ninit(keys(), (d, n), d), ("param_embed", None)),
+        "wC": Param(ninit(keys(), (d, n), d), ("param_embed", None)),
+        "wdt": Param(ninit(keys(), (d, h), d), ("param_embed", "ssm_heads")),
+        "dt_bias": Param(jnp.zeros((h,), jnp.float32), ("ssm_heads",)),
+        "A_log": Param(jnp.zeros((h,), jnp.float32), ("ssm_heads",)),
+        "D": Param(jnp.ones((h,), jnp.float32), ("ssm_heads",)),
+        "conv_x": Param(ninit(keys(), (w, d_in), w), ("conv", "inner")),
+        "conv_B": Param(ninit(keys(), (w, n), w), ("conv", None)),
+        "conv_C": Param(ninit(keys(), (w, n), w), ("conv", None)),
+        "out_norm": Param(jnp.ones((d_in,), jnp.float32), ("inner",)),
+        "wo": Param(ninit(keys(), (d_in, d), d_in), ("inner", "param_embed")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv. x: (B, S, C); w: (W, C). Returns (y, tail)."""
+    width = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    ys = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+             for i in range(width))
+    tail = xp[:, xp.shape[1] - (width - 1):, :]
+    return jax.nn.silu(ys), tail
+
+
+def _ssd_chunked(xh, dt, a_log_dt, B, C, h0, chunk: int = CHUNK):
+    """Chunked SSD.
+      xh: (B, S, H, hd)   inputs per head
+      dt: (B, S, H)       softplus'd step sizes
+      a_log_dt: (B, S, H) log decay per step (= -exp(A_log)*dt, <= 0)
+      B, C: (B, S, N)
+      h0: (B, H, hd, N) initial state
+    Returns (y: (B,S,H,hd), h_final)."""
+    b, s, h, hd = xh.shape
+    n = B.shape[-1]
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        a_log_dt = jnp.pad(a_log_dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // chunk
+    q = chunk
+
+    def r(t):  # reshape to chunks
+        return t.reshape(b, nc, q, *t.shape[2:]).swapaxes(0, 1)
+
+    xc, dtc, ac, Bc, Cc = r(xh), r(dt), r(a_log_dt), r(B), r(C)
+
+    def step(h_prev, xs):
+        xq, dtq, aq, Bq, Cq = xs          # (b,q,h,hd) (b,q,h) (b,q,h) (b,q,n) (b,q,n)
+        acs = jnp.cumsum(aq, axis=1)      # (b,q,h) cumulative log decay
+        # intra-chunk: scores[t,s_] = C_t.B_s * exp(acs_t - acs_s) * dt_s
+        cb = jnp.einsum("btn,bsn->bts", Cq.astype(jnp.float32),
+                        Bq.astype(jnp.float32))
+        seg = acs[:, :, None, :] - acs[:, None, :, :]      # (b,t,s,h)
+        tri = jnp.tril(jnp.ones((q, q), bool))
+        w_ts = jnp.where(tri[None, :, :, None], jnp.exp(seg), 0.0)
+        scores = cb[..., None] * w_ts                       # (b,t,s,h)
+        xdt = xq.astype(jnp.float32) * dtq[..., None]       # (b,s,h,hd)
+        y_intra = jnp.einsum("btsh,bshd->bthd", scores, xdt)
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum("btn,bhdn->bthd", Cq.astype(jnp.float32), h_prev
+                             ) * jnp.exp(acs)[..., None]
+        # state update
+        decay_to_end = jnp.exp(acs[:, -1:, :] - acs)        # (b,s,h)
+        dh = jnp.einsum("bshd,bsn,bsh->bhdn", xdt, Bq.astype(jnp.float32),
+                        decay_to_end)
+        h_new = h_prev * jnp.exp(acs[:, -1])[:, :, None, None] + dh
+        return h_new, (y_intra + y_inter)
+
+    h_final, yc = jax.lax.scan(step, h0.astype(jnp.float32),
+                               (xc, dtc, ac, Bc, Cc))
+    y = yc.swapaxes(0, 1).reshape(b, nc * q, h, hd)[:, :s]
+    return y, h_final
+
+
+def mamba_block(p: dict, x: jax.Array, cfg: ArchConfig, *,
+                mode: str = "train", cache: Optional[dict] = None,
+                pos=None):
+    """Returns (y, new_cache)."""
+    b, s, d = x.shape
+    d_in, h, n, hd = _dims(cfg)
+    z = jax.nn.silu(jnp.einsum("bsd,di->bsi", x.astype(jnp.bfloat16),
+                               p["wz"].astype(jnp.bfloat16)))
+    xi = jnp.einsum("bsd,di->bsi", x.astype(jnp.bfloat16),
+                    p["wx"].astype(jnp.bfloat16))
+    Bi = jnp.einsum("bsd,dn->bsn", x.astype(jnp.bfloat16),
+                    p["wB"].astype(jnp.bfloat16))
+    Ci = jnp.einsum("bsd,dn->bsn", x.astype(jnp.bfloat16),
+                    p["wC"].astype(jnp.bfloat16))
+    dt_raw = jnp.einsum("bsd,dh->bsh", x.astype(jnp.float32),
+                        p["wdt"].astype(jnp.float32)) + p["dt_bias"]
+    dt = jax.nn.softplus(dt_raw)                           # (b,s,h)
+    a_log_dt = -jnp.exp(p["A_log"].astype(jnp.float32)) * dt
+
+    xi = constrain(xi, "batch", "q_seq", "inner")
+    conv_cache = cache["conv"] if cache is not None else None
+    if mode == "decode":
+        cx, cB, cC = (None if conv_cache is None else
+                      (conv_cache[..., :d_in], conv_cache[..., d_in:d_in + n],
+                       conv_cache[..., d_in + n:]))
+        xi, tx = _causal_conv(xi, p["conv_x"], cx)
+        Bi, tB = _causal_conv(Bi, p["conv_B"], cB)
+        Ci, tC = _causal_conv(Ci, p["conv_C"], cC)
+        new_conv = jnp.concatenate([tx, tB, tC], axis=-1)
+        xh = xi.reshape(b, s, h, hd).astype(jnp.float32)
+        h_prev = cache["h"].astype(jnp.float32)
+        decay = jnp.exp(a_log_dt[:, 0])                    # (b,h)
+        xdt = xh[:, 0] * dt[:, 0, :, None]                 # (b,h,hd)
+        dh = jnp.einsum("bhd,bn->bhdn", xdt, Bi[:, 0].astype(jnp.float32))
+        h_new = h_prev * decay[:, :, None, None] + dh
+        y = jnp.einsum("bhdn,bn->bhd", h_new, Ci[:, 0].astype(jnp.float32))
+        y = y + xh[:, 0] * p["D"][None, :, None]
+        y = y.reshape(b, 1, d_in)
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype)
+                     if cache is not None else new_conv,
+                     "h": h_new.astype(cache["h"].dtype)}
+    else:
+        xi, tx = _causal_conv(xi, p["conv_x"])
+        Bi, tB = _causal_conv(Bi, p["conv_B"])
+        Ci, tC = _causal_conv(Ci, p["conv_C"])
+        xh = xi.reshape(b, s, h, hd)
+        h0 = jnp.zeros((b, h, hd, n), jnp.float32)
+        y, h_fin = _ssd_chunked(xh, dt, a_log_dt, Bi, Ci, h0)
+        y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+        y = y.reshape(b, s, d_in)
+        new_cache = None
+        if mode == "prefill":
+            # state dtype follows the allocated cache (f32 for exactness
+            # in tests; bf16 in production serving)
+            cdt = cache["h"].dtype if cache is not None else jnp.bfloat16
+            new_conv = jnp.concatenate([tx, tB, tC], axis=-1)
+            new_cache = {"conv": new_conv.astype(cdt),
+                         "h": h_fin.astype(cdt)}
+
+    y = rmsnorm(p["out_norm"], y.astype(x.dtype), cfg.norm_eps) * z
+    out = jnp.einsum("bsi,id->bsd", y.astype(jnp.bfloat16),
+                     p["wo"].astype(jnp.bfloat16)).astype(x.dtype)
+    return constrain(out, "batch", "q_seq", "embed"), new_cache
+
+
+def init_mamba_cache(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16) -> dict:
+    d_in, h, n, hd = _dims(cfg)
+    w = cfg.ssm_conv
+    return {"conv": jnp.zeros((batch, w - 1, d_in + 2 * n), dtype),
+            "h": jnp.zeros((batch, h, hd, n), dtype)}
+
+
+def mamba_recurrent_ref(p: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Step-by-step oracle for the chunked SSD path (tests)."""
+    b, s, d = x.shape
+    cache = init_mamba_cache(cfg, b, jnp.float32)
+    ys = []
+    for t in range(s):
+        y, cache = mamba_block(p, x[:, t:t + 1], cfg, mode="decode",
+                               cache=cache, pos=t)
+        ys.append(y)
+    return jnp.concatenate(ys, axis=1)

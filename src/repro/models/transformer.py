@@ -1,0 +1,328 @@
+"""Decoder-only stack: composable blocks, scanned segments, KV/state cache.
+
+The layer stack is organized as ``n_segments`` repetitions of a per-arch
+*segment pattern* (1 block for plain dense/MoE; (local, global) pairs for
+gemma2; (mLSTM, sLSTM) pairs for xlstm; 5×mamba + shared-attn for zamba2),
+scanned with ``jax.lax.scan`` so the HLO stays compact at 30–80 layers.
+zamba2's attention block params are *shared* across segments (closure),
+matching the architecture; its KV caches remain per-occurrence.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import flags as _flags
+from repro.configs import ArchConfig
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.layers import (KeyGen, Param, init_embedding, init_mlp,
+                                 init_rmsnorm, embed, logits_head, mlp,
+                                 rmsnorm, split_params, stack_axes)
+from repro.parallel.sharding import constrain
+
+
+def segment_pattern(cfg: ArchConfig) -> list[tuple[str, str]]:
+    """[(block_type, attn_kind)] per scanned segment."""
+    if cfg.xlstm:
+        return [("mlstm", "-"), ("slstm", "-")]
+    if cfg.family == "hybrid" and cfg.attn_every:
+        return [("mamba", "-")] * (cfg.attn_every - 1) + [("shared_attn", "global")]
+    if cfg.local_global:
+        return [("attn", "local"), ("attn", "global")]
+    return [("attn", "global")]
+
+
+def tail_pattern(cfg: ArchConfig) -> list[tuple[str, str]]:
+    """Trailing blocks that don't fill a whole segment (zamba2: 81 % 6 = 3)."""
+    if cfg.family == "hybrid" and cfg.attn_every and cfg.n_layers % cfg.attn_every:
+        return [("mamba", "-")] * (cfg.n_layers % cfg.attn_every)
+    return []
+
+
+def n_segments(cfg: ArchConfig) -> int:
+    unit = len(segment_pattern(cfg))
+    if cfg.family == "hybrid" and cfg.attn_every:
+        return cfg.n_layers // cfg.attn_every
+    assert cfg.n_layers % unit == 0, (cfg.name, cfg.n_layers, unit)
+    return cfg.n_layers // unit
+
+
+# ----------------------------------------------------------------------------
+# Block init / apply
+# ----------------------------------------------------------------------------
+
+def _init_block(keys: KeyGen, cfg: ArchConfig, btype: str) -> dict:
+    if btype == "attn":
+        p = {"ln1": init_rmsnorm(cfg.d_model),
+             "attn": attn_mod.init_attention(keys, cfg)}
+        if cfg.d_ff:
+            p["ln2"] = init_rmsnorm(cfg.d_model)
+            if cfg.is_moe:
+                p["moe"] = moe_mod.init_moe(keys, cfg)
+            else:
+                p["mlp"] = init_mlp(keys, cfg.d_model, cfg.d_ff, gated=True)
+        return p
+    if btype == "shared_attn":
+        return {}  # params live in the shared tree
+    if btype == "mamba":
+        return {"ln1": init_rmsnorm(cfg.d_model),
+                "mamba": ssm_mod.init_mamba(keys, cfg)}
+    if btype == "mlstm":
+        return {"ln1": init_rmsnorm(cfg.d_model),
+                "mlstm": xlstm_mod.init_mlstm(keys, cfg)}
+    if btype == "slstm":
+        return {"ln1": init_rmsnorm(cfg.d_model),
+                "slstm": xlstm_mod.init_slstm(keys, cfg)}
+    raise ValueError(btype)
+
+
+def _apply_block(bp: dict, x, cfg: ArchConfig, btype: str, kind: str, *,
+                 mode: str, cache, pos, shared: Optional[dict],
+                 layer_idx=None):
+    """``layer_idx`` (decode): ``cache`` holds the STACKED (L, …) subtree
+    for this block; attention writes its token in place at layer_idx;
+    state blocks (ssm/xlstm) slice their layer's state and write the
+    full state back (a real full-state update — SSM/LSTM states change
+    entirely every step, unlike sparse KV appends)."""
+    def _slice(sub):
+        if layer_idx is None or sub is None:
+            return sub
+        return jax.tree.map(
+            lambda c: jax.lax.dynamic_index_in_dim(c, layer_idx, 0,
+                                                   keepdims=False), sub)
+
+    def _unslice(old, new):
+        if layer_idx is None or new is None:
+            return new
+        return jax.tree.map(
+            lambda c, n: jax.lax.dynamic_update_index_in_dim(
+                c, n.astype(c.dtype), layer_idx, 0), old, new)
+
+    if btype in ("attn", "shared_attn"):
+        p = shared if btype == "shared_attn" else bp
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        a, new_cache = attn_mod.attention(
+            p["attn"], h, cfg, kind=kind, mode=mode,
+            cache=None if cache is None else cache.get("kv"), pos=pos,
+            layer_idx=layer_idx)
+        x = x + a
+        if cfg.d_ff and "ln2" in p:
+            h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+            if cfg.is_moe:
+                x = x + moe_mod.moe_ffn(p["moe"], h, cfg)
+            else:
+                x = x + mlp(p["mlp"], h, cfg.act)
+        return x, (None if new_cache is None else {"kv": new_cache})
+    if btype == "mamba":
+        h = rmsnorm(bp["ln1"], x, cfg.norm_eps)
+        sub = None if cache is None else cache.get("ssm")
+        y, new_cache = ssm_mod.mamba_block(
+            bp["mamba"], h, cfg, mode=mode, cache=_slice(sub), pos=pos)
+        new_cache = _unslice(sub, new_cache)
+        return x + y, (None if new_cache is None else {"ssm": new_cache})
+    if btype == "mlstm":
+        h = rmsnorm(bp["ln1"], x, cfg.norm_eps)
+        sub = None if cache is None else cache.get("mstate")
+        y, new_cache = xlstm_mod.mlstm_block(
+            bp["mlstm"], h, cfg, mode=mode, cache=_slice(sub), pos=pos)
+        new_cache = _unslice(sub, new_cache)
+        return x + y, (None if new_cache is None else {"mstate": new_cache})
+    if btype == "slstm":
+        h = rmsnorm(bp["ln1"], x, cfg.norm_eps)
+        sub = None if cache is None else cache.get("sstate")
+        y, new_cache = xlstm_mod.slstm_block(
+            bp["slstm"], h, cfg, mode=mode, cache=_slice(sub), pos=pos)
+        new_cache = _unslice(sub, new_cache)
+        return x + y, (None if new_cache is None else {"sstate": new_cache})
+    raise ValueError(btype)
+
+
+def _block_cache(cfg: ArchConfig, btype: str, kind: str, batch: int,
+                 max_len: int, dtype):
+    if btype in ("attn", "shared_attn"):
+        return {"kv": attn_mod.init_kv_cache(cfg, batch, max_len, dtype)}
+    if btype == "mamba":
+        return {"ssm": ssm_mod.init_mamba_cache(cfg, batch, dtype)}
+    if btype == "mlstm":
+        return {"mstate": xlstm_mod.init_mlstm_cache(cfg, batch)}
+    if btype == "slstm":
+        return {"sstate": xlstm_mod.init_slstm_cache(cfg, batch)}
+    raise ValueError(btype)
+
+
+# ----------------------------------------------------------------------------
+# Whole-model init / apply
+# ----------------------------------------------------------------------------
+
+def init_decoder(key, cfg: ArchConfig) -> dict:
+    keys = KeyGen(key)
+    pattern = segment_pattern(cfg)
+    nseg = n_segments(cfg)
+
+    def seg_init(k):
+        kg = KeyGen(k)
+        return {f"block{j}": _init_block(kg, cfg, bt)
+                for j, (bt, _) in enumerate(pattern)}
+
+    seg_keys = jax.random.split(keys(), nseg)
+    segments = jax.vmap(seg_init)(seg_keys)
+    segments = stack_axes(segments, "layers")
+
+    params = {
+        "embed": init_embedding(keys, cfg.vocab, cfg.d_model),
+        "segments": segments,
+        "final_norm": init_rmsnorm(cfg.d_model),
+    }
+    tail = tail_pattern(cfg)
+    if tail:
+        tail_keys = jax.random.split(keys(), len(tail))
+
+        def tail_init(k):
+            return {"block0": _init_block(KeyGen(k), cfg, "mamba")}
+
+        params["tail"] = stack_axes(jax.vmap(tail_init)(tail_keys), "layers")
+    if any(bt == "shared_attn" for bt, _ in pattern):
+        kg = KeyGen(keys())
+        params["shared"] = _init_block(kg, cfg, "attn")
+    if not cfg.tie_embeddings:
+        from repro.models.layers import ninit, pad_vocab
+        params["lm_head"] = Param(
+            ninit(keys(), (cfg.d_model, pad_vocab(cfg.vocab)), cfg.d_model),
+            ("param_embed", "vocab"))
+    return params
+
+
+def _scan_stack(params_stack, cache_stack, x, cfg, pattern, *, mode, pos,
+                shared):
+    """Scan segments; returns (x, new_cache_stack).
+
+    Decode carries the stacked cache through the scan and each segment
+    updates it in place (token-sized writes for KV; full-state writes for
+    SSM/LSTM states) — the ys-stacking path would re-materialize the
+    entire cache every step (§Perf cell C). Train/prefill keep the
+    ys-stacking formulation (prefill legitimately writes the full cache).
+    """
+    nseg = jax.tree.leaves(params_stack)[0].shape[0]
+
+    def seg_fn(x, seg_params, seg_cache, layer_idx=None):
+        new_caches = {}
+        for j, (bt, kind) in enumerate(pattern):
+            bc = None if seg_cache is None else seg_cache[f"block{j}"]
+            x, nc = _apply_block(seg_params[f"block{j}"], x, cfg, bt, kind,
+                                 mode=mode, cache=bc, pos=pos,
+                                 shared=shared, layer_idx=layer_idx)
+            new_caches[f"block{j}"] = nc
+        x = constrain(x, "batch", "q_seq", "embed")
+        return x, (None if mode == "train" else new_caches)
+
+    if cfg.remat and mode == "train":
+        seg_fn = jax.checkpoint(
+            seg_fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+    if mode == "decode" and not _flags.BASELINE:
+        assert cache_stack is not None
+        # KV subtrees ride the carry (token-sized in-place writes);
+        # SSM/LSTM state subtrees ride xs/ys (they are fully rewritten
+        # every step anyway — carrying them would double the traffic
+        # with a slice-out/write-back round trip).
+        kv_names = {f"block{j}" for j, (bt, _) in enumerate(pattern)
+                    if bt in ("attn", "shared_attn")}
+        kv_cache = {k: v for k, v in cache_stack.items() if k in kv_names}
+        st_cache = {k: v for k, v in cache_stack.items()
+                    if k not in kv_names}
+
+        def seg_dec(carry, xs):
+            x, kvc = carry
+            seg_params, stc, idx = xs
+            new_kv, new_st = {}, {}
+            for j, (bt, kind) in enumerate(pattern):
+                name = f"block{j}"
+                if name in kv_names:
+                    x, nc = _apply_block(seg_params[name], x, cfg, bt,
+                                         kind, mode=mode, cache=kvc[name],
+                                         pos=pos, shared=shared,
+                                         layer_idx=idx)
+                    new_kv[name] = nc
+                else:
+                    x, nc = _apply_block(seg_params[name], x, cfg, bt,
+                                         kind, mode=mode, cache=stc[name],
+                                         pos=pos, shared=shared)
+                    new_st[name] = nc
+            x = constrain(x, "batch", "q_seq", "embed")
+            return (x, new_kv), new_st
+
+        (x, kv_new), st_new = jax.lax.scan(
+            seg_dec, (x, kv_cache),
+            (params_stack, st_cache, jnp.arange(nseg)))
+        return x, {**kv_new, **st_new}
+
+    if cache_stack is None:
+        x, ys = jax.lax.scan(lambda c, sp: seg_fn(c, sp, None),
+                             x, params_stack)
+    else:
+        x, ys = jax.lax.scan(lambda c, xs: seg_fn(c, xs[0], xs[1]),
+                             x, (params_stack, cache_stack))
+    return x, (None if mode == "train" else ys)
+
+
+def decoder_forward(params: dict, cfg: ArchConfig, tokens, *,
+                    mode: str = "train", cache=None, pos=None,
+                    prefix_embed=None):
+    """tokens: (B, S) int32 (S=1 for decode). ``prefix_embed``: (B, P, d)
+    continuous embeddings prepended at position 0 (VLM patch stub).
+    Returns (logits, new_cache)."""
+    values = params
+    x = embed(values["embed"], tokens)
+    if prefix_embed is not None:
+        x = jnp.concatenate([prefix_embed.astype(x.dtype), x], axis=1)
+    x = constrain(x, "batch", "q_seq", "embed")
+
+    pattern = segment_pattern(cfg)
+    shared = values.get("shared")
+    seg_cache = None if cache is None else cache["segments"]
+    x, new_seg_cache = _scan_stack(values["segments"], seg_cache, x, cfg,
+                                   pattern, mode=mode, pos=pos, shared=shared)
+    new_cache = None
+    tail_cache = None
+    if "tail" in values:
+        tc = None if cache is None else cache["tail"]
+        x, tail_cache = _scan_stack(values["tail"], tc, x, cfg,
+                                    [("mamba", "-")], mode=mode, pos=pos,
+                                    shared=None)
+    if mode != "train":
+        new_cache = {"segments": new_seg_cache}
+        if "tail" in values:
+            new_cache["tail"] = tail_cache
+
+    x = rmsnorm(values["final_norm"], x, cfg.norm_eps)
+    head = values.get("lm_head")
+    logits = logits_head(values["embed"], x, cfg.vocab,
+                         softcap=cfg.final_softcap, head=head)
+    return logits, new_cache
+
+
+def init_decoder_cache(cfg: ArchConfig, batch: int, max_len: int,
+                       dtype=jnp.bfloat16) -> dict:
+    pattern = segment_pattern(cfg)
+    nseg = n_segments(cfg)
+
+    def one_seg(_):
+        return {f"block{j}": _block_cache(cfg, bt, kind, batch, max_len, dtype)
+                for j, (bt, kind) in enumerate(pattern)}
+
+    seg = jax.tree.map(lambda x: jnp.broadcast_to(x, (nseg,) + x.shape),
+                       one_seg(0))
+    cache = {"segments": seg}
+    tail = tail_pattern(cfg)
+    if tail:
+        t = {"block0": _block_cache(cfg, "mamba", "-", batch, max_len, dtype)}
+        cache["tail"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (len(tail),) + x.shape), t)
+    return cache

@@ -1,0 +1,311 @@
+"""xLSTM blocks: mLSTM (chunked-parallel / recurrent) and sLSTM (scan).
+
+mLSTM is a gated matrix-memory linear recurrence; training uses a chunked
+form (intra-chunk quadratic + carried (C, n, m) state with running-max
+stabilization, per the xLSTM paper's stabilized formulas). sLSTM has a
+true sequential dependency (block-diagonal recurrent matrices per head)
+and runs as a lax.scan over time — the paper's technique does not apply to
+its recurrence (DESIGN.md §5), only to its projections.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.models.layers import KeyGen, Param, ninit, rmsnorm
+from repro.parallel.sharding import constrain
+
+MCHUNK = 128
+
+
+# ----------------------------------------------------------------------------
+# mLSTM
+# ----------------------------------------------------------------------------
+
+def _mdims(cfg: ArchConfig):
+    d_in = int(cfg.proj_factor * cfg.d_model)
+    h = cfg.n_heads
+    return d_in, h, d_in // h
+
+
+def init_mlstm(keys: KeyGen, cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    d_in, h, hd = _mdims(cfg)
+    return {
+        "w_up": Param(ninit(keys(), (d, d_in), d), ("param_embed", "inner")),
+        "w_gate": Param(ninit(keys(), (d, d_in), d), ("param_embed", "inner")),
+        "wq": Param(ninit(keys(), (d_in, d_in), d_in), ("inner", None)),
+        "wk": Param(ninit(keys(), (d_in, d_in), d_in), ("inner", None)),
+        "wv": Param(ninit(keys(), (d_in, d_in), d_in), ("inner", None)),
+        "wi": Param(ninit(keys(), (d_in, h), d_in), ("inner", None)),
+        "wf": Param(ninit(keys(), (d_in, h), d_in), ("inner", None)),
+        "f_bias": Param(3.0 * jnp.ones((h,), jnp.float32), (None,)),
+        "out_norm": Param(jnp.ones((d_in,), jnp.float32), ("inner",)),
+        "w_down": Param(ninit(keys(), (d_in, d), d_in), ("inner", "param_embed")),
+    }
+
+
+def _mlstm_core_chunked(q, k, v, i_raw, logf, state, chunk=MCHUNK):
+    """q/k/v: (B,S,H,hd); i_raw/logf: (B,S,H); state: (C, n, m) with
+    C (B,H,hd,hd), n (B,H,hd), m (B,H). Returns (y, state)."""
+    b, s, h, hd = q.shape
+    scale = hd ** -0.5
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        z = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = (jnp.pad(t, z) for t in (q, k, v))
+        i_raw = jnp.pad(i_raw, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+        logf = jnp.pad(logf, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // chunk
+
+    def r(t):
+        return t.reshape(b, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc, ic, fc = r(q), r(k), r(v), r(i_raw), r(logf)
+
+    def step(carry, xs):
+        C, n, m = carry
+        qq, kk, vv, ii, ff = xs
+        F = jnp.cumsum(ff, axis=1)                       # (b,q,h)
+        # log weights: intra D[t,s] = F_t - F_s + i_s (s<=t)
+        Dlog = F[:, :, None, :] - F[:, None, :, :] + ii[:, None, :, :]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        Dlog = jnp.where(tri[None, :, :, None], Dlog, -jnp.inf)
+        # inter weight for carried state: F_t + m_prev
+        inter_log = F + m[:, None, :]                    # (b,q,h)
+        m_t = jnp.maximum(jnp.max(Dlog, axis=2), inter_log)
+        m_t = jnp.maximum(m_t, -1e30)
+        w_intra = jnp.exp(Dlog - m_t[:, :, None, :])     # (b,t,s,h)
+        w_inter = jnp.exp(inter_log - m_t)               # (b,t,h)
+
+        qk = jnp.einsum("bthd,bshd->bths", qq.astype(jnp.float32),
+                        kk.astype(jnp.float32)) * scale   # (b,t,h,s)
+        sc = qk * w_intra.swapaxes(2, 3)                  # (b,t,h,s)
+        num_intra = jnp.einsum("bths,bshd->bthd", sc, vv.astype(jnp.float32))
+        den_intra = jnp.sum(sc, axis=-1)                  # (b,t,h)
+        qC = jnp.einsum("bthd,bhde->bthe", qq.astype(jnp.float32), C) * scale
+        qn = jnp.einsum("bthd,bhd->bth", qq.astype(jnp.float32), n) * scale
+        num = num_intra + qC * w_inter[..., None]
+        den = den_intra + qn * w_inter
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_t))
+        y = num / den[..., None]
+
+        # carry update to chunk end
+        F_end = F[:, -1, :]                               # (b,h)
+        m_new = jnp.maximum(F_end + m, jnp.max(F_end[:, None] - F + ii, axis=1))
+        w_state = jnp.exp(F_end[:, None] - F + ii - m_new[:, None])  # (b,s,h)
+        C_new = (C * jnp.exp(F_end + m - m_new)[..., None, None]
+                 + jnp.einsum("bshd,bshe,bsh->bhde", kk.astype(jnp.float32),
+                              vv.astype(jnp.float32), w_state))
+        n_new = (n * jnp.exp(F_end + m - m_new)[..., None]
+                 + jnp.einsum("bshd,bsh->bhd", kk.astype(jnp.float32), w_state))
+        return (C_new, n_new, m_new), y
+
+    (C, n, m), yc = jax.lax.scan(step, state, (qc, kc, vc, ic, fc))
+    y = yc.swapaxes(0, 1).reshape(b, nc * chunk, h, hd)[:, :s]
+    return y, (C, n, m)
+
+
+def _mlstm_core_step(q, k, v, i_raw, logf, state):
+    """Single decode step. q/k/v: (B,H,hd); i_raw/logf: (B,H)."""
+    C, n, m = state
+    scale = q.shape[-1] ** -0.5
+    m_new = jnp.maximum(logf + m, i_raw)
+    C = (C * jnp.exp(logf + m - m_new)[..., None, None]
+         + jnp.exp(i_raw - m_new)[..., None, None]
+         * jnp.einsum("bhd,bhe->bhde", k.astype(jnp.float32),
+                      v.astype(jnp.float32)))
+    n = (n * jnp.exp(logf + m - m_new)[..., None]
+         + jnp.exp(i_raw - m_new)[..., None] * k.astype(jnp.float32))
+    num = jnp.einsum("bhd,bhde->bhe", q.astype(jnp.float32), C) * scale
+    den = jnp.einsum("bhd,bhd->bh", q.astype(jnp.float32), n) * scale
+    den = jnp.maximum(jnp.abs(den), jnp.exp(-m_new))
+    return num / den[..., None], (C, n, m_new)
+
+
+def mlstm_block(p: dict, x: jax.Array, cfg: ArchConfig, *,
+                mode: str = "train", cache: Optional[dict] = None, pos=None):
+    b, s, d = x.shape
+    d_in, h, hd = _mdims(cfg)
+    u = jnp.einsum("bsd,di->bsi", x.astype(jnp.bfloat16),
+                   p["w_up"].astype(jnp.bfloat16))
+    u = constrain(u, "batch", "q_seq", "inner")
+    g = jax.nn.silu(jnp.einsum("bsd,di->bsi", x.astype(jnp.bfloat16),
+                               p["w_gate"].astype(jnp.bfloat16)))
+    q = jnp.einsum("bsi,ij->bsj", u, p["wq"].astype(jnp.bfloat16)).reshape(b, s, h, hd)
+    k = jnp.einsum("bsi,ij->bsj", u, p["wk"].astype(jnp.bfloat16)).reshape(b, s, h, hd)
+    v = jnp.einsum("bsi,ij->bsj", u, p["wv"].astype(jnp.bfloat16)).reshape(b, s, h, hd)
+    i_raw = jnp.einsum("bsi,ih->bsh", u.astype(jnp.float32), p["wi"].astype(jnp.float32))
+    logf = jax.nn.log_sigmoid(
+        jnp.einsum("bsi,ih->bsh", u.astype(jnp.float32),
+                   p["wf"].astype(jnp.float32)) + p["f_bias"])
+
+    if mode == "decode":
+        assert cache is not None
+        state = (cache["C"].astype(jnp.float32), cache["n"].astype(jnp.float32),
+                 cache["m"].astype(jnp.float32))
+        y, (C, n, m) = _mlstm_core_step(q[:, 0], k[:, 0], v[:, 0],
+                                        i_raw[:, 0], logf[:, 0], state)
+        y = y[:, None]
+        new_cache = {"C": C, "n": n, "m": m}
+    else:
+        state = _init_mstate(b, h, hd)
+        y, (C, n, m) = _mlstm_core_chunked(q, k, v, i_raw, logf, state)
+        new_cache = {"C": C, "n": n, "m": m} if mode == "prefill" else None
+
+    y = y.reshape(b, -1, d_in).astype(x.dtype)
+    y = rmsnorm(p["out_norm"], y, cfg.norm_eps) * g[:, :y.shape[1]]
+    out = jnp.einsum("bsi,id->bsd", y.astype(jnp.bfloat16),
+                     p["w_down"].astype(jnp.bfloat16)).astype(x.dtype)
+    return constrain(out, "batch", "q_seq", "embed"), new_cache
+
+
+def _init_mstate(b, h, hd):
+    return (jnp.zeros((b, h, hd, hd), jnp.float32),
+            jnp.zeros((b, h, hd), jnp.float32),
+            jnp.full((b, h), -1e30, jnp.float32))
+
+
+def init_mlstm_cache(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> dict:
+    d_in, h, hd = _mdims(cfg)
+    C, n, m = _init_mstate(batch, h, hd)
+    return {"C": C.astype(dtype), "n": n.astype(dtype), "m": m}
+
+
+# ----------------------------------------------------------------------------
+# sLSTM
+# ----------------------------------------------------------------------------
+
+def init_slstm(keys: KeyGen, cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    def gate():
+        return {
+            "w": Param(ninit(keys(), (d, h, hd), d), ("param_embed", None, None)),
+            "r": Param(ninit(keys(), (h, hd, hd), hd), (None, None, None)),
+            "b": Param(jnp.zeros((h, hd), jnp.float32), (None, None)),
+        }
+    return {
+        "i": gate(), "f": gate(), "z": gate(), "o": gate(),
+        "out_norm": Param(jnp.ones((d,), jnp.float32), ("embed",)),
+        "w_up": Param(ninit(keys(), (d, int(cfg.proj_factor * d)), d),
+                      ("param_embed", "inner")),
+        "w_down": Param(ninit(keys(), (int(cfg.proj_factor * d), d),
+                              int(cfg.proj_factor * d)), ("inner", "param_embed")),
+    }
+
+
+GATES = ("i", "f", "z", "o")
+
+
+def _slstm_wx(p: dict, x: jax.Array) -> jax.Array:
+    """Input projections for ALL timesteps at once: (4, B, S, H, hd).
+
+    §Perf optimization (xlstm train_4k): the baseline computed these four
+    d×d GEMVs *inside* the 4096-step scan, re-reading (and re-gathering,
+    under FSDP) every gate weight each timestep — the dominant memory
+    term of the whole 40-cell table. Hoisted, they are four large
+    MXU-friendly GEMMs; only the small per-head recurrent matvec R·h
+    remains sequential. Exact rewrite (same ops, reassociated).
+    """
+    return jnp.stack([
+        jnp.einsum("bsd,dhe->bshe", x.astype(jnp.bfloat16),
+                   p[g]["w"].astype(jnp.bfloat16),
+                   preferred_element_type=jnp.float32) + p[g]["b"]
+        for g in GATES])
+
+
+def _stacked_r(p: dict) -> jax.Array:
+    """(4, H, hd, hd) stacked recurrent weights — hoisted out of the scan
+    (loop-invariant) so each timestep issues ONE gate matvec instead of
+    four (§Perf xlstm iteration 2: fewer, larger per-step ops)."""
+    return jnp.stack([p[g]["r"].astype(jnp.float32) for g in GATES])
+
+
+def _slstm_step(r_all, wx_t, state):
+    """r_all: (4, H, hd, hd); wx_t: (4, B, H, hd) input pre-activations."""
+    c, n, h, m = state
+    pre = wx_t + jnp.einsum("bhe,ghef->gbhf", h, r_all)
+    i_r, f_r, z_r, o_r = pre[0], pre[1], pre[2], pre[3]
+    logf = jax.nn.log_sigmoid(f_r)
+    m_new = jnp.maximum(logf + m, i_r)
+    i_g = jnp.exp(i_r - m_new)
+    f_g = jnp.exp(logf + m - m_new)
+    c_new = f_g * c + i_g * jnp.tanh(z_r)
+    n_new = f_g * n + i_g
+    h_new = jax.nn.sigmoid(o_r) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_block(p: dict, x: jax.Array, cfg: ArchConfig, *,
+                mode: str = "train", cache: Optional[dict] = None, pos=None):
+    b, s, d = x.shape
+    h_, hd = cfg.n_heads, d // cfg.n_heads
+
+    from repro import flags as _flags
+    if _flags.BASELINE and mode != "decode":
+        # pre-hillclimb formulation: gate GEMVs inside the timestep scan
+        state0 = _init_sstate(b, h_, hd)
+
+        def step_legacy(st, x_t):
+            wx = jnp.stack([
+                jnp.einsum("bd,dhe->bhe", x_t.astype(jnp.float32),
+                           p[g]["w"].astype(jnp.float32)) + p[g]["b"]
+                for g in GATES])
+            st = _slstm_step(_stacked_r(p), wx, st)
+            return st, st[2]
+
+        state, hs = jax.lax.scan(step_legacy, state0, x.swapaxes(0, 1))
+        y = hs.swapaxes(0, 1).reshape(b, s, d)
+        new_cache = dict(zip(("c", "n", "h", "m"), state)) \
+            if mode == "prefill" else None
+        y = rmsnorm(p["out_norm"], y.astype(x.dtype), cfg.norm_eps)
+        u = jax.nn.gelu(jnp.einsum("bsd,di->bsi", y.astype(jnp.bfloat16),
+                                   p["w_up"].astype(jnp.bfloat16)))
+        out = jnp.einsum("bsi,id->bsd", u, p["w_down"].astype(jnp.bfloat16))
+        return out.astype(x.dtype), new_cache
+
+    r_all = _stacked_r(p)
+    if mode == "decode":
+        assert cache is not None
+        state = tuple(cache[k].astype(jnp.float32) for k in ("c", "n", "h", "m"))
+        wx = _slstm_wx(p, x)[:, :, 0]          # (4, B, H, hd)
+        state = _slstm_step(r_all, wx, state)
+        y = state[2].reshape(b, 1, d)
+        new_cache = dict(zip(("c", "n", "h", "m"), state))
+    else:
+        state0 = _init_sstate(b, h_, hd)
+        wx_all = _slstm_wx(p, x)               # (4, B, S, H, hd)
+
+        def step(st, wx_t):
+            st = _slstm_step(r_all, wx_t, st)
+            return st, st[2]
+
+        state, hs = jax.lax.scan(step, state0,
+                                 wx_all.transpose(2, 0, 1, 3, 4))
+        y = hs.swapaxes(0, 1).reshape(b, s, d)
+        new_cache = dict(zip(("c", "n", "h", "m"), state)) \
+            if mode == "prefill" else None
+
+    y = rmsnorm(p["out_norm"], y.astype(x.dtype), cfg.norm_eps)
+    u = jax.nn.gelu(jnp.einsum("bsd,di->bsi", y.astype(jnp.bfloat16),
+                               p["w_up"].astype(jnp.bfloat16)))
+    out = jnp.einsum("bsi,id->bsd", u, p["w_down"].astype(jnp.bfloat16))
+    return out.astype(x.dtype), new_cache
+
+
+def _init_sstate(b, h, hd):
+    z = jnp.zeros((b, h, hd), jnp.float32)
+    return (z, z, z, jnp.full((b, h, hd), -1e30, jnp.float32))
+
+
+def init_slstm_cache(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> dict:
+    h, hd = cfg.n_heads, cfg.d_model // cfg.n_heads
+    c, n, hh, m = _init_sstate(batch, h, hd)
+    return {"c": c, "n": n, "h": hh, "m": m}

@@ -1,0 +1,2 @@
+from repro.parallel.sharding import (constrain, logical_context, rules_for,
+                                     spec_for, tree_shardings, tree_specs)

@@ -1,0 +1,107 @@
+"""GPipe-style pipeline parallelism via shard_map + collective-permute.
+
+The layer stack is cut into ``n_stages`` contiguous groups; stage *i*'s
+parameters live on pipe-rank *i* (leading stacked dim sharded over the
+'pipe' mesh axis). A forward pass streams ``n_micro`` microbatches through
+the rotating ppermute ring: at tick *t*, rank 0 injects microbatch *t*
+while rank *s* works on microbatch *t-s* — the standard GPipe schedule
+with (n_stages-1) bubble ticks on each side.
+
+Differentiable end to end (jax autodiffs through ppermute), so a PP train
+step is ``jax.grad`` of ``pipeline_forward``-based loss. The tests verify
+PP-forward ≡ single-device forward and that grads match.
+
+This module exists as the optional 'pipe' axis feature (DESIGN.md §4);
+the production dry-run mesh is DP×TP per the brief.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+def split_stages(stacked_params, n_stages: int):
+    """(L, ...) stacked layer params -> (n_stages, L//n_stages, ...)."""
+    def re(x):
+        l = x.shape[0]
+        assert l % n_stages == 0, (l, n_stages)
+        return x.reshape(n_stages, l // n_stages, *x.shape[1:])
+    return jax.tree.map(re, stacked_params)
+
+
+def _stage_apply(layer_fn: Callable, stage_params, x):
+    """Run this stage's layer group (scan over its layers)."""
+    def body(h, lp):
+        return layer_fn(lp, h), None
+    x, _ = jax.lax.scan(body, x, stage_params)
+    return x
+
+
+def pipeline_forward(layer_fn: Callable, stage_params, mbs: jax.Array,
+                     *, axis: str = "pipe") -> jax.Array:
+    """Inside shard_map: stage_params is this rank's (1, L/S, ...) slice;
+    mbs is the full (n_micro, mb, ...) input (replicated). Returns
+    (n_micro, mb, ...) outputs (valid on every rank after the final
+    broadcast ppermute ring completes).
+    """
+    n_stages = jax.lax.axis_size(axis)
+    stage = jax.lax.axis_index(axis)
+    params = jax.tree.map(lambda x: x[0], stage_params)
+    n_micro = mbs.shape[0]
+    ticks = n_micro + n_stages - 1
+    fwd_perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+    def body(t, carry):
+        state, out = carry
+        # rank 0 injects microbatch t (clamped; bubble ticks discarded)
+        idx = jnp.clip(t, 0, n_micro - 1)
+        inject = jax.lax.dynamic_index_in_dim(mbs, idx, 0, keepdims=False)
+        x_in = jnp.where(stage == 0, inject, state)
+        y = _stage_apply(layer_fn, params, x_in)
+        # last stage banks microbatch t-(n_stages-1) when valid
+        out_idx = jnp.clip(t - (n_stages - 1), 0, n_micro - 1)
+        is_valid = (t >= n_stages - 1) & (stage == n_stages - 1)
+        upd = jnp.where(is_valid, y,
+                        jax.lax.dynamic_index_in_dim(out, out_idx, 0,
+                                                     keepdims=False))
+        out = jax.lax.dynamic_update_index_in_dim(out, upd, out_idx, 0)
+        state = jax.lax.ppermute(y, axis, fwd_perm)
+        return state, out
+
+    state0 = jnp.zeros_like(mbs[0])
+    out0 = jnp.zeros_like(mbs)
+    _, out = jax.lax.fori_loop(0, ticks, body, (state0, out0))
+    # broadcast banked outputs from the last stage to every rank
+    out = jax.lax.psum(
+        jnp.where(stage == n_stages - 1, out, jnp.zeros_like(out)), axis)
+    return out
+
+
+def make_pipelined_fn(layer_fn: Callable, mesh: Mesh, n_stages: int,
+                      axis: str = "pipe") -> Callable:
+    """Returns f(stacked_params, mbs) -> outputs, shard_mapped over
+    ``axis``. stacked_params: (L, ...) layer stack; mbs: (n_micro, mb, ...).
+    """
+    def spec_params(x):
+        return P(axis)   # leading stage dim sharded
+
+    def run(stage_params, mbs):
+        return pipeline_forward(layer_fn, stage_params, mbs, axis=axis)
+
+    def f(stacked_params, mbs):
+        staged = split_stages(stacked_params, n_stages)
+        pspecs = jax.tree.map(lambda _: P(axis), staged)
+        return shard_map(
+            run, mesh=mesh,
+            in_specs=(pspecs, P()),
+            out_specs=P(),
+            check_rep=False,
+        )(staged, mbs)
+
+    return f

@@ -1,0 +1,176 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallbacks.
+
+Models annotate parameters and activations with *logical* axis names;
+``rules_for(cfg, mesh, mode)`` binds those names to mesh axes per
+architecture, falling back when a dimension does not divide the mesh axis
+(pjit rejects uneven shards):
+
+* ``heads % tp != 0``  -> context parallelism: shard q-seq (train/prefill)
+  or cache kv-seq (decode) over 'model' instead of heads.
+* ``kv_heads % tp != 0`` -> KV replicated over 'model' (cache seq-sharded
+  for decode when also not head-sharded).
+* ``experts % tp != 0``  -> per-expert d_ff tensor parallelism instead of EP.
+
+Inside model code, ``constrain(x, *logical_axes)`` applies
+``with_sharding_constraint`` when a mesh context is active and is a no-op
+otherwise (CPU unit tests run without a mesh).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ArchConfig
+
+_TLS = threading.local()
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def rules_for(cfg: ArchConfig, mesh: Mesh, mode: str = "train") -> dict:
+    """Map logical axis names -> mesh axis (str / tuple / None)."""
+    tp = _axis_size(mesh, "model")
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dp = 1
+    for a in dp_axes:
+        dp *= _axis_size(mesh, a)
+
+    heads_ok = cfg.n_heads % tp == 0
+    kv_ok = cfg.n_kv_heads % tp == 0
+    hd_ok = cfg.head_dim % tp == 0
+    ep_ok = cfg.is_moe and cfg.n_experts % tp == 0
+    fsdp = mode == "train"  # shard params' embed dim over data for training
+    # serve-mode KV cache when kv heads don't divide TP: shard head_dim
+    # instead of the sequence — a seq-sharded cache turns every decode
+    # token-write into an SPMD select-rewrite of the whole local shard
+    # (§Perf cell C iteration 3); head_dim-sharded caches keep writes
+    # local and add only a tiny per-step score all-reduce.
+    from repro import flags as _flags
+    kv_on_hd = (mode != "train" and not kv_ok and hd_ok
+                and not _flags.BASELINE)
+
+    # serve mode with heads%tp != 0: no head-TP is possible, so the big
+    # attention matrices would replicate (llava: 24 GB/chip). Shard their
+    # d_model dim over 'model' instead (Megatron row/col-parallel); the
+    # per-step all-reduce is tiny next to weight residency.
+    serve_row_tp = mode != "train" and not heads_ok
+
+    rules: dict[str, Optional[object]] = {
+        "batch": dp_axes or None,
+        "embed": None,            # activation d_model stays unsharded
+        "param_embed": ("data" if (fsdp and "data" in mesh.shape)
+                        else "model" if serve_row_tp else None),
+        "ff": "model",
+        "vocab": "model",
+        "heads": "model" if heads_ok else None,
+        "kv_heads": "model" if kv_ok else None,
+        "head_dim": "model" if kv_on_hd else None,
+        "q_seq": None if heads_ok else "model",      # context parallelism
+        "kv_seq": None,
+        "cache_seq": ("model" if (_flags.BASELINE and mode != "train"
+                                  and not kv_ok) else None),
+        "experts": "model" if ep_ok else None,
+        "expert_ff": None if ep_ok else "model",
+        "layers": None,
+        "inner": "model",         # ssm/xlstm inner expansion dim
+        "ssm_heads": "model" if (cfg.ssm_state and
+                                 _ssm_heads(cfg) % tp == 0) else None,
+        "state": None,
+        "conv": None,
+        "seq": None,
+    }
+    return rules
+
+
+def _ssm_heads(cfg: ArchConfig) -> int:
+    return (cfg.ssm_expand * cfg.d_model) // cfg.ssm_head_dim
+
+
+def spec_for(axes: tuple, rules: dict) -> P:
+    parts = []
+    used = set()
+    for a in axes:
+        r = rules.get(a) if a is not None else None
+        # one mesh axis may bind only once per spec
+        if r is None:
+            parts.append(None)
+            continue
+        key = tuple(r) if isinstance(r, tuple) else (r,)
+        if any(k in used for k in key):
+            parts.append(None)
+            continue
+        used.update(key)
+        parts.append(r)
+    return P(*parts)
+
+
+def tree_specs(axes_tree, rules: dict):
+    return jax.tree.map(lambda axes: spec_for(axes, rules), axes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def tree_shardings(axes_tree, mesh: Mesh, rules: dict):
+    return jax.tree.map(
+        lambda axes: NamedSharding(mesh, spec_for(axes, rules)),
+        axes_tree, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def enforce_divisibility(sharding_tree, shape_tree):
+    """Drop sharding on dims the mesh axis doesn't divide (pjit rejects
+    uneven shards): whisper's 1500-frame cross cache, batch-1 long_500k
+    decode, etc. Applied wherever concrete shapes are known."""
+    def fix(sh, leaf):
+        if not isinstance(sh, NamedSharding) or not hasattr(leaf, "shape"):
+            return sh
+        spec = tuple(sh.spec) + (None,) * (len(leaf.shape) - len(sh.spec))
+        parts = []
+        for dim, entry in zip(leaf.shape, spec):
+            if entry is None:
+                parts.append(None)
+                continue
+            names = entry if isinstance(entry, tuple) else (entry,)
+            size = 1
+            for n in names:
+                size *= sh.mesh.shape[n]
+            parts.append(entry if dim % size == 0 else None)
+        return NamedSharding(sh.mesh, P(*parts))
+    return jax.tree.map(fix, sharding_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, NamedSharding))
+
+
+@contextlib.contextmanager
+def logical_context(mesh: Mesh, rules: dict):
+    prev = getattr(_TLS, "ctx", None)
+    _TLS.ctx = (mesh, rules)
+    try:
+        yield
+    finally:
+        _TLS.ctx = prev
+
+
+def constrain(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    ctx = getattr(_TLS, "ctx", None)
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = spec_for(tuple(axes), rules)
+    # drop entries the dim doesn't divide (batch-1 decode, odd seq, …)
+    parts = []
+    for dim, entry in zip(x.shape, tuple(spec) + (None,) * x.ndim):
+        if entry is None:
+            parts.append(None)
+            continue
+        names = entry if isinstance(entry, tuple) else (entry,)
+        size = 1
+        for n in names:
+            size *= mesh.shape[n]
+        parts.append(entry if dim % size == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*parts)))

@@ -1,0 +1,2 @@
+from repro.serving.engine import ServeEngine, Request, RequestState
+from repro.serving.scheduler import BatchScheduler

@@ -1,0 +1,169 @@
+"""Serving engine: slot-based KV cache + jitted prefill/decode.
+
+Continuous-batching design (vLLM-style, adapted to JAX's static shapes):
+
+* the engine owns a fixed pool of ``n_slots`` cache slots — one batched
+  KV/state cache pytree; every decode tick runs **one** jitted step over
+  the whole pool with *per-lane positions* (the model's decode path
+  accepts ``pos`` as a (B,) vector), so requests at different depths
+  batch together;
+* prefill runs per-request at a bucketed sequence length (powers of two:
+  compile once per bucket) and the resulting cache is scattered into a
+  free lane. Bucket-padding junk beyond the prompt is never attendable:
+  decode writes position ``pos`` before attending ``[0, pos]``;
+* Q8_0 weights (``core.quantize.quantize_tree``) serve through the same
+  forward — the paper's quantized serving variant is a flag, not a fork.
+
+The batch scheduler (scheduler.py) decides admission; this module is the
+mechanism: slot allocation, cache scatter, masked decode.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+EOS_DEFAULT = 2
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    tokens: list             # prompt token ids
+    max_new: int = 16
+    eos_id: int = EOS_DEFAULT
+
+
+@dataclasses.dataclass
+class RequestState:
+    req: Request
+    slot: int
+    pos: int                 # next position to write
+    out: list                # generated ids
+    done: bool = False
+
+
+def _bucket(n: int, buckets=(32, 64, 128, 256, 512, 1024, 2048)) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return -(-n // 2048) * 2048
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params: Any, *, n_slots: int = 8,
+                 max_len: int = 256, enc_len: int = 64):
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.cache = model.init_cache(n_slots, max_len, enc_len)
+        self.free = list(range(n_slots))
+        self.active: dict[int, RequestState] = {}   # slot -> state
+        self._tokens = np.zeros((n_slots, 1), np.int32)
+        # parked lanes decode at pos 0 harmlessly; results are discarded
+        self._pos = np.zeros((n_slots,), np.int32)
+        self._decode = self._build_decode()
+        self._prefill_fns: dict[int, Any] = {}
+
+    # ------------------------------------------------------------------
+    def _build_decode(self):
+        model = self.model
+
+        @jax.jit
+        def decode(params, cache, tokens, pos):
+            logits, new_cache = model.forward(
+                params, {"tokens": tokens}, mode="decode",
+                cache=cache, pos=pos)
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return nxt, new_cache
+
+        return decode
+
+    def _prefill_fn(self, bucket: int):
+        if bucket not in self._prefill_fns:
+            model, max_len = self.model, self.max_len
+
+            @jax.jit
+            def prefill(params, tokens):
+                cache = model.init_cache(1, max_len)
+                logits, cache = model.forward(params, {"tokens": tokens},
+                                              mode="prefill", cache=cache)
+                return logits, cache
+
+            self._prefill_fns[bucket] = prefill
+        return self._prefill_fns[bucket]
+
+    # ------------------------------------------------------------------
+    def admit(self, req: Request) -> Optional[RequestState]:
+        """Prefill a request into a free slot; None if the pool is full."""
+        if not self.free:
+            return None
+        n = len(req.tokens)
+        if n + req.max_new >= self.max_len:
+            raise ValueError(f"request {req.uid} too long for engine "
+                             f"({n}+{req.max_new} vs {self.max_len})")
+        slot = self.free.pop()
+        bucket = min(_bucket(n), self.max_len)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :n] = req.tokens
+        logits, cache1 = self._prefill_fn(bucket)(self.params,
+                                                  jnp.asarray(toks))
+        self.cache = _scatter_slot(self.cache, cache1, slot)
+        first = int(np.argmax(np.asarray(logits)[0, n - 1]))
+        st = RequestState(req=req, slot=slot, pos=n, out=[first])
+        self._tokens[slot, 0] = first
+        self._pos[slot] = n
+        if first == req.eos_id or len(st.out) >= req.max_new:
+            st.done = True
+            self.free.append(slot)
+        else:
+            self.active[slot] = st
+        return st
+
+    # ------------------------------------------------------------------
+    def step(self) -> list[RequestState]:
+        """One batched decode tick over the whole pool."""
+        if not self.active:
+            return []
+        nxt, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(self._tokens),
+            jnp.asarray(self._pos))
+        nxt = np.asarray(nxt)
+        finished = []
+        for slot, st in list(self.active.items()):
+            tok = int(nxt[slot])
+            st.out.append(tok)
+            st.pos += 1
+            self._tokens[slot, 0] = tok
+            self._pos[slot] = st.pos
+            if tok == st.req.eos_id or len(st.out) >= st.req.max_new \
+                    or st.pos >= self.max_len - 1:
+                st.done = True
+                self.active.pop(slot)
+                self.free.append(slot)
+                finished.append(st)
+        return finished
+
+    @property
+    def n_active(self) -> int:
+        return len(self.active)
+
+
+def _scatter_slot(pool: Any, one: Any, slot: int) -> Any:
+    """Write a batch-1 cache pytree into lane ``slot`` of the pool.
+
+    Every cache leaf is (stacked_layers, B, ...) — transformer segments,
+    encdec layers, and tails all stack with jnp.broadcast_to /scan — so
+    the slot axis is axis 1 throughout."""
+    def scat(p, o):
+        assert p.shape[0] == o.shape[0] and o.shape[1] == 1, (p.shape, o.shape)
+        return jax.lax.dynamic_update_slice_in_dim(
+            p, o.astype(p.dtype), slot, axis=1)
+    return jax.tree.map(scat, pool, one)

@@ -1,0 +1,85 @@
+"""Continuous-batching admission scheduler.
+
+Policy layer over ServeEngine: FCFS queue with slot-aware admission and
+optional prefill/decode interleave ratio. One ``tick()`` =
+
+  1. admit waiting requests while slots are free (each admit = one
+     bucketed prefill);
+  2. one batched decode step over all active slots;
+  3. collect finished requests.
+
+Metrics track queue latency, time-to-first-token (in ticks), and slot
+occupancy — the quantities a production scheduler optimizes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+from repro.serving.engine import Request, RequestState, ServeEngine
+
+
+@dataclasses.dataclass
+class SchedMetrics:
+    ticks: int = 0
+    admitted: int = 0
+    completed: int = 0
+    occupancy_sum: float = 0.0
+    queue_wait_sum: int = 0     # ticks spent waiting, summed over requests
+    ttft_sum: int = 0           # ticks from submit to first token
+
+    @property
+    def mean_occupancy(self) -> float:
+        return self.occupancy_sum / max(self.ticks, 1)
+
+    @property
+    def mean_ttft(self) -> float:
+        return self.ttft_sum / max(self.admitted, 1)
+
+
+class BatchScheduler:
+    def __init__(self, engine: ServeEngine, max_admit_per_tick: int = 2):
+        self.engine = engine
+        self.max_admit_per_tick = max_admit_per_tick
+        self.queue: deque[tuple[Request, int]] = deque()   # (req, t_submit)
+        self.metrics = SchedMetrics()
+        self.results: dict[int, RequestState] = {}
+
+    def submit(self, req: Request) -> None:
+        self.queue.append((req, self.metrics.ticks))
+
+    def tick(self) -> list[RequestState]:
+        m = self.metrics
+        # 1. admission
+        admitted = 0
+        while (self.queue and self.engine.free
+               and admitted < self.max_admit_per_tick):
+            req, t_submit = self.queue.popleft()
+            st = self.engine.admit(req)
+            assert st is not None
+            m.admitted += 1
+            m.queue_wait_sum += m.ticks - t_submit
+            m.ttft_sum += m.ticks - t_submit   # first token at admit
+            admitted += 1
+            if st.done:
+                m.completed += 1
+                self.results[req.uid] = st
+        # 2. decode tick
+        finished = self.engine.step()
+        for st in finished:
+            m.completed += 1
+            self.results[st.req.uid] = st
+        m.ticks += 1
+        m.occupancy_sum += self.engine.n_active / self.engine.n_slots
+        return finished
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> None:
+        while (self.queue or self.engine.n_active) and \
+                self.metrics.ticks < max_ticks:
+            self.tick()
+
+    @property
+    def drained(self) -> bool:
+        return not self.queue and self.engine.n_active == 0

@@ -1,0 +1,4 @@
+from repro.train.step import (cross_entropy, make_train_step,
+                              make_prefill_step, make_decode_step,
+                              TrainState, init_train_state)
+from repro.train.loop import TrainLoop, LoopConfig

@@ -1,0 +1,308 @@
+"""Step builders: train (value_and_grad + AdamW), prefill, decode.
+
+These are the functions the launcher jits and the multi-pod dry-run lowers.
+Sharding is carried two ways at once:
+
+* **in/out shardings** for the jit boundary, derived from each model's
+  logical parameter axes via ``parallel.sharding.tree_shardings``;
+* **internal constraints** via ``logical_context`` so every
+  ``constrain(...)`` call inside the model binds to the active mesh.
+
+Gradient accumulation is a ``lax.scan`` over microbatches (keeps the HLO
+compact and the peak activation memory at 1/n_micro). The optional
+``dp_compressed`` variant swaps the DP gradient mean for the int8
+error-feedback compressed all-reduce (parallel.collectives) inside a
+``shard_map`` — the paper-era "gradient compression" distributed trick.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ArchConfig
+from repro.models.model import Model, input_specs, SHAPES
+from repro.optim import adamw
+from repro.parallel.sharding import (enforce_divisibility, logical_context,
+                                     rules_for, spec_for, tree_shardings)
+
+TrainState = dict  # {"params": tree, "opt": {m, v, step}}
+
+PREFILL_CACHE_PAD = 16   # decode headroom; keeps cache_seq TP-divisible
+
+
+def prefill_cache_len(seq: int) -> int:
+    return seq + PREFILL_CACHE_PAD
+
+
+# ----------------------------------------------------------------------------
+# Loss
+# ----------------------------------------------------------------------------
+
+def cross_entropy(logits: jax.Array, targets: jax.Array,
+                  ignore_id: int = -1) -> jax.Array:
+    """Token-mean CE. logits: (B, S, V) any float; targets: (B, S) int32.
+    Stays in f32; the vocab axis may be model-sharded (GSPMD reduces)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.clip(targets, 0)
+    picked = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+    nll = lse - picked
+    mask = (targets != ignore_id).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def _loss_fn(model: Model, params, batch) -> tuple[jax.Array, dict]:
+    logits, _ = model.forward(params, batch, mode="train")
+    tgt = batch["targets"]
+    # VLM: logits cover img-prefix + text; targets already full-seq length.
+    if logits.shape[1] != tgt.shape[1]:
+        tgt = tgt[:, :logits.shape[1]]
+    loss = cross_entropy(logits, tgt)
+    return loss, {"loss": loss}
+
+
+# ----------------------------------------------------------------------------
+# Train step
+# ----------------------------------------------------------------------------
+
+def init_train_state(model: Model, key) -> TrainState:
+    params = model.init_values(key)
+    return {"params": params, "opt": adamw.init_state(params)}
+
+
+def state_axes(model: Model) -> dict:
+    """Logical-axes tree matching init_train_state's structure."""
+    axes = model.param_axes()
+    return {"params": axes, "opt": {"m": axes, "v": axes, "step": ()}}
+
+
+def state_shardings(model: Model, mesh: Mesh, rules: dict):
+    import jax as _jax
+    shapes = _jax.eval_shape(lambda k: init_train_state(model, k),
+                             _jax.random.key(0))
+    return enforce_divisibility(
+        tree_shardings(state_axes(model), mesh, rules), shapes)
+
+
+def batch_shardings(cfg: ArchConfig, shape: str, mesh: Mesh, rules: dict):
+    """NamedShardings for the input batch of a (arch, shape) cell."""
+    specs = input_specs(cfg, shape)
+
+    def spec_of(name, leaf):
+        if leaf.ndim == 0:
+            return P()
+        axes = ("batch",) + (None,) * (leaf.ndim - 1)
+        return spec_for(axes, rules)
+
+    out = {k: NamedSharding(mesh, spec_of(k, v)) for k, v in specs.items()}
+    return enforce_divisibility(out, specs)
+
+
+def make_train_step(model: Model, opt_cfg: adamw.AdamWConfig, *,
+                    mesh: Optional[Mesh] = None,
+                    rules: Optional[dict] = None,
+                    n_micro: int = 1) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``n_micro > 1`` accumulates gradients over microbatches with lax.scan
+    (batch must divide evenly)."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: _loss_fn(model, p, batch), has_aux=True)(params)
+
+    def train_step(state: TrainState, batch: dict):
+        params = state["params"]
+        if n_micro == 1:
+            (loss, aux), grads = grads_of(params, batch)
+        else:
+            def micro(carry, mb):
+                (l, a), g = grads_of(params, mb)
+                acc = jax.tree.map(jnp.add, carry, g)
+                return acc, l
+
+            def reshape(x):
+                b = x.shape[0]
+                assert b % n_micro == 0, (b, n_micro)
+                return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+
+            mbs = jax.tree.map(reshape, batch)
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                params)
+            grads, losses = jax.lax.scan(micro, zero, mbs)
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            loss = jnp.mean(losses)
+            aux = {"loss": loss}
+        new_params, new_opt, metrics = adamw.apply_updates(
+            params, grads, state["opt"], opt_cfg)
+        metrics.update(aux)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    if mesh is None:
+        return train_step
+
+    def train_step_meshed(state, batch):
+        with logical_context(mesh, rules):
+            return train_step(state, batch)
+
+    return train_step_meshed
+
+
+def make_compressed_train_step(model: Model, opt_cfg: adamw.AdamWConfig,
+                               mesh: Mesh, rules: dict) -> Callable:
+    """DP-compressed variant: per-shard gradients are reduced over the
+    data axes with int8 error-feedback compression
+    (parallel.collectives.compressed_psum) instead of the implicit f32
+    all-reduce — ~3.9x less DP wire traffic, bias-free over steps via
+    error feedback. State gains an 'err' tree (f32 residuals).
+
+    Layout contract: params are REPLICATED over the data axes inside the
+    shard_map (batch is sharded); TP axes are not mapped here, so this
+    variant composes with pure-DP/multi-pod meshes (the cross-pod DCN
+    all-reduce is exactly where compression pays).
+    """
+    from jax.experimental.shard_map import shard_map
+    from repro.parallel.collectives import compressed_psum
+
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+    def local_grads(params, batch):
+        (loss, _), grads = jax.value_and_grad(
+            lambda p: _loss_fn(model, p, batch), has_aux=True)(params)
+        return loss, grads
+
+    def step(state, batch):
+        params, err = state["params"], state["err"]
+
+        def shard_fn(params, err, batch):
+            loss, grads = local_grads(params, batch)
+            # err leaves carry a leading per-shard dim: (n_dp, *shape)
+            err_local = jax.tree.map(lambda e: e[0], err)
+            mean, new_err = compressed_psum(grads, err_local, dp_axes)
+            loss = jax.lax.pmean(loss, dp_axes)
+            return loss, mean, jax.tree.map(lambda e: e[None], new_err)
+
+        loss, grads, new_err = shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(P(), P(dp_axes), P(dp_axes)),
+            out_specs=(P(), P(), P(dp_axes)),
+            check_rep=False,
+        )(params, err, batch)
+        new_params, new_opt, metrics = adamw.apply_updates(
+            params, grads, state["opt"], opt_cfg)
+        metrics["loss"] = loss
+        return {"params": new_params, "opt": new_opt,
+                "err": new_err}, metrics
+
+    return step
+
+
+def init_compressed_state(model: Model, key, mesh: Mesh) -> TrainState:
+    """Train state + per-DP-shard error-feedback residuals."""
+    state = init_train_state(model, key)
+    n_dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape:
+            n_dp *= mesh.shape[a]
+    state["err"] = jax.tree.map(
+        lambda p: jnp.zeros((n_dp,) + p.shape, jnp.float32),
+        state["params"])
+    return state
+
+
+# ----------------------------------------------------------------------------
+# Serving steps (prefill / decode) — these are what decode_* shapes lower
+# ----------------------------------------------------------------------------
+
+def make_prefill_step(model: Model, *, mesh: Optional[Mesh] = None,
+                      rules: Optional[dict] = None) -> Callable:
+    """prefill_step(params, batch) -> (last_logits, cache)."""
+
+    def prefill(params, batch):
+        seq = batch["tokens"].shape[1]
+        b = batch["tokens"].shape[0]
+        cache = model.init_cache(b, prefill_cache_len(seq))
+        logits, cache = model.forward(params, batch, mode="prefill",
+                                      cache=cache)
+        return logits[:, -1], cache
+
+    if mesh is None:
+        return prefill
+
+    def prefill_meshed(params, batch):
+        with logical_context(mesh, rules):
+            return prefill(params, batch)
+
+    return prefill_meshed
+
+
+def make_decode_step(model: Model, *, mesh: Optional[Mesh] = None,
+                     rules: Optional[dict] = None,
+                     sample: bool = False) -> Callable:
+    """decode_step(params, cache, tokens, pos[, rng]) ->
+    (next_tokens|logits, new_cache). ``tokens``: (B, 1); ``pos``: scalar."""
+
+    def decode(params, cache, tokens, pos):
+        logits, new_cache = model.forward(
+            params, {"tokens": tokens}, mode="decode", cache=cache, pos=pos)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return (nxt if sample else logits[:, -1]), new_cache
+
+    if mesh is None:
+        return decode
+
+    def decode_meshed(params, cache, tokens, pos):
+        with logical_context(mesh, rules):
+            return decode(params, cache, tokens, pos)
+
+    return decode_meshed
+
+
+# ----------------------------------------------------------------------------
+# Cache sharding (decode cells)
+# ----------------------------------------------------------------------------
+
+# (family, leaf) -> logical axes; family = enclosing cache-kind key written
+# by transformer._block_cache / encdec.init_encdec_cache.
+_CACHE_AXES = {
+    ("kv", "k"): ("batch", "cache_seq", "kv_heads", "head_dim"),
+    ("kv", "v"): ("batch", "cache_seq", "kv_heads", "head_dim"),
+    ("ssm", "conv"): ("batch", None, "inner"),
+    ("ssm", "h"): ("batch", "ssm_heads", None, None),
+    ("mstate", "C"): ("batch", "heads", None, None),
+    ("mstate", "n"): ("batch", "heads", None),
+    ("mstate", "m"): ("batch", "heads"),
+    ("sstate", "c"): ("batch", "heads", None),
+    ("sstate", "n"): ("batch", "heads", None),
+    ("sstate", "h"): ("batch", "heads", None),
+    ("sstate", "m"): ("batch", "heads"),
+}
+_FAMILIES = {"kv", "ssm", "mstate", "sstate", "self", "cross"}
+
+
+def cache_shardings(model: Model, batch: int, max_len: int, mesh: Mesh,
+                    rules: dict, enc_len: int = 1500):
+    """NamedShardings for the KV/state cache pytree. Leading stacked-layer
+    dims (scan segments) stay unsharded."""
+    specs = model.cache_specs(batch, max_len, enc_len)
+
+    def shard_one(path, leaf):
+        keys = [str(getattr(k, "key", k)) for k in path]
+        fam = next((k for k in reversed(keys[:-1]) if k in _FAMILIES), None)
+        if fam in ("self", "cross"):   # encdec caches hold raw k/v dicts
+            fam = "kv"
+        axes = _CACHE_AXES.get((fam, keys[-1]))
+        if axes is None:
+            full = (None,) * leaf.ndim
+        else:
+            full = (None,) * (leaf.ndim - len(axes)) + axes
+        return NamedSharding(mesh, spec_for(full, rules))
+
+    out = jax.tree_util.tree_map_with_path(shard_one, specs)
+    return enforce_divisibility(out, specs)

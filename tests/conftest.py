@@ -1,0 +1,12 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches
+must see 1 device; distributed tests fork subprocesses that set their own
+device counts (see tests/test_distributed.py)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,96 @@
+"""Energy model (C5): calibration residuals, PDP minimum, platform table."""
+
+import pytest
+
+from repro import hw
+from repro.core.energy import (calibrate_imax, imax_power, interp_power,
+                               lmm_sweep, pdp, platform_pdp_table)
+from repro.core.workload import WHISPER_TINY, whisper_workload
+
+
+def _calib():
+    w16 = whisper_workload(WHISPER_TINY, dtype="f16")
+    w8 = whisper_workload(WHISPER_TINY, dtype="q8_0")
+    return w16, w8, calibrate_imax(w16, w8)
+
+
+def test_calibration_fits_fp16_observables():
+    _, _, calib = _calib()
+    # fit observables close by construction
+    assert abs(calib.residuals["latency_fp16(fit)"]) < 0.02
+    assert abs(calib.residuals["exec_share_fp16(fit)"]) < 0.02
+
+
+def test_calibration_predicts_q8_within_tolerance():
+    """Q8_0 rows are cross-validation predictions (DESIGN.md §2); the
+    model should land within ~35% of the paper's measured values."""
+    _, _, calib = _calib()
+    assert abs(calib.residuals["latency_q8(pred)"]) < 0.35
+    assert abs(calib.residuals["exec_share_q8(pred)"]) < 0.35
+
+
+def test_pdp_minimum_at_32kb():
+    """Paper Fig 6: PDP minimum at 32 KB for both models."""
+    w16, w8, calib = _calib()
+    for work, kern in ((w16, "fp16"), (w8, "q8_0")):
+        pts = lmm_sweep(work, calib.model, kern)
+        best = min(pts, key=lambda p: p.pdp_j)
+        assert best.budget_bytes == 32 * 1024, \
+            [(p.budget_bytes, p.pdp_j) for p in pts]
+
+
+def test_lmm_16kb_latency_degrades():
+    """Fig 6: 16 KB forces CPU fallbacks -> latency worse than 32 KB."""
+    w16, _, calib = _calib()
+    pts = {p.budget_bytes: p for p in lmm_sweep(w16, calib.model, "fp16")}
+    assert pts[16 * 1024].latency_s > pts[32 * 1024].latency_s
+
+
+def test_power_interpolation_matches_table2():
+    assert imax_power(32 * 1024, "fp16") == pytest.approx(0.647)
+    assert imax_power(32 * 1024, "q8_0") == pytest.approx(1.32)
+    assert imax_power(32 * 1024, "fp16", lanes=2) == pytest.approx(1.294)
+    # monotone in size
+    ps = [imax_power(k * 1024, "fp16") for k in (16, 32, 64, 128, 256)]
+    assert all(a <= b for a, b in zip(ps, ps[1:]))
+
+
+def test_pdp_eq1():
+    assert pdp(11.1, 1.32) == pytest.approx(14.652)
+
+
+def test_platform_table_reproduces_paper_ratios():
+    """Paper headline: IMAX Q8_0 PDP 12.6 J -> 1.90x vs Orin, 9.83x vs
+    4090. The published Fig-5 values use measured phase power (their
+    §IV-A caveat); the ratios are checked on the published numbers and
+    our Eq-1 model lands within 15% of Eq-1-with-nominal-constants."""
+    from repro import hw
+    w16, w8, calib = _calib()
+    rows = platform_pdp_table(w16, w8, calib)
+    by = {(r["device"], r["kernel"]): r for r in rows}
+    pub = hw.PAPER_PDP_J
+    assert pub[("jetson-agx-orin", "q8_0")] / pub[("imax3-28nm", "q8_0")] \
+        == pytest.approx(1.90, rel=0.02)
+    assert pub[("rtx-4090", "q8_0")] / pub[("imax3-28nm", "q8_0")] \
+        == pytest.approx(9.83, rel=0.02)
+    eq1_nominal = (hw.PAPER_LATENCY_S[("imax3-28nm", "q8_0")]
+                   * hw.IMAX_POWER_Q8_W[32 * 1024])
+    assert by[("imax3-28nm(model)", "q8_0")]["pdp_j"] == \
+        pytest.approx(eq1_nominal, rel=0.15)
+
+
+def test_exec_share_shows_compute_bound():
+    """Fig 7: EXEC dominates accel time (>=60% fp16, higher for q8_0)."""
+    from repro.core.offload import execution_breakdown
+    w16, w8, calib = _calib()
+    bd16 = execution_breakdown(w16, calib.model, 32 * 1024)
+    bd8 = execution_breakdown(w8, calib.model, 32 * 1024)
+    assert bd16.exec_share > 0.55
+    assert bd8.exec_share > bd16.exec_share   # Q8_0 cuts LOAD, raising EXEC
+
+
+def test_interp_power_bounds():
+    t = {16384: 1.0, 32768: 2.0}
+    assert interp_power(t, 8000) == 1.0
+    assert interp_power(t, 50000) == 2.0
+    assert interp_power(t, 24576) == pytest.approx(1.5)

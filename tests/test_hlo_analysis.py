@@ -1,0 +1,122 @@
+"""HLO cost model: scan trip counts, dot flops, collectives, narrowing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.hlo import analyze_hlo, _shape_bytes, _shape_dims
+
+
+def _compile_text(f, *specs):
+    return jax.jit(f).lower(*specs).compile().as_text()
+
+
+def test_shape_parsing():
+    assert _shape_bytes("bf16[4,8]{1,0}") == 64
+    assert _shape_bytes("(f32[2,2], s8[4])") == 20
+    assert _shape_bytes("f32[]") == 4
+    assert _shape_dims("f32[3,5,7]{2,1,0}") == [3, 5, 7]
+
+
+def test_plain_matmul_flops():
+    f = lambda a, b: a @ b
+    a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    b = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+    c = analyze_hlo(_compile_text(f, a, b))
+    assert c.flops == pytest.approx(2 * 64 * 128 * 32, rel=0.05)
+
+
+def test_scan_flops_multiplied_by_trip_count():
+    def f(x, ws):
+        return jax.lax.scan(lambda h, w: (jnp.tanh(h @ w), None), x, ws)[0]
+    x = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((12, 64, 64), jnp.float32)
+    c = analyze_hlo(_compile_text(f, x, ws))
+    want = 2 * 32 * 64 * 64 * 12
+    assert want <= c.flops <= want * 1.1
+    assert not c.unknown_trip_loops
+
+
+def test_nested_scan_multiplies():
+    def inner(h, w):
+        return jax.lax.scan(lambda hh, _: (jnp.tanh(hh @ w), None), h,
+                            None, length=3)[0]
+    def f(x, ws):
+        return jax.lax.scan(lambda h, w: (inner(h, w), None), x, ws)[0]
+    x = jax.ShapeDtypeStruct((16, 32), jnp.float32)
+    ws = jax.ShapeDtypeStruct((4, 32, 32), jnp.float32)
+    c = analyze_hlo(_compile_text(f, x, ws))
+    want = 2 * 16 * 32 * 32 * 3 * 4
+    assert want * 0.9 <= c.flops <= want * 1.2, (c.flops, want)
+
+
+def test_scan_weight_slice_bytes_narrowed():
+    """Stacked weights read via in-loop dynamic-slice must charge one
+    slice per trip, not the whole stack per trip."""
+    def f(x, ws):
+        return jax.lax.scan(lambda h, w: (h @ w, None), x, ws)[0]
+    x = jax.ShapeDtypeStruct((8, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((100, 64, 64), jnp.float32)
+    c = analyze_hlo(_compile_text(f, x, ws))
+    full_stack_per_trip = 100 * (100 * 64 * 64 * 4)
+    assert c.bytes < full_stack_per_trip / 5, c.bytes
+
+
+def test_batched_dot_flops():
+    f = lambda a, b: jnp.einsum("bik,bkj->bij", a, b)
+    a = jax.ShapeDtypeStruct((4, 16, 32), jnp.float32)
+    b = jax.ShapeDtypeStruct((4, 32, 8), jnp.float32)
+    c = analyze_hlo(_compile_text(f, a, b))
+    assert c.flops == pytest.approx(2 * 4 * 16 * 32 * 8, rel=0.05)
+
+
+def test_gather_bytes_sparse():
+    """Embedding lookups charge output-size, not table-size."""
+    f = lambda t, i: jnp.take(t, i, axis=0)
+    t = jax.ShapeDtypeStruct((50_000, 64), jnp.float32)
+    i = jax.ShapeDtypeStruct((8,), jnp.int32)
+    c = analyze_hlo(_compile_text(f, t, i))
+    assert c.bytes < 50_000 * 64 * 4 / 10, c.bytes
+
+
+def test_collectives_detected_in_subprocess():
+    import subprocess, sys
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys; sys.path.insert(0, "src")
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.analysis.hlo import analyze_hlo
+mesh = jax.make_mesh((4,), ("d",))
+def f(x):
+    return jnp.sum(x, axis=0)
+x = jax.ShapeDtypeStruct((64, 32), jnp.float32)
+comp = jax.jit(f, in_shardings=NamedSharding(mesh, P("d")),
+               out_shardings=NamedSharding(mesh, P())).lower(x).compile()
+c = analyze_hlo(comp.as_text())
+assert "all-reduce" in c.collectives or "all-gather" in c.collectives, \\
+    c.collectives
+print("OK", c.collectives)
+"""
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, cwd="/root/repo", timeout=120)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "OK" in r.stdout
+
+
+def test_roofline_terms_and_dominance():
+    from repro.analysis.roofline import roofline_from_hlocost
+    from repro.analysis.hlo import HloCost
+    hc = HloCost(flops=1e12, bytes=1e10, collective_bytes=1e8,
+                 collectives={"all-reduce": 1e8}, collective_counts={},
+                 unknown_trip_loops=[], unknown_customcalls=[])
+    rl = roofline_from_hlocost(hc, arch="x", shape="y", mesh="16x16",
+                               chips=256, model_flops=2e14)
+    assert rl.compute_s == pytest.approx(1e12 / 197e12)
+    assert rl.memory_s == pytest.approx(1e10 / 819e9)
+    assert rl.collective_s == pytest.approx(1e8 / 50e9)
+    assert rl.dominant == "memory"
+    assert rl.hlo_flops == pytest.approx(1e12 * 256)
+    assert rl.useful_flops_ratio == pytest.approx(2e14 / (1e12 * 256))

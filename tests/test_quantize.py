@@ -1,0 +1,99 @@
+"""Q8_0 quantization: round-trip bound, packing accounting, properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantize import (QBLOCK, Q8_BYTES_PER_ELEM, Q8Tensor,
+                                 dequantize_q8_0, pad_to_block,
+                                 quantization_error_bound, quantize_q8_0,
+                                 quantize_tree, stored_bytes)
+
+
+def test_roundtrip_error_within_bound():
+    x = jax.random.normal(jax.random.key(0), (8, 256), jnp.float32)
+    t = quantize_q8_0(x)
+    err = jnp.abs(dequantize_q8_0(t) - x)
+    # bound: d/2 per element + fp16 scale representation error (~2^-11 rel)
+    bound = jnp.repeat(quantization_error_bound(t), QBLOCK, axis=-1)
+    bound = bound * 1.01 + 1e-6
+    assert bool(jnp.all(err <= bound)), float(jnp.max(err - bound))
+
+
+def test_quantize_shapes_and_dtypes():
+    x = jnp.ones((4, 64), jnp.bfloat16)
+    t = quantize_q8_0(x)
+    assert t.q.shape == (4, 64) and t.q.dtype == jnp.int8
+    assert t.scale.shape == (4, 2) and t.scale.dtype == jnp.float16
+
+
+def test_quantize_along_axis():
+    x = jax.random.normal(jax.random.key(1), (64, 5), jnp.float32)
+    t = quantize_q8_0(x, axis=0)
+    assert t.q.shape == (64, 5) and t.scale.shape == (2, 5)
+    np.testing.assert_allclose(np.asarray(dequantize_q8_0(t, axis=0)),
+                               np.asarray(x), atol=0.05)
+
+
+def test_zero_block_is_exact():
+    x = jnp.zeros((1, 32))
+    t = quantize_q8_0(x)
+    assert float(jnp.max(jnp.abs(dequantize_q8_0(t)))) == 0.0
+
+
+def test_non_multiple_k_raises_and_pad_fixes():
+    x = jnp.ones((2, 33))
+    with pytest.raises(ValueError):
+        quantize_q8_0(x)
+    xp = pad_to_block(x)
+    assert xp.shape == (2, 64)
+    quantize_q8_0(xp)  # no raise
+
+
+def test_packed_bytes_ratio():
+    x = jnp.ones((16, 320))
+    t = quantize_q8_0(x)
+    assert t.nbytes_packed == int(x.size * Q8_BYTES_PER_ELEM)
+
+
+def test_stored_bytes_policies():
+    # baseline pads each row to 32B; optimized packs densely
+    assert stored_bytes((4, 10), "f16", "baseline") == 4 * 32
+    assert stored_bytes((4, 10), "f16", "optimized") == 4 * 20
+    assert stored_bytes((1, 32), "q8_0", "optimized") == 34
+
+
+def test_quantize_tree_selectivity():
+    params = {"w": jnp.ones((64, 8)), "norm": jnp.ones((8,)),
+              "odd": jnp.ones((33, 5))}
+    qt = quantize_tree(params)
+    assert isinstance(qt["w"], Q8Tensor)          # K=64 divisible
+    assert not isinstance(qt["norm"], Q8Tensor)   # 1-D skipped
+    assert not isinstance(qt["odd"], Q8Tensor)    # K=33 not divisible
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 8), st.floats(0.01, 100.0))
+def test_property_error_bound(rows, blocks, scale):
+    x = (np.random.RandomState(rows * 31 + blocks).randn(rows, blocks * 32)
+         * scale).astype(np.float32)
+    t = quantize_q8_0(jnp.asarray(x))
+    err = np.abs(np.asarray(dequantize_q8_0(t)) - x)
+    bound = np.repeat(np.asarray(quantization_error_bound(t)), 32, axis=-1)
+    assert (err <= bound * 1.01 + 1e-6).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 6))
+def test_property_idempotent(seed):
+    """quantize(dequantize(quantize(x))) == quantize(x) (fixed point)."""
+    x = np.random.RandomState(seed).randn(2, 64).astype(np.float32)
+    t1 = quantize_q8_0(jnp.asarray(x))
+    x2 = dequantize_q8_0(t1)
+    t2 = quantize_q8_0(x2)
+    np.testing.assert_array_equal(np.asarray(t1.q), np.asarray(t2.q))
+    np.testing.assert_allclose(np.asarray(t1.scale, dtype=np.float32),
+                               np.asarray(t2.scale, dtype=np.float32),
+                               rtol=1e-2)

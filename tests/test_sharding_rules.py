@@ -1,0 +1,112 @@
+"""Sharding-rule unit tests: per-arch fallbacks, divisibility, specs."""
+
+import subprocess
+import sys
+
+import pytest
+
+from repro.configs import get_config
+from jax.sharding import PartitionSpec as P
+
+
+class _FakeMesh:
+    """Duck-typed mesh: rules_for only reads .shape."""
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+
+
+def _rules(arch, mode="train", **axes):
+    from repro.parallel.sharding import rules_for
+    return rules_for(get_config(arch), _FakeMesh(**axes), mode=mode)
+
+
+def test_head_sharding_when_divisible():
+    r = _rules("deepseek-7b", data=16, model=16)      # 32H % 16 == 0
+    assert r["heads"] == "model" and r["kv_heads"] == "model"
+    assert r["q_seq"] is None
+
+
+def test_context_parallel_fallback():
+    r = _rules("gemma2-2b", data=16, model=16)        # 8H % 16 != 0
+    assert r["heads"] is None
+    assert r["q_seq"] == "model"                      # CP instead
+
+
+def test_serve_row_tp_for_indivisible_heads():
+    r = _rules("llava-next-34b", mode="serve", data=16, model=16)  # 56H
+    assert r["param_embed"] == "model"                # Megatron row/col
+    r_train = _rules("llava-next-34b", mode="train", data=16, model=16)
+    assert r_train["param_embed"] == "data"           # FSDP in training
+
+
+def test_serve_kv_on_head_dim():
+    r = _rules("whisper-base", mode="serve", data=16, model=16)  # kv=8
+    assert r["head_dim"] == "model"                   # not seq-sharded
+    assert r["cache_seq"] is None
+
+
+def test_ep_vs_expert_tp():
+    r = _rules("qwen3-moe-30b-a3b", data=16, model=16)   # 128e % 16 == 0
+    assert r["experts"] == "model" and r["expert_ff"] is None
+    r2 = _rules("mixtral-8x7b", data=16, model=16)       # 8e % 16 != 0
+    assert r2["experts"] is None and r2["expert_ff"] == "model"
+
+
+def test_multipod_batch_axes():
+    r = _rules("qwen3-4b", pod=2, data=16, model=16)
+    assert r["batch"] == ("pod", "data")
+
+
+def test_spec_for_drops_duplicate_axis():
+    from repro.parallel.sharding import spec_for
+    rules = {"a": "model", "b": "model", "c": None}
+    assert spec_for(("a", "b", "c"), rules) == P("model", None, None)
+
+
+def test_enforce_divisibility_drops_uneven():
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding
+    from repro.parallel.sharding import enforce_divisibility
+    # real (single-device) mesh of size 1 divides everything; use a fake
+    # spec check instead via the pure helper on a 4-device forced mesh
+    code = """
+import os
+os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=4'
+import sys; sys.path.insert(0, 'src')
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.parallel.sharding import enforce_divisibility
+mesh = jax.make_mesh((4,), ('data',))
+sh = {'a': NamedSharding(mesh, P('data')),
+      'b': NamedSharding(mesh, P('data'))}
+shapes = {'a': jax.ShapeDtypeStruct((8, 2), jnp.float32),
+          'b': jax.ShapeDtypeStruct((1501,), jnp.float32)}
+out = enforce_divisibility(sh, shapes)
+assert out['a'].spec == P('data', None), out['a'].spec
+assert out['b'].spec == P(None), out['b'].spec
+print('DIV-OK')
+"""
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, cwd="/root/repo", timeout=120)
+    assert r.returncode == 0, r.stderr[-1500:]
+    assert "DIV-OK" in r.stdout
+
+
+@pytest.mark.slow
+def test_train_launcher_distributed_smoke():
+    """launch.train end to end on a forced 2x2 mesh."""
+    code = """
+import sys, tempfile; sys.path.insert(0, 'src')
+from repro.launch.train import main
+with tempfile.TemporaryDirectory() as d:
+    res = main(['--arch', 'gemma2-2b', '--reduced', '--devices', '4',
+                '--mesh', '2x2', '--steps', '6', '--batch', '4',
+                '--seq', '32', '--ckpt', d])
+assert res.final_step == 6 and len(res.losses) == 6
+print('LAUNCH-OK')
+"""
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, cwd="/root/repo", timeout=420)
+    assert r.returncode == 0, (r.stdout[-800:], r.stderr[-2500:])
+    assert "LAUNCH-OK" in r.stdout
