@@ -10,7 +10,7 @@ from repro.core.workload import (WHISPER_TINY, WHISPER_BASE, WHISPER_SMALL,
 
 
 def fmt_table(headers, rows, title=""):
-    widths = [max(len(str(h)), *(len(str(r[i])) for r in rows))
+    widths = [max([len(str(h))] + [len(str(r[i])) for r in rows])
               for i, h in enumerate(headers)]
     out = []
     if title:

@@ -1,0 +1,82 @@
+"""Dispatch-layer check: the analytic offload plan (core.offload) and the
+executable dispatch layer (repro.kernels.api) must take the SAME
+ACCEL/HOST decision for every kernel in the Whisper workload — the
+paper's control law is one predicate, exercised two ways.
+
+Also routes a real Q8 GEMM through ``dispatch`` under a loose and a
+zero budget and checks the backends actually diverge (Pallas vs host)
+while the numerics agree.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import fmt_table, pct, workloads
+from repro.core.offload import plan_offload
+from repro.core.quantize import quantize_q8_0
+from repro.kernels.api import (DispatchContext, decide, dispatch,
+                               dispatch_counters, reset_dispatch_log,
+                               use_context)
+
+BUDGETS_KB = (16, 32, 64)
+
+
+def _plan_agreement(work, budget):
+    ctx = DispatchContext(vmem_budget=budget, allow_pallas=True)
+    plan = plan_offload(work, budget)
+    accel = set(map(id, plan.accel))
+    agree = 0
+    for spec in work:
+        decision, _ = decide("q8_matmul", spec, ctx)
+        planned = "accel" if id(spec) in accel else "host"
+        agree += decision == planned
+    return agree, len(work), plan.coverage_calls
+
+
+def _executed_routing():
+    """Route one GEMM at two budgets; report the backends taken."""
+    x = jax.random.normal(jax.random.key(0), (8, 256), jnp.float32)
+    w = jax.random.normal(jax.random.key(1), (256, 128), jnp.float32)
+    wq = quantize_q8_0(w, axis=0)
+    outs, backends = {}, {}
+    for tag, budget in (("loose", 64 * 2 ** 20), ("zero", 0)):
+        reset_dispatch_log()
+        with use_context(DispatchContext(vmem_budget=budget,
+                                         allow_pallas=True,
+                                         interpret=True)):
+            outs[tag] = np.asarray(dispatch("q8_matmul", x, wq))
+        ((_, decision, backend),) = {k for k in dispatch_counters()}
+        backends[tag] = (decision, backend)
+    reset_dispatch_log()
+    close = np.allclose(outs["loose"], outs["zero"], rtol=1e-4, atol=1e-3)
+    return backends, close
+
+
+def run():
+    w16, _ = workloads()
+    rows = []
+    all_agree = True
+    for kb in BUDGETS_KB:
+        agree, total, cov = _plan_agreement(w16, kb * 1024)
+        all_agree &= agree == total
+        rows.append([f"{kb} KB", f"{agree}/{total}", pct(100 * cov)])
+    backends, close = _executed_routing()
+    table = fmt_table(
+        ["LMM budget", "plan==dispatch", "call coverage"],
+        rows, "Dispatch check — analytic plan vs executable routing")
+    checks = {
+        "plan and dispatch agree on every kernel": all_agree,
+        "loose budget routes ACCEL->pallas":
+            backends["loose"] == ("accel", "pallas"),
+        "zero budget routes HOST->xla":
+            backends["zero"] == ("host", "xla"),
+        "routed outputs allclose across budgets": bool(close),
+    }
+    return table, checks
+
+
+if __name__ == "__main__":
+    t, c = run()
+    print(t)
+    print(c)

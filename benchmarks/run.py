@@ -16,6 +16,7 @@ MODULES = [
     "benchmarks.fig6_lmm_sweep",
     "benchmarks.fig7_breakdown",
     "benchmarks.roofline_table",
+    "benchmarks.dispatch_check",
 ]
 
 

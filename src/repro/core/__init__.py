@@ -13,7 +13,8 @@ from repro.core.burst import (BurstSplit, burst_cost, offload_rate,
 from repro.core.footprint import (BlockShape, coverage_cdf, kernel_footprint,
                                   select_blocks)
 from repro.core.offload import (AccelModel, Breakdown, Plan,
-                                execution_breakdown, plan_offload)
+                                execution_breakdown, offload_decision,
+                                plan_offload)
 from repro.core.quantize import (QBLOCK, Q8Tensor, dequantize_q8_0,
                                  pad_to_block, quantize_q8_0, quantize_tree)
 from repro.core.workload import (KernelSpec, WhisperDims, k_length_histogram,
@@ -23,7 +24,8 @@ __all__ = [
     "AccelModel", "BlockShape", "Breakdown", "BurstSplit", "KernelSpec",
     "Plan", "QBLOCK", "Q8Tensor", "WhisperDims", "burst_cost",
     "coverage_cdf", "dequantize_q8_0", "execution_breakdown",
-    "k_length_histogram", "kernel_footprint", "lm_workload", "offload_rate",
+    "k_length_histogram", "kernel_footprint", "lm_workload",
+    "offload_decision", "offload_rate",
     "optimal_burst", "pad_to_block", "plan_offload", "quantize_q8_0",
     "quantize_tree", "select_blocks", "split_burst", "whisper_workload",
 ]

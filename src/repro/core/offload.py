@@ -53,11 +53,21 @@ class Plan:
         return a / max(a + h, 1)
 
 
+def offload_decision(spec: KernelSpec, budget_bytes: int,
+                     policy: str = "optimized") -> str:
+    """The paper's per-kernel control law: ``"accel"`` iff the (policy)
+    working set fits the LMM/VMEM budget, else ``"host"``. This single
+    predicate backs both the analytic planner below and the executable
+    dispatch layer (``repro.kernels.api``)."""
+    fits = kernel_footprint(spec, policy) <= budget_bytes
+    return "accel" if fits else "host"
+
+
 def plan_offload(work: Sequence[KernelSpec], budget_bytes: int,
                  policy: str = "optimized") -> Plan:
     accel, host = [], []
     for spec in work:
-        (accel if kernel_footprint(spec, policy) <= budget_bytes
+        (accel if offload_decision(spec, budget_bytes, policy) == "accel"
          else host).append(spec)
     return Plan(budget_bytes, policy, tuple(accel), tuple(host))
 

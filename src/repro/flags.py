@@ -1,4 +1,5 @@
-"""Paper-faithful-baseline switch for §Perf A/B measurements.
+"""Process-wide switches: the paper-faithful-baseline A/B toggle plus the
+kernel-dispatch environment knobs consumed by ``repro.kernels.api``.
 
 ``REPRO_BASELINE=1`` re-enables every pre-hillclimb code path so the
 baseline can be re-measured under the *final* analyzer convention
@@ -11,8 +12,73 @@ baseline can be re-measured under the *final* analyzer convention
 * sharding: seq-sharded serve KV when kv%tp != 0 (vs head_dim-sharded);
 * MoE: global-token dispatch (vs GShard grouped);
 * sLSTM: gate projections inside the timestep scan (vs hoisted Wx).
+
+Dispatch knobs (read at dispatch time, not import time, so tests can
+monkeypatch ``os.environ``):
+
+* ``REPRO_KERNEL_BACKEND`` — force every op onto one backend
+  (``pallas`` | ``xla`` | ``ref``), bypassing the ACCEL/HOST control law;
+* ``REPRO_VMEM_BUDGET``    — default LMM/VMEM byte budget for the
+  offload decision and the Pallas block selection;
+* ``REPRO_ALLOW_PALLAS``   — ``1``/``0``: whether the ACCEL decision may
+  bind to the Pallas backend (default: only on real TPU — on CPU the
+  interpreter is a correctness tool, not a fast path);
+* ``REPRO_INTERPRET``      — ``1``/``0``: run Pallas kernels in
+  interpreter mode (default: on unless running on TPU).
 """
 
 import os
 
 BASELINE = os.environ.get("REPRO_BASELINE", "") == "1"
+
+DEFAULT_VMEM_BUDGET = 4 * 1024 * 1024
+
+_VALID_BACKENDS = ("pallas", "xla", "ref")
+
+
+def _env_bool(name: str):
+    v = os.environ.get(name, "").strip().lower()
+    if v == "":
+        return None
+    return v not in ("0", "false", "no")
+
+
+def _on_tpu() -> bool:
+    import jax
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
+
+
+def kernel_backend_override():
+    """Global backend force from REPRO_KERNEL_BACKEND, or None."""
+    v = os.environ.get("REPRO_KERNEL_BACKEND", "").strip().lower()
+    if not v:
+        return None
+    if v not in _VALID_BACKENDS:
+        raise ValueError(
+            f"REPRO_KERNEL_BACKEND={v!r}: expected one of {_VALID_BACKENDS}")
+    return v
+
+
+def vmem_budget_default() -> int:
+    v = os.environ.get("REPRO_VMEM_BUDGET", "")
+    if not v:
+        return DEFAULT_VMEM_BUDGET
+    try:
+        return int(v)
+    except ValueError:
+        raise ValueError(
+            f"REPRO_VMEM_BUDGET={v!r}: expected an integer byte count"
+        ) from None
+
+
+def allow_pallas_default() -> bool:
+    v = _env_bool("REPRO_ALLOW_PALLAS")
+    return _on_tpu() if v is None else v
+
+
+def interpret_default() -> bool:
+    v = _env_bool("REPRO_INTERPRET")
+    return (not _on_tpu()) if v is None else v

@@ -3,7 +3,26 @@
 Each kernel ships as <name>/<name>.py (pl.pallas_call + BlockSpec),
 ops.py (jit'd public wrapper incl. the C2 mixed-execution split), and
 ref.py (pure-jnp oracle used by the allclose test sweeps).
+
+``repro.kernels.api`` is the dispatch seam: every op registers in
+``repro.kernels.registry`` and consumers route through ``dispatch``,
+which applies the paper's ACCEL/HOST control law per call.
 """
 from repro.kernels.q8_matmul.ops import q8_matmul, q8_matmul_xla
 from repro.kernels.fp16_matmul.ops import fp16_matmul, offload_info
 from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.q8_attention.ops import (cache_traffic_ratio,
+                                            q8_decode_attention, quantize_kv)
+from repro.kernels.slstm_scan.ops import slstm_scan
+from repro.kernels.registry import KernelOp, get_op, list_ops, register
+from repro.kernels.api import (DispatchContext, dispatch, dispatch_counters,
+                               dispatch_trace, reset_dispatch_log,
+                               use_context, current_context)
+
+__all__ = [
+    "DispatchContext", "KernelOp", "cache_traffic_ratio", "current_context",
+    "dispatch", "dispatch_counters", "dispatch_trace", "fp16_matmul",
+    "flash_attention", "get_op", "list_ops", "offload_info", "q8_matmul",
+    "q8_matmul_xla", "q8_decode_attention", "quantize_kv", "register",
+    "reset_dispatch_log", "slstm_scan", "use_context",
+]

@@ -1,0 +1,32 @@
+"""Shared padding helpers for the kernel wrappers (paper C3: padding is
+a transient VMEM-tile artifact, never an HBM layout property).
+
+Every per-kernel ``ops.py`` used to carry its own copy of ``_pad_dim``;
+they all route here now so the registry's padding policy has one
+implementation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tpu_compiler_params(**kwargs):
+    """Version-tolerant ``pltpu.CompilerParams`` (named ``TPUCompilerParams``
+    before jax 0.5)."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
+def pad_dim(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    """Zero-pad ``axis`` of ``x`` up to the next multiple of ``mult``."""
+    rem = (-x.shape[axis]) % mult
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)

@@ -85,6 +85,8 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
     n_k_blocks = s // bk
     scale = 1.0 / (d ** 0.5)
     from jax.experimental.pallas import tpu as pltpu
+
+    from repro.kernels.common import tpu_compiler_params
     kernel = functools.partial(
         _flash_kernel, scale=scale, causal=causal, window=window,
         softcap=softcap, n_k_blocks=n_k_blocks, bq=bq, bk=bk)
@@ -103,7 +105,7 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pltpu.VMEM((bq, 1), jnp.float32),
             pltpu.VMEM((bq, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v)

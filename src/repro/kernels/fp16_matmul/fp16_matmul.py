@@ -53,6 +53,8 @@ def fp16_matmul_pallas(x: jax.Array, w: jax.Array, *,
     assert m % bm == 0 and n % bn == 0 and k % bk == 0, ((m, n, k), (bm, bn, bk))
     n_k_blocks = k // bk
     from jax.experimental.pallas import tpu as pltpu
+
+    from repro.kernels.common import tpu_compiler_params
     return pl.pallas_call(
         functools.partial(_fp16_matmul_kernel, n_k_blocks=n_k_blocks),
         grid=(m // bm, n // bn, n_k_blocks),
@@ -63,7 +65,7 @@ def fp16_matmul_pallas(x: jax.Array, w: jax.Array, *,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, w)

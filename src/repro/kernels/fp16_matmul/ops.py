@@ -16,17 +16,9 @@ import jax.numpy as jnp
 
 from repro.core.burst import split_burst
 from repro.core.footprint import select_blocks
+from repro.kernels.common import pad_dim
 from repro.kernels.fp16_matmul.fp16_matmul import fp16_matmul_pallas
 from repro.kernels.fp16_matmul.ref import fp16_matmul_ref
-
-
-def _pad_dim(x: jax.Array, axis: int, mult: int) -> jax.Array:
-    rem = (-x.shape[axis]) % mult
-    if rem == 0:
-        return x
-    pad = [(0, 0)] * x.ndim
-    pad[axis] = (0, rem)
-    return jnp.pad(x, pad)
 
 
 @functools.partial(jax.jit, static_argnames=("vmem_budget", "interpret",
@@ -53,8 +45,8 @@ def fp16_matmul(x: jax.Array, w: jax.Array, *,
     x_main, x_res = x[:, :split.k_main], x[:, split.k_main:]
     w_main, w_res = w[:split.k_main], w[split.k_main:]
 
-    xp = _pad_dim(x_main, 0, bm)
-    wp = _pad_dim(w_main, 1, bn)
+    xp = pad_dim(x_main, 0, bm)
+    wp = pad_dim(w_main, 1, bn)
 
     if split.k_main > 0:
         y = fp16_matmul_pallas(xp, wp, bm=bm, bn=bn, bk=bk,

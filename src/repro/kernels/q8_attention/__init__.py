@@ -1,0 +1,1 @@
+from repro.kernels.q8_attention.ops import *  # noqa

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.quantize import QBLOCK, quantize_q8_0
+from repro.kernels.common import pad_dim
 from repro.kernels.q8_attention.q8_attention import q8_decode_attention_pallas
 
 
@@ -35,20 +36,13 @@ def q8_decode_attention(q, kq, ks, vq, vs, length, *, bk: int = 128,
     [0, length). Handles S not divisible by bk via zero padding (masked
     by ``length``)."""
     bh, _, d = q.shape
-    s = kq.shape[1]
-    pad = (-s) % bk
-    if pad:
-        z3 = ((0, 0), (0, pad), (0, 0))
-        kq = jnp.pad(kq, z3)
-        vq = jnp.pad(vq, z3)
-        ks = jnp.pad(ks, z3)
-        vs = jnp.pad(vs, z3)
+    kq, vq, ks, vs = (pad_dim(t, 1, bk) for t in (kq, vq, ks, vs))
     return q8_decode_attention_pallas(q, kq, ks, vq, vs,
                                       jnp.asarray(length), bk=bk,
                                       interpret=interpret)
 
 
-def cache_traffic_ratio(d: int) -> float:
+def cache_traffic_ratio() -> float:
     """Q8 cache bytes per element vs bf16 (paper C1 LOAD saving)."""
     q8 = 1.0 + 2.0 / QBLOCK
     return q8 / 2.0

@@ -87,6 +87,8 @@ def q8_decode_attention_pallas(q: jax.Array, kq: jax.Array, ks: jax.Array,
     n_k_blocks = s // bk
     scale = 1.0 / (d ** 0.5)
     from jax.experimental.pallas import tpu as pltpu
+
+    from repro.kernels.common import tpu_compiler_params
     kernel = functools.partial(_q8_attn_kernel, scale=scale,
                                n_k_blocks=n_k_blocks, bk=bk)
     grid = (bh, n_k_blocks)
@@ -109,7 +111,7 @@ def q8_decode_attention_pallas(q: jax.Array, kq: jax.Array, ks: jax.Array,
             pltpu.VMEM((1, 1), jnp.float32),
             pltpu.VMEM((1, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(length.reshape(1, 1).astype(jnp.int32), q, kq, ks, vq, vs)

@@ -19,17 +19,9 @@ import jax.numpy as jnp
 
 from repro.core.footprint import select_blocks
 from repro.core.quantize import QBLOCK, Q8Tensor
+from repro.kernels.common import pad_dim
 from repro.kernels.q8_matmul.q8_matmul import q8_matmul_pallas
 from repro.kernels.q8_matmul.ref import q8_matmul_ref
-
-
-def _pad_dim(x: jax.Array, axis: int, mult: int) -> jax.Array:
-    rem = (-x.shape[axis]) % mult
-    if rem == 0:
-        return x
-    pad = [(0, 0)] * x.ndim
-    pad[axis] = (0, rem)
-    return jnp.pad(x, pad)
 
 
 @functools.partial(jax.jit, static_argnames=("vmem_budget", "interpret",
@@ -67,9 +59,9 @@ def q8_matmul(x: jax.Array, w: Q8Tensor, *,
 
     # pad M/N up to block multiples (packed operands, C3 — padding exists
     # only transiently in VMEM-tile space, never in HBM layout)
-    xp = _pad_dim(x_main, 0, bm)
-    wqp = _pad_dim(wq_main, 1, bn)
-    wsp = _pad_dim(ws_main, 1, bn)
+    xp = pad_dim(x_main, 0, bm)
+    wqp = pad_dim(wq_main, 1, bn)
+    wsp = pad_dim(ws_main, 1, bn)
 
     if k_main > 0:
         y = q8_matmul_pallas(xp, wqp, wsp, bm=bm, bn=bn, bk=bk,

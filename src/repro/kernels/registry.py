@@ -1,0 +1,66 @@
+"""Kernel-op registry: the single registration point for every compute
+hot-spot the offload control law can route.
+
+A ``KernelOp`` bundles, per op:
+
+* ``spec``      — an analytic footprint builder: maps the call's concrete
+  operands to a ``core.workload.KernelSpec`` so the ACCEL/HOST decision
+  can reuse ``core.footprint.kernel_footprint`` (the paper's LMM model);
+* ``backends``  — implementations keyed ``"pallas"`` / ``"xla"`` /
+  ``"ref"``.  Each takes ``(ctx, *args, **kwargs)`` where ``ctx`` is the
+  active ``repro.kernels.api.DispatchContext`` (budget, interpret flag);
+* ``accel_order`` / ``host_order`` — backend preference for each side of
+  the offload decision.  ACCEL prefers the Pallas kernel; HOST prefers
+  the plain-XLA binding with the jnp oracle as last resort.
+
+Future backends (real-TPU lowering, a CGLA cost-model backend) register
+here; nothing else in the stack needs to change.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Mapping, Tuple
+
+from repro.core.workload import KernelSpec
+
+BACKENDS = ("pallas", "xla", "ref")
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelOp:
+    name: str
+    spec: Callable[..., KernelSpec]
+    backends: Mapping[str, Callable]
+    accel_order: Tuple[str, ...] = ("pallas", "xla", "ref")
+    host_order: Tuple[str, ...] = ("xla", "ref")
+    doc: str = ""
+
+    def __post_init__(self):
+        unknown = set(self.backends) - set(BACKENDS)
+        if unknown:
+            raise ValueError(f"{self.name}: unknown backends {sorted(unknown)}")
+        if not self.backends:
+            raise ValueError(f"{self.name}: at least one backend required")
+
+
+_REGISTRY: dict[str, KernelOp] = {}
+
+
+def register(op: KernelOp) -> KernelOp:
+    """Register (or re-register) an op; returns it for chaining."""
+    _REGISTRY[op.name] = op
+    return op
+
+
+def get_op(name: str) -> KernelOp:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown kernel op {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def list_ops() -> list[str]:
+    return sorted(_REGISTRY)

@@ -1,0 +1,1 @@
+from repro.kernels.slstm_scan.ops import *  # noqa

@@ -78,6 +78,8 @@ def slstm_scan_pallas(wx: jax.Array, r_all: jax.Array, state0: jax.Array, *,
     assert s % t_chunk == 0, (s, t_chunk)
     n_chunks = s // t_chunk
     from jax.experimental.pallas import tpu as pltpu
+
+    from repro.kernels.common import tpu_compiler_params
     kernel = functools.partial(_slstm_chunk_kernel, t_chunk=t_chunk,
                                n_chunks=n_chunks)
     return pl.pallas_call(
@@ -97,7 +99,7 @@ def slstm_scan_pallas(wx: jax.Array, r_all: jax.Array, state0: jax.Array, *,
             jax.ShapeDtypeStruct((4, b, h, hd), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((4, b, h, hd), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(wx, r_all, state0)

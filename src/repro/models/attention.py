@@ -1,10 +1,12 @@
 """Attention block: GQA/SWA/local-global/softcap/qk-norm, three modes.
 
-Train/prefill use a chunked online-softmax scan (the XLA binding of the
-flash_attention Pallas kernel — DESIGN.md §7) so 32k-prefill cells never
-materialize S×S scores. Decode updates a KV cache in place and runs the
-matvec path. Sharding is expressed through logical-axis constraints; the
-head-vs-context-parallel fallback is decided by the rules (sharding.py).
+Train/prefill route through ``kernels.api.dispatch("flash_attention")``:
+the ACCEL/HOST control law picks the Pallas flash kernel or the chunked
+online-softmax scan below (its XLA binding — DESIGN.md §7), so
+32k-prefill cells never materialize S×S scores either way. Decode
+updates a KV cache in place and runs the matvec path. Sharding is
+expressed through logical-axis constraints; the head-vs-context-parallel
+fallback is decided by the rules (sharding.py).
 """
 
 from __future__ import annotations
@@ -17,6 +19,7 @@ import jax.numpy as jnp
 
 from repro import flags
 from repro.configs import ArchConfig
+from repro.kernels.api import dispatch
 from repro.models.layers import (KeyGen, Param, mm, mm_out, ninit, rmsnorm,
                                  rope)
 from repro.parallel.sharding import constrain
@@ -177,9 +180,11 @@ def attention(p: dict, x: jax.Array, cfg: ArchConfig, *,
         q = constrain(q, "batch", "q_seq", "heads", "head_dim")
         k = constrain(k, "batch", "kv_seq", "kv_heads", "head_dim")
         v = constrain(v, "batch", "kv_seq", "kv_heads", "head_dim")
-        out = chunked_attention(q, _repeat_kv(k, h), _repeat_kv(v, h),
-                                causal=causal, window=window,
-                                softcap=softcap)
+        # dispatched: the control law binds this to the Pallas flash
+        # kernel (ACCEL) or the chunked online-softmax below (HOST/XLA).
+        # k/v pass through un-repeated; every backend is GQA-aware.
+        out = dispatch("flash_attention", q, k, v, causal=causal,
+                       window=window, softcap=softcap)
         new_cache = None
         if mode == "prefill":
             new_cache = _write_prefill_cache(cache, k, v)

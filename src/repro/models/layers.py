@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.quantize import Q8Tensor
-from repro.kernels.q8_matmul.ref import q8_matmul_ref
+from repro.kernels.api import dispatch
 from repro.parallel.sharding import constrain
 
 
@@ -68,25 +68,27 @@ def ninit(key, shape, fan_in: int, dtype=jnp.float32) -> jax.Array:
 
 # ----------------------------------------------------------------------------
 # Linear / matmul with Q8Tensor support (C1: serving path uses quantized
-# weights; the XLA dequant path is what the dry-run lowers — DESIGN.md §7).
+# weights). Both entry points route through the kernel-dispatch API: the
+# ACCEL/HOST control law (core.offload) picks per call between the Pallas
+# wrappers and the XLA/ref host paths — see repro.kernels.api.
 # ----------------------------------------------------------------------------
 
 def mm(x: jax.Array, w, compute_dtype=jnp.bfloat16) -> jax.Array:
-    """x @ w where w may be a Q8Tensor (dequant-in-HLO path) or an array.
+    """x @ w where w may be a Q8Tensor (dispatched q8_matmul) or an array.
     Contraction over x's last dim and w's first (or first-two for fused
     head layouts)."""
     if isinstance(w, Q8Tensor):
         lead = x.shape[:-1]
         k = x.shape[-1]
-        wq2 = w.q.reshape(k, -1)
-        ws2 = w.scale.reshape(w.scale.shape[0], -1)
-        y = q8_matmul_ref(x.reshape(-1, k), wq2, ws2,
-                          out_dtype=compute_dtype)
+        w2 = Q8Tensor(w.q.reshape(k, -1),
+                      w.scale.reshape(w.scale.shape[0], -1))
+        y = dispatch("q8_matmul", x.reshape(-1, k), w2,
+                     out_dtype=compute_dtype)
         return y.reshape(*lead, *w.q.shape[1:])
     w = w.astype(compute_dtype)
     x = x.astype(compute_dtype)
     if w.ndim == 2:
-        return jnp.einsum("...k,kn->...n", x, w)
+        return dispatch("fp16_matmul", x, w, out_dtype=compute_dtype)
     if w.ndim == 3:   # (k, heads, head_dim)
         return jnp.einsum("...k,khd->...hd", x, w)
     raise ValueError(f"unsupported weight rank {w.ndim}")
@@ -96,11 +98,16 @@ def mm_out(x: jax.Array, w, compute_dtype=jnp.bfloat16) -> jax.Array:
     """(…, h, d) @ (h, d, n) -> (…, n) output projection."""
     if isinstance(w, Q8Tensor):
         h, d, n = w.q.shape
-        y = q8_matmul_ref(x.reshape(-1, h * d), w.q.reshape(h * d, n),
-                          w.scale.reshape(-1, n), out_dtype=compute_dtype)
+        w2 = Q8Tensor(w.q.reshape(h * d, n), w.scale.reshape(-1, n))
+        y = dispatch("q8_matmul", x.reshape(-1, h * d), w2,
+                     out_dtype=compute_dtype)
         return y.reshape(*x.shape[:-2], n)
-    return jnp.einsum("...hd,hdn->...n", x.astype(compute_dtype),
-                      w.astype(compute_dtype))
+    h, d, n = w.shape
+    xc = x.astype(compute_dtype).reshape(*x.shape[:-2], h * d)
+    y = dispatch("fp16_matmul", xc,
+                 w.astype(compute_dtype).reshape(h * d, n),
+                 out_dtype=compute_dtype)
+    return y
 
 
 # ----------------------------------------------------------------------------

@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.api import (DispatchContext, dispatch_counters,
+                               use_context)
 from repro.models.model import Model
 
 EOS_DEFAULT = 2
@@ -58,9 +60,15 @@ def _bucket(n: int, buckets=(32, 64, 128, 256, 512, 1024, 2048)) -> int:
 
 class ServeEngine:
     def __init__(self, model: Model, params: Any, *, n_slots: int = 8,
-                 max_len: int = 256, enc_len: int = 64):
+                 max_len: int = 256, enc_len: int = 64,
+                 dispatch_ctx: Optional[DispatchContext] = None):
+        """``dispatch_ctx``: kernel-routing context (budget, backend
+        policy — repro.kernels.api) applied while the prefill/decode
+        functions trace; None uses the env/default context. Routing is
+        baked in at first trace, so construct one engine per context."""
         self.model = model
         self.params = params
+        self.dispatch_ctx = dispatch_ctx
         self.n_slots = n_slots
         self.max_len = max_len
         self.cache = model.init_cache(n_slots, max_len, enc_len)
@@ -113,8 +121,9 @@ class ServeEngine:
         bucket = min(_bucket(n), self.max_len)
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :n] = req.tokens
-        logits, cache1 = self._prefill_fn(bucket)(self.params,
-                                                  jnp.asarray(toks))
+        with use_context(self.dispatch_ctx):
+            logits, cache1 = self._prefill_fn(bucket)(self.params,
+                                                      jnp.asarray(toks))
         self.cache = _scatter_slot(self.cache, cache1, slot)
         first = int(np.argmax(np.asarray(logits)[0, n - 1]))
         st = RequestState(req=req, slot=slot, pos=n, out=[first])
@@ -132,9 +141,10 @@ class ServeEngine:
         """One batched decode tick over the whole pool."""
         if not self.active:
             return []
-        nxt, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(self._tokens),
-            jnp.asarray(self._pos))
+        with use_context(self.dispatch_ctx):
+            nxt, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(self._tokens),
+                jnp.asarray(self._pos))
         nxt = np.asarray(nxt)
         finished = []
         for slot, st in list(self.active.items()):
@@ -154,6 +164,11 @@ class ServeEngine:
     @property
     def n_active(self) -> int:
         return len(self.active)
+
+    def dispatch_report(self) -> dict:
+        """Trace-time kernel-routing counters, keyed (op, decision,
+        backend). Process-global: reset via api.reset_dispatch_log()."""
+        return dict(dispatch_counters())
 
 
 def _scatter_slot(pool: Any, one: Any, slot: int) -> Any:

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs import ArchConfig
+from repro.kernels.api import grad_safe_context, use_context
 from repro.models.model import Model, input_specs, SHAPES
 from repro.optim import adamw
 from repro.parallel.sharding import (enforce_divisibility, logical_context,
@@ -58,7 +59,10 @@ def cross_entropy(logits: jax.Array, targets: jax.Array,
 
 
 def _loss_fn(model: Model, params, batch) -> tuple[jax.Array, dict]:
-    logits, _ = model.forward(params, batch, mode="train")
+    # this forward sits under value_and_grad; the Pallas kernels define
+    # no VJP, so pin the dispatch routing to the XLA/ref bindings here.
+    with use_context(grad_safe_context()):
+        logits, _ = model.forward(params, batch, mode="train")
     tgt = batch["targets"]
     # VLM: logits cover img-prefix + text; targets already full-seq length.
     if logits.shape[1] != tgt.shape[1]:

@@ -1,6 +1,9 @@
 """Burst partitioning (C2) + footprint/coverage model (C3/C4)."""
 
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -e .[test])")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.burst import (burst_cost, offload_rate, optimal_burst,

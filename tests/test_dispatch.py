@@ -1,0 +1,351 @@
+"""Kernel-dispatch API: registry, the executable ACCEL/HOST control law,
+backend equivalence, and the acceptance routing criteria (ISSUE 1)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.offload import offload_decision, plan_offload
+from repro.core.quantize import quantize_q8_0, quantize_tree
+from repro.core.workload import WHISPER_TINY, whisper_workload
+from repro.kernels import api, registry
+from repro.kernels.api import (DispatchContext, decide, dispatch,
+                               dispatch_counters, dispatch_trace,
+                               reset_dispatch_log, use_context)
+
+KEY = jax.random.key(7)
+LOOSE = DispatchContext(vmem_budget=64 * 2 ** 20, allow_pallas=True,
+                        interpret=True)
+ZERO = DispatchContext(vmem_budget=0, allow_pallas=True, interpret=True)
+
+
+@pytest.fixture(autouse=True)
+def _clean_log():
+    reset_dispatch_log()
+    yield
+    reset_dispatch_log()
+
+
+def _q8_operands(m=8, k=256, n=128):
+    x = jax.random.normal(jax.random.fold_in(KEY, 1), (m, k), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(KEY, 2), (k, n), jnp.float32)
+    return x, quantize_q8_0(w, axis=0)
+
+
+# ------------------------------------------------------------------ registry
+
+def test_registry_has_all_five_ops():
+    assert registry.list_ops() == sorted([
+        "q8_matmul", "fp16_matmul", "flash_attention",
+        "q8_decode_attention", "slstm_scan"])
+
+
+def test_registry_unknown_op_raises():
+    with pytest.raises(KeyError, match="unknown kernel op"):
+        registry.get_op("nope")
+
+
+def test_registry_rejects_bad_backend_name():
+    with pytest.raises(ValueError, match="unknown backends"):
+        registry.KernelOp(name="bad", spec=lambda: None,
+                          backends={"cuda": lambda ctx: None})
+
+
+def test_kernels_package_exports():
+    import repro.kernels as K
+    for name in ("q8_matmul", "fp16_matmul", "flash_attention",
+                 "q8_decode_attention", "quantize_kv", "slstm_scan",
+                 "dispatch", "DispatchContext"):
+        assert hasattr(K, name), name
+
+
+# ------------------------------------------------- control law / decisions
+
+def test_decision_tracks_budget():
+    op = registry.get_op("q8_matmul")
+    x, wq = _q8_operands()
+    spec = op.spec(x, wq)
+    assert decide("q8_matmul", spec, LOOSE) == ("accel", "pallas")
+    assert decide("q8_matmul", spec, ZERO)[0] == "host"
+    # without allow_pallas the ACCEL decision binds to the XLA path
+    cpu = DispatchContext(vmem_budget=64 * 2 ** 20, allow_pallas=False)
+    assert decide("q8_matmul", spec, cpu) == ("accel", "xla")
+
+
+def test_decide_matches_plan_offload_over_whisper_workload():
+    work = whisper_workload(WHISPER_TINY, dtype="q8_0")
+    for budget in (16 * 1024, 32 * 1024):
+        plan = plan_offload(work, budget)
+        ctx = DispatchContext(vmem_budget=budget, allow_pallas=True)
+        accel_ids = {id(s) for s in plan.accel}
+        for spec in work:
+            want = "accel" if id(spec) in accel_ids else "host"
+            assert decide("q8_matmul", spec, ctx)[0] == want
+            assert offload_decision(spec, budget) == want
+
+
+def test_routing_counters_accel_vs_host():
+    x, wq = _q8_operands()
+    with use_context(LOOSE):
+        y_accel = dispatch("q8_matmul", x, wq)
+    assert dispatch_counters()[("q8_matmul", "accel", "pallas")] == 1
+    reset_dispatch_log()
+    with use_context(ZERO):
+        y_host = dispatch("q8_matmul", x, wq)
+    assert dispatch_counters()[("q8_matmul", "host", "xla")] == 1
+    np.testing.assert_allclose(np.asarray(y_accel), np.asarray(y_host),
+                               rtol=1e-4, atol=1e-3)
+    rec = dispatch_trace()[-1]
+    assert rec.op == "q8_matmul" and rec.budget == 0
+    assert rec.footprint > 0
+
+
+def test_pallas_block_miss_falls_back_to_host():
+    """Analytic footprint fits but no MXU-aligned block does: the call
+    lands on the host path (the paper's residual machinery), recorded as
+    accel->host."""
+    x, wq = _q8_operands(m=8, k=512, n=128)
+    op = registry.get_op("q8_matmul")
+    spec = op.spec(x, wq)
+    budget = 12 * 1024
+    assert offload_decision(spec, budget) == "accel"
+    with use_context(DispatchContext(vmem_budget=budget, allow_pallas=True,
+                                     interpret=True)):
+        y = dispatch("q8_matmul", x, wq)
+    c = dispatch_counters()
+    assert c[("q8_matmul", "accel->host", "xla")] == 1, dict(c)
+    ref = dispatch("q8_matmul", x, wq, ctx=ZERO)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_env_force_backend(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", "ref")
+    x, wq = _q8_operands()
+    dispatch("q8_matmul", x, wq)
+    assert dispatch_counters()[("q8_matmul", "forced", "ref")] == 1
+
+
+def test_per_op_backend_override():
+    ctx = DispatchContext(vmem_budget=64 * 2 ** 20, allow_pallas=True,
+                          backends={"q8_matmul": "xla"})
+    x, wq = _q8_operands()
+    dispatch("q8_matmul", x, wq, ctx=ctx)
+    assert dispatch_counters()[("q8_matmul", "forced", "xla")] == 1
+
+
+def test_forced_backend_not_registered_falls_back_to_host():
+    """Global xla force on a pallas/ref-only op lands on its host chain
+    instead of crashing."""
+    wx = jax.random.normal(jax.random.fold_in(KEY, 40), (16, 4, 1, 2, 8))
+    r = jax.random.normal(jax.random.fold_in(KEY, 41), (4, 2, 8, 8)) * 0.1
+    s0 = jnp.stack([jnp.zeros((1, 2, 8))] * 3
+                   + [jnp.full((1, 2, 8), -1e30)])
+    dispatch("slstm_scan", wx, r, s0, ctx=_force("xla"))
+    assert dispatch_counters()[("slstm_scan", "forced", "ref")] == 1
+
+
+def test_forced_backend_typo_raises():
+    x, wq = _q8_operands()
+    with pytest.raises(ValueError, match="forced backend 'reff'"):
+        dispatch("q8_matmul", x, wq,
+                 ctx=DispatchContext(vmem_budget=0, force_backend="reff"))
+
+
+def test_env_bools_case_insensitive(monkeypatch):
+    from repro import flags
+    for raw, want in (("False", False), ("NO", False), ("0", False),
+                      ("TRUE", True), ("1", True)):
+        monkeypatch.setenv("REPRO_ALLOW_PALLAS", raw)
+        assert flags.allow_pallas_default() is want, raw
+
+
+def test_grad_safe_context_strips_pallas():
+    from repro.kernels.api import grad_safe_context
+    ctx = DispatchContext(vmem_budget=1, allow_pallas=True,
+                          force_backend="pallas",
+                          backends={"q8_matmul": "pallas",
+                                    "fp16_matmul": "ref"})
+    g = grad_safe_context(ctx)
+    assert not g.allow_pallas and g.force_backend is None
+    assert g.backends == {"fp16_matmul": "ref"}
+    assert g.vmem_budget == 1
+
+
+def test_cross_attention_falls_back_under_pallas():
+    """sq != skv (encoder-decoder cross attention) can't take the Pallas
+    flash kernel; dispatch lands it on the host path."""
+    from repro.configs import get_config, reduced
+    from repro.models.attention import attention, init_cross_attention
+    from repro.models.layers import KeyGen
+    cfg = reduced(get_config("qwen3-4b"))
+    p = jax.tree.map(lambda t: t.value if hasattr(t, "value") else t,
+                     init_cross_attention(KeyGen(KEY), cfg),
+                     is_leaf=lambda t: hasattr(t, "value"))
+    x = jax.random.normal(jax.random.fold_in(KEY, 50),
+                          (1, 8, cfg.d_model), jnp.bfloat16)
+    enc = jax.random.normal(jax.random.fold_in(KEY, 51),
+                            (1, 24, cfg.d_model), jnp.bfloat16)
+    with use_context(LOOSE):
+        y, _ = attention(p, x, cfg, mode="prefill", x_kv=enc,
+                         use_rope=False)
+    c = dispatch_counters()
+    assert c[("flash_attention", "accel->host", "xla")] == 1, dict(c)
+    assert y.shape == (1, 8, cfg.d_model)
+
+
+def test_train_step_differentiable_under_pallas_context():
+    """Training grads must not route through VJP-less Pallas kernels
+    even when the ambient context allows them."""
+    from repro.configs import get_config, reduced
+    from repro.models.model import build
+    from repro.optim.adamw import AdamWConfig
+    from repro.train.step import init_train_state, make_train_step
+    cfg = reduced(get_config("qwen3-4b"))
+    model = build(cfg)
+    state = init_train_state(model, jax.random.key(0))
+    step = make_train_step(model, AdamWConfig(lr=1e-3, warmup_steps=0,
+                                              total_steps=10))
+    batch = {"tokens": jnp.zeros((2, 8), jnp.int32),
+             "targets": jnp.zeros((2, 8), jnp.int32),
+             "positions": jnp.broadcast_to(jnp.arange(8), (2, 8))}
+    with use_context(LOOSE):          # pallas allowed ambiently
+        state, metrics = step(state, batch)
+    assert jnp.isfinite(metrics["loss"])
+    assert not any(b == "pallas" for (_, _, b) in dispatch_counters())
+
+
+# ------------------------------------------- backend equivalence (mm/mm_out)
+
+def _force(backend):
+    return DispatchContext(vmem_budget=64 * 2 ** 20, allow_pallas=True,
+                           interpret=True, force_backend=backend)
+
+
+@pytest.mark.parametrize("backend", ["ref", "xla", "pallas"])
+def test_mm_q8_backend_sweep(backend):
+    from repro.models.layers import mm
+    x, wq = _q8_operands(m=5, k=96, n=64)    # ragged M + C2 residual K
+    got = mm(x, wq, jnp.float32)
+    want = None
+    with use_context(_force(backend)):
+        got_b = mm(x, wq, jnp.float32)
+    np.testing.assert_allclose(np.asarray(got_b), np.asarray(got),
+                               rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("backend", ["ref", "xla", "pallas"])
+def test_mm_dense_and_mm_out_backend_sweep(backend):
+    from repro.models.layers import mm, mm_out
+    x = jax.random.normal(jax.random.fold_in(KEY, 3), (2, 8, 64)) / 8
+    w = jax.random.normal(jax.random.fold_in(KEY, 4), (64, 32)) / 8
+    wo = jax.random.normal(jax.random.fold_in(KEY, 5), (4, 16, 24)) / 8
+    xo = jax.random.normal(jax.random.fold_in(KEY, 6), (2, 8, 4, 16)) / 8
+    want = np.asarray(jnp.einsum(
+        "...k,kn->...n", x, w).astype(jnp.float32))
+    want_o = np.asarray(jnp.einsum(
+        "...hd,hdn->...n", xo, wo).astype(jnp.float32))
+    with use_context(_force(backend)):
+        got = mm(x, w, jnp.bfloat16)
+        got_o = mm_out(xo, wo, jnp.bfloat16)
+    # bf16 compute dtype on the xla path: agree at bf16 precision
+    np.testing.assert_allclose(np.asarray(got, jnp.float32), want,
+                               rtol=2e-2, atol=2e-2)
+    np.testing.assert_allclose(np.asarray(got_o, jnp.float32), want_o,
+                               rtol=2e-2, atol=2e-2)
+
+
+# ------------------------------------- acceptance: routed Q8 model forward
+
+def test_layers_has_no_direct_ref_import():
+    import repro.models.layers as L
+    src = open(L.__file__).read()
+    assert "q8_matmul_ref" not in src
+
+
+def test_q8_forward_routes_by_budget():
+    """Acceptance: generous budget -> Pallas wrapper; 0-byte budget ->
+    host path; identical outputs (bf16, atol<=1e-2)."""
+    from repro.models.layers import mlp
+    d, ff = 64, 128
+    params = {
+        "up": jax.random.normal(jax.random.fold_in(KEY, 10), (d, ff)) / 8,
+        "gate": jax.random.normal(jax.random.fold_in(KEY, 11), (d, ff)) / 8,
+        "down": jax.random.normal(jax.random.fold_in(KEY, 12), (ff, d)) / 8,
+    }
+    q8 = quantize_tree(params)
+    x = jax.random.normal(jax.random.fold_in(KEY, 13), (2, 4, d),
+                          jnp.bfloat16)
+
+    with use_context(LOOSE):
+        y_accel = mlp(q8, x)
+    c = dispatch_counters()
+    assert c[("q8_matmul", "accel", "pallas")] == 3, dict(c)
+
+    reset_dispatch_log()
+    with use_context(ZERO):
+        y_host = mlp(q8, x)
+    c = dispatch_counters()
+    assert sum(v for (op, dec, b), v in c.items()
+               if op == "q8_matmul" and dec == "host" and b in ("xla", "ref")
+               ) == 3, dict(c)
+    assert not any(b == "pallas" for (_, _, b) in c), dict(c)
+    np.testing.assert_allclose(np.asarray(y_accel, jnp.float32),
+                               np.asarray(y_host, jnp.float32),
+                               atol=1e-2, rtol=1e-2)
+
+
+# ----------------------------------------------- flash attention dispatch
+
+def test_flash_attention_backend_sweep():
+    b, s, h, hkv, dh = 2, 64, 4, 2, 32
+    q = jax.random.normal(jax.random.fold_in(KEY, 20), (b, s, h, dh))
+    k = jax.random.normal(jax.random.fold_in(KEY, 21), (b, s, hkv, dh))
+    v = jax.random.normal(jax.random.fold_in(KEY, 22), (b, s, hkv, dh))
+    outs = {}
+    for backend in ("ref", "xla", "pallas"):
+        with use_context(_force(backend)):
+            outs[backend] = np.asarray(
+                dispatch("flash_attention", q, k, v, causal=True),
+                np.float32)
+    np.testing.assert_allclose(outs["xla"], outs["ref"], rtol=2e-2,
+                               atol=2e-2)
+    np.testing.assert_allclose(outs["pallas"], outs["ref"], rtol=2e-3,
+                               atol=2e-3)
+
+
+def test_attention_module_routes_through_dispatch():
+    """models.attention's train path must go through the dispatcher."""
+    from repro.configs import get_config, reduced
+    from repro.models.attention import attention, init_attention
+    from repro.models.layers import KeyGen
+    cfg = reduced(get_config("qwen3-4b"))
+    p = jax.tree.map(lambda t: t.value if hasattr(t, "value") else t,
+                     init_attention(KeyGen(KEY), cfg),
+                     is_leaf=lambda t: hasattr(t, "value"))
+    x = jax.random.normal(jax.random.fold_in(KEY, 30),
+                          (1, 16, cfg.d_model), jnp.bfloat16)
+    y, _ = attention(p, x, cfg, mode="train")
+    c = dispatch_counters()
+    assert any(op == "flash_attention" for (op, _, _) in c), dict(c)
+    assert y.shape == (1, 16, cfg.d_model)
+
+
+# --------------------------------------------------------- serving plumbing
+
+def test_serve_engine_accepts_dispatch_ctx():
+    from repro.configs import get_config, reduced
+    from repro.models.model import build
+    from repro.serving.engine import Request, ServeEngine
+    cfg = reduced(get_config("qwen3-4b"))
+    model = build(cfg)
+    params = model.init_values(jax.random.key(0))
+    eng = ServeEngine(model, params, n_slots=2, max_len=64,
+                      dispatch_ctx=DispatchContext(vmem_budget=0))
+    st = eng.admit(Request(uid=0, tokens=[5, 6, 7], max_new=2, eos_id=-1))
+    assert st is not None
+    eng.step()
+    rep = eng.dispatch_report()
+    assert any(dec == "host" for (_, dec, _) in rep), rep
+    assert not any(b == "pallas" for (_, _, b) in rep), rep
