@@ -17,6 +17,7 @@ MODULES = [
     "benchmarks.fig7_breakdown",
     "benchmarks.roofline_table",
     "benchmarks.dispatch_check",
+    "benchmarks.decode_traffic",
 ]
 
 

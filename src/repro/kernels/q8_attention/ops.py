@@ -33,10 +33,13 @@ def quantize_kv(k: jax.Array):
 def q8_decode_attention(q, kq, ks, vq, vs, length, *, bk: int = 128,
                         interpret: bool = True) -> jax.Array:
     """q: (BH, 1, D); kq/vq: (BH, S, D) int8; ks/vs scales; attend
-    [0, length). Handles S not divisible by bk via zero padding (masked
-    by ``length``)."""
+    [0, length). ``length`` is a scalar (lockstep decode) or a (BH,)
+    vector (continuous batching: every serving lane at its own depth).
+    Handles S not divisible by bk via zero padding (masked by
+    ``length``)."""
     bh, _, d = q.shape
     kq, vq, ks, vs = (pad_dim(t, 1, bk) for t in (kq, vq, ks, vs))
+    # scalar-vs-(BH,) length normalization happens in the pallas wrapper
     return q8_decode_attention_pallas(q, kq, ks, vq, vs,
                                       jnp.asarray(length), bk=bk,
                                       interpret=interpret)

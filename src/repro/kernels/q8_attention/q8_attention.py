@@ -78,8 +78,9 @@ def q8_decode_attention_pallas(q: jax.Array, kq: jax.Array, ks: jax.Array,
                                bk: int = 128,
                                interpret: bool = False) -> jax.Array:
     """q: (BH, 1, D); kq/vq: (BH, S, D) int8; ks/vs: (BH, S, D//QBLOCK)
-    scales; length: () int32 — attend positions [0, length). S % bk == 0.
-    Returns (BH, 1, D) in q.dtype."""
+    scales; length: () or (BH,) int32 — lane h attends positions
+    [0, length[h]) (per-lane depths under continuous batching).
+    S % bk == 0. Returns (BH, 1, D) in q.dtype."""
     bh, one, d = q.shape
     s = kq.shape[1]
     assert one == 1 and kq.shape == (bh, s, d) and s % bk == 0
@@ -92,11 +93,13 @@ def q8_decode_attention_pallas(q: jax.Array, kq: jax.Array, ks: jax.Array,
     kernel = functools.partial(_q8_attn_kernel, scale=scale,
                                n_k_blocks=n_k_blocks, bk=bk)
     grid = (bh, n_k_blocks)
+    lens = jnp.broadcast_to(
+        jnp.asarray(length, jnp.int32).reshape(-1), (bh,))
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, 1), lambda h, j: (0, 0),
+            pl.BlockSpec((1, 1), lambda h, j: (h, 0),
                          memory_space=pltpu.SMEM),
             pl.BlockSpec((1, 1, d), lambda h, j: (h, 0, 0)),
             pl.BlockSpec((1, bk, d), lambda h, j: (h, j, 0)),
@@ -114,4 +117,4 @@ def q8_decode_attention_pallas(q: jax.Array, kq: jax.Array, ks: jax.Array,
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-    )(length.reshape(1, 1).astype(jnp.int32), q, kq, ks, vq, vs)
+    )(lens.reshape(bh, 1), q, kq, ks, vq, vs)

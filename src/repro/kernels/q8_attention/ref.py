@@ -15,12 +15,15 @@ def dequant(q8: jax.Array, scale: jax.Array) -> jax.Array:
 
 
 def q8_decode_attention_ref(q, kq, ks, vq, vs, length) -> jax.Array:
-    """q: (BH, 1, D); int8 caches + scales; attend [0, length)."""
+    """q: (BH, 1, D); int8 caches + scales; attend [0, length).
+    ``length``: scalar or (BH,) per-lane depths."""
     k = dequant(kq, ks)
     v = dequant(vq, vs)
     d = q.shape[-1]
     s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k) * (d ** -0.5)
-    mask = jnp.arange(k.shape[1]) < length
-    s = jnp.where(mask[None, None, :], s, -1e30)
+    lens = jnp.broadcast_to(
+        jnp.asarray(length, jnp.int32).reshape(-1), (q.shape[0],))
+    mask = jnp.arange(k.shape[1])[None, None, :] < lens[:, None, None]
+    s = jnp.where(mask, s, -1e30)
     w = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bqk,bkd->bqd", w, v).astype(q.dtype)

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from repro import flags
 from repro.configs import ArchConfig
+from repro.core.quantize import QBLOCK, quantize_q8_0
 from repro.kernels.api import dispatch
 from repro.models.layers import (KeyGen, Param, mm, mm_out, ninit, rmsnorm,
                                  rope)
@@ -148,7 +149,8 @@ def attention(p: dict, x: jax.Array, cfg: ArchConfig, *,
               x_kv: Optional[jax.Array] = None,
               positions: Optional[jax.Array] = None,
               use_rope: bool = True,
-              layer_idx=None):
+              layer_idx=None,
+              kv_lens=None):
     """Returns (y, new_cache). Modes:
       train   — full-sequence, no cache
       prefill — full-sequence, fills and returns cache
@@ -163,6 +165,16 @@ def attention(p: dict, x: jax.Array, cfg: ArchConfig, *,
     token-sized dynamic-update-slice instead of re-materializing the full
     per-layer cache through the scan's output stacking (§Perf cell C:
     the baseline rewrote the entire KV cache every decode step).
+
+    ``kv_lens`` (decode, cross-attention): per-lane valid KV lengths —
+    serving pads encoder states to the pool's ``enc_len``, so lane b
+    attends cached cross K/V positions ``[0, kv_lens[b])`` only.
+
+    A cache produced with ``dtype="q8_0"`` (``init_kv_cache`` /
+    ``quantize_kv_cache``) stores ``{kq, ks, vq, vs}`` planes; decode
+    quantizes the new token in place and reads the cache through
+    ``dispatch("q8_decode_attention", ...)`` — the paper's Q8_0 LOAD
+    saving applied to the decode-cache stream (~0.53x bf16 bytes).
     """
     b, s, _ = x.shape
     h = cfg.n_heads
@@ -199,6 +211,15 @@ def attention(p: dict, x: jax.Array, cfg: ArchConfig, *,
     per_lane = pos_v.ndim == 1
     pos_b = pos_v if per_lane else jnp.broadcast_to(pos_v, (b,))
     stacked = layer_idx is not None
+    q8 = is_q8_cache(cache)
+    if q8 and (softcap is not None or window is not None):
+        raise NotImplementedError(
+            "q8_0 KV-cache decode supports plain softmax attention only "
+            "(no attn_softcap / sliding window)")
+    if q8 and not stacked:
+        raise NotImplementedError(
+            "q8_0 KV-cache decode requires the stacked cache path "
+            "(REPRO_BASELINE=1 serves bf16 caches only)")
     if x_kv is None:
         q, k_new, v_new = _project_qkv(p, x, cfg)
         if use_rope:
@@ -220,6 +241,20 @@ def attention(p: dict, x: jax.Array, cfg: ArchConfig, *,
                         cb, kn[None, None].astype(cb.dtype),
                         (layer_idx, pp, 0, 0)),
                     in_axes=(1, 0, 0), out_axes=1)(c, new[:, 0], pos_b)
+            if q8:
+                # quantize the one new token and write its int8+scale
+                # planes in place; the cache matvec then runs through
+                # the dispatched q8_decode_attention kernel.
+                kt = quantize_q8_0(k_new, axis=-1)
+                vt = quantize_q8_0(v_new, axis=-1)
+                new_cache = {"kq": upd5(cache["kq"], kt.q),
+                             "ks": upd5(cache["ks"], kt.scale),
+                             "vq": upd5(cache["vq"], vt.q),
+                             "vs": upd5(cache["vs"], vt.scale)}
+                out = _q8_cache_attention(q, new_cache, layer_idx,
+                                          pos_b + 1)
+                y = mm_out(out.astype(x.dtype), p["wo"])
+                return constrain(y, "batch", None, "embed"), new_cache
             k_cache = upd5(cache["k"], k_new)
             v_cache = upd5(cache["v"], v_new)
             new_cache = {"k": k_cache, "v": v_cache}
@@ -252,13 +287,20 @@ def attention(p: dict, x: jax.Array, cfg: ArchConfig, *,
         mask = kpos[None, :] <= pos_b[:, None]           # (B, K)
         if window is not None:
             mask &= (pos_b[:, None] - kpos[None, :]) < window
-    else:  # cross-attention decode: cached encoder K/V, all valid
+    else:  # cross-attention decode: cached encoder K/V
         q = mm(x, p["wq"])
         if "bq" in p:
             q = q + p["bq"].astype(q.dtype)
         if "q_norm" in p:
             q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
         new_cache = cache
+        if q8:  # read-only Q8_0 planes; per-lane encoder lengths
+            kv_len = cache["kq"].shape[2]
+            lens = (jnp.asarray(kv_lens, jnp.int32) if kv_lens is not None
+                    else jnp.full((b,), kv_len, jnp.int32))
+            out = _q8_cache_attention(q, cache, layer_idx, lens)
+            y = mm_out(out.astype(x.dtype), p["wo"])
+            return constrain(y, "batch", None, "embed"), new_cache
         if stacked:   # read-only slice of the stacked cross cache
             k_layer = jax.lax.dynamic_index_in_dim(cache["k"], layer_idx,
                                                    0, keepdims=False)
@@ -268,7 +310,11 @@ def attention(p: dict, x: jax.Array, cfg: ArchConfig, *,
         else:
             k_layer, v_layer = cache["k"], cache["v"]
             kv_len = cache["k"].shape[1]
-        mask = jnp.ones((b, kv_len), bool)
+        if kv_lens is None:
+            mask = jnp.ones((b, kv_len), bool)
+        else:   # serving: encoder states padded to the pool's enc_len
+            mask = (jnp.arange(kv_len)[None, :]
+                    < jnp.asarray(kv_lens, jnp.int32)[:, None])
 
     q = constrain(q, "batch", None, "heads", "head_dim")
     k = _repeat_kv(k_layer, h)
@@ -290,6 +336,30 @@ def attention(p: dict, x: jax.Array, cfg: ArchConfig, *,
     return constrain(y, "batch", None, "embed"), new_cache
 
 
+def _q8_cache_attention(q: jax.Array, planes: dict, layer_idx,
+                        lens: jax.Array) -> jax.Array:
+    """Decode matvec over one layer of the stacked Q8_0 cache.
+
+    q: (B, 1, H, D); ``planes``: {kq, ks, vq, vs} each (L, B, S, Hkv, ·);
+    lane b attends cache positions [0, lens[b]). The cache stays int8 all
+    the way to the kernel — dequantization happens next to the dot
+    (paper C1), via the ACCEL/HOST-routed ``q8_decode_attention`` op.
+    Returns (B, 1, H, D)."""
+    b, _, h, d = q.shape
+
+    def flat(c):
+        lay = jax.lax.dynamic_index_in_dim(c, layer_idx, 0, keepdims=False)
+        lay = _repeat_kv(lay, h)                      # (B, S, H, ·)
+        return lay.transpose(0, 2, 1, 3).reshape(b * h, lay.shape[1], -1)
+
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, 1, d)
+    lens_f = jnp.repeat(jnp.asarray(lens, jnp.int32), h)
+    out = dispatch("q8_decode_attention", qf, flat(planes["kq"]),
+                   flat(planes["ks"]), flat(planes["vq"]),
+                   flat(planes["vs"]), lens_f)
+    return out.reshape(b, h, 1, d).transpose(0, 2, 1, 3)
+
+
 def _write_prefill_cache(cache: Optional[dict], k: jax.Array, v: jax.Array):
     """Store prefill K/V (padding up to cache length if one was allocated)."""
     if cache is None:
@@ -304,5 +374,40 @@ def _write_prefill_cache(cache: Optional[dict], k: jax.Array, v: jax.Array):
 
 def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int,
                   dtype=jnp.bfloat16) -> dict:
+    """KV cache planes. ``dtype`` is an array dtype (bf16/f32 cache) or
+    the string ``"q8_0"``: int8 planes + f16 scales blocked along
+    head_dim — the serving engine's quantized-cache policy."""
     shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    if isinstance(dtype, str) and dtype == "q8_0":
+        if cfg.head_dim % QBLOCK:
+            raise ValueError(
+                f"q8_0 KV cache needs head_dim % {QBLOCK} == 0, got "
+                f"{cfg.head_dim}")
+        sshape = shape[:-1] + (cfg.head_dim // QBLOCK,)
+        return {"kq": jnp.zeros(shape, jnp.int8),
+                "ks": jnp.zeros(sshape, jnp.float16),
+                "vq": jnp.zeros(shape, jnp.int8),
+                "vs": jnp.zeros(sshape, jnp.float16)}
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def is_q8_cache(cache) -> bool:
+    return isinstance(cache, dict) and "kq" in cache
+
+
+def quantize_kv_cache(tree):
+    """bf16 KV-cache pytree -> Q8_0 plane pytree.
+
+    Every ``{"k", "v"}`` dict becomes ``{"kq", "ks", "vq", "vs"}``
+    (int8 planes + f16 scales, 32-blocked along head_dim); state caches
+    (ssm/xlstm — different key sets) pass through untouched. The serving
+    engine applies this to each one-shot prefill cache before scattering
+    it into a ``cache_dtype="q8_0"`` pool."""
+    if isinstance(tree, dict):
+        if set(tree) == {"k", "v"}:
+            kt = quantize_q8_0(tree["k"], axis=-1)
+            vt = quantize_q8_0(tree["v"], axis=-1)
+            return {"kq": kt.q, "ks": kt.scale,
+                    "vq": vt.q, "vs": vt.scale}
+        return {key: quantize_kv_cache(sub) for key, sub in tree.items()}
+    return tree

@@ -96,9 +96,13 @@ def encode(params: dict, cfg: ArchConfig, frames: jax.Array) -> jax.Array:
 
 def decode_tokens(params: dict, cfg: ArchConfig, tokens: jax.Array,
                   enc_out: Optional[jax.Array] = None, *,
-                  mode: str = "train", cache=None, pos=None):
+                  mode: str = "train", cache=None, pos=None,
+                  enc_lens=None):
     """Decoder pass. train/prefill: tokens (B, S) with enc_out given.
-    decode: tokens (B, 1), cache holds self KV + cross KV."""
+    decode: tokens (B, 1), cache holds self KV + cross KV. ``enc_lens``
+    (decode, optional): (B,) valid encoder lengths — serving pads cached
+    encoder K/V to the pool's enc_len, so cross-attention must mask the
+    padded tail per lane."""
     b, s = tokens.shape
     x = embed(params["embed"], tokens)
     if mode == "decode":
@@ -127,7 +131,7 @@ def decode_tokens(params: dict, cfg: ArchConfig, tokens: jax.Array,
                 lp["cross_attn"], h, cfg, kind="bidir", mode=mode,
                 cache=lc["cross"], pos=pos, use_rope=False,
                 x_kv=h,  # x_kv flags the cross path; cached K/V are used
-                layer_idx=layer_idx)
+                layer_idx=layer_idx, kv_lens=enc_lens)
         else:
             c, cross_c = attn_mod.attention(
                 lp["cross_attn"], h, cfg, kind="bidir", mode=mode,

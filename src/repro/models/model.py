@@ -64,13 +64,16 @@ class Model:
     def forward(self, values, batch: dict, *, mode: str = "train",
                 cache=None, pos=None):
         """Returns (logits, new_cache). ``batch`` keys by family:
-        tokens (all); enc_frames (audio); img_embed (vlm, train/prefill)."""
+        tokens (all); enc_frames (audio); img_embed (vlm, train/prefill);
+        enc_lens (audio decode, optional: per-lane valid encoder lengths
+        for cross-attention over padded cached encoder states)."""
         cfg = self.cfg
         if cfg.enc_dec:
             if mode == "decode":
                 return encdec_mod.decode_tokens(values, cfg, batch["tokens"],
                                                 mode="decode", cache=cache,
-                                                pos=pos)
+                                                pos=pos,
+                                                enc_lens=batch.get("enc_lens"))
             enc_out = encdec_mod.encode(values, cfg, batch["enc_frames"])
             return encdec_mod.decode_tokens(values, cfg, batch["tokens"],
                                             enc_out, mode=mode, cache=cache)
@@ -82,6 +85,9 @@ class Model:
     # ---- cache ------------------------------------------------------------
     def init_cache(self, batch: int, max_len: int, enc_len: int = 1500,
                    dtype=jnp.bfloat16):
+        """``dtype``: an array dtype, or the string ``"q8_0"`` for the
+        serving engine's quantized KV-cache policy (int8+scale planes;
+        recurrent states stay bf16)."""
         if self.cfg.enc_dec:
             return encdec_mod.init_encdec_cache(self.cfg, batch, max_len,
                                                 enc_len, dtype)

@@ -148,6 +148,10 @@ def _block_cache(cfg: ArchConfig, btype: str, kind: str, batch: int,
                  max_len: int, dtype):
     if btype in ("attn", "shared_attn"):
         return {"kv": attn_mod.init_kv_cache(cfg, batch, max_len, dtype)}
+    # "q8_0" applies to KV planes only; recurrent states stay bf16
+    # (they are O(1)-sized and fully rewritten every step — no LOAD win)
+    if isinstance(dtype, str) and dtype == "q8_0":
+        dtype = jnp.bfloat16
     if btype == "mamba":
         return {"ssm": ssm_mod.init_mamba_cache(cfg, batch, dtype)}
     if btype == "mlstm":

@@ -1,2 +1,3 @@
-from repro.serving.engine import ServeEngine, Request, RequestState
+from repro.serving.engine import (AudioRequest, Request, RequestState,
+                                  ServeEngine)
 from repro.serving.scheduler import BatchScheduler

@@ -14,6 +14,20 @@ Continuous-batching design (vLLM-style, adapted to JAX's static shapes):
 * Q8_0 weights (``core.quantize.quantize_tree``) serve through the same
   forward — the paper's quantized serving variant is a flag, not a fork.
 
+Cache-dtype policy (``cache_dtype="bf16" | "q8_0"``): a q8_0 pool stores
+int8+f16-scale planes (``models.attention.init_kv_cache``); prefill
+caches are quantized before the slot scatter, decode writes quantize the
+new token in place, and the decode cache matvec routes through
+``dispatch("q8_decode_attention", ...)`` — the paper's Q8_0 LOAD saving
+(~0.53x cache bytes/step, ``kernels.q8_attention.ops.cache_traffic_ratio``)
+applied to the decode bottleneck.
+
+Encoder-decoder serving (whisper): requests carry ``enc_frames``; admit
+encodes them at their exact length (bidirectional attention — padding
+would corrupt the states), caches the per-slot encoder K/V in the pool's
+cross-cache (padded to ``enc_len``), and decode masks each lane's cross
+attention to its true encoder length.
+
 The batch scheduler (scheduler.py) decides admission; this module is the
 mechanism: slot allocation, cache scatter, masked decode.
 """
@@ -27,11 +41,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import flags
+from repro.core.quantize import stored_bytes
 from repro.kernels.api import (DispatchContext, dispatch_counters,
                                use_context)
+from repro.kernels.q8_attention.ops import cache_traffic_ratio
+from repro.models.attention import quantize_kv_cache
 from repro.models.model import Model
 
 EOS_DEFAULT = 2
+
+CACHE_DTYPES = ("bf16", "q8_0")
 
 
 @dataclasses.dataclass
@@ -40,6 +60,21 @@ class Request:
     tokens: list             # prompt token ids
     max_new: int = 16
     eos_id: int = EOS_DEFAULT
+    # enc-dec (audio) requests: precomputed frame embeddings
+    # (S_enc, d_model); required when the served model is enc_dec.
+    enc_frames: Optional[Any] = None
+
+
+@dataclasses.dataclass
+class AudioRequest(Request):
+    """A Request whose ``enc_frames`` is required — the whisper serving
+    path. Same scheduler/engine treatment as text requests; the frames
+    are encoded once at admit and cached per slot."""
+
+    def __post_init__(self):
+        if self.enc_frames is None:
+            raise ValueError(
+                f"AudioRequest {self.uid} requires enc_frames")
 
 
 @dataclasses.dataclass
@@ -49,6 +84,7 @@ class RequestState:
     pos: int                 # next position to write
     out: list                # generated ids
     done: bool = False
+    error: Optional[str] = None   # set when rejected/failed, slot == -1
 
 
 def _bucket(n: int, buckets=(32, 64, 128, 256, 512, 1024, 2048)) -> int:
@@ -61,77 +97,150 @@ def _bucket(n: int, buckets=(32, 64, 128, 256, 512, 1024, 2048)) -> int:
 class ServeEngine:
     def __init__(self, model: Model, params: Any, *, n_slots: int = 8,
                  max_len: int = 256, enc_len: int = 64,
+                 cache_dtype: str = "bf16",
                  dispatch_ctx: Optional[DispatchContext] = None):
         """``dispatch_ctx``: kernel-routing context (budget, backend
         policy — repro.kernels.api) applied while the prefill/decode
         functions trace; None uses the env/default context. Routing is
-        baked in at first trace, so construct one engine per context."""
+        baked in at first trace, so construct one engine per context.
+
+        ``cache_dtype``: "bf16" (dense planes) or "q8_0" (int8+scale
+        planes, decode reads via the q8_decode_attention op)."""
+        if cache_dtype not in CACHE_DTYPES:
+            raise ValueError(f"cache_dtype {cache_dtype!r}: expected one "
+                             f"of {CACHE_DTYPES}")
+        cfg = model.cfg
+        if cache_dtype == "q8_0":
+            if flags.BASELINE:
+                raise ValueError("cache_dtype='q8_0' needs the stacked "
+                                 "decode path (unset REPRO_BASELINE)")
+            if cfg.attn_softcap is not None or cfg.sliding_window \
+                    is not None or cfg.local_global:
+                raise ValueError(
+                    f"cache_dtype='q8_0' supports plain softmax decode "
+                    f"attention only; {cfg.name} uses softcap/windowed "
+                    f"attention")
         self.model = model
         self.params = params
         self.dispatch_ctx = dispatch_ctx
         self.n_slots = n_slots
         self.max_len = max_len
-        self.cache = model.init_cache(n_slots, max_len, enc_len)
+        self.enc_len = enc_len
+        self.enc_dec = bool(cfg.enc_dec)
+        self.cache_dtype = cache_dtype
+        cdt = "q8_0" if cache_dtype == "q8_0" else jnp.bfloat16
+        self.cache = model.init_cache(n_slots, max_len, enc_len, dtype=cdt)
         self.free = list(range(n_slots))
         self.active: dict[int, RequestState] = {}   # slot -> state
         self._tokens = np.zeros((n_slots, 1), np.int32)
-        # parked lanes decode at pos 0 harmlessly; results are discarded
+        # parked lanes decode at pos 0 (one attendable position) and the
+        # results are discarded; _free_slot zeroes pos/tokens so a dead
+        # lane never attends its stale context.
         self._pos = np.zeros((n_slots,), np.int32)
+        self._enc_lens = np.zeros((n_slots,), np.int32)
         self._decode = self._build_decode()
-        self._prefill_fns: dict[int, Any] = {}
+        self._prefill_fns: dict[tuple, Any] = {}
 
     # ------------------------------------------------------------------
     def _build_decode(self):
-        model = self.model
+        model, enc_dec = self.model, self.enc_dec
 
         @jax.jit
-        def decode(params, cache, tokens, pos):
+        def decode(params, cache, tokens, pos, enc_lens):
+            batch = {"tokens": tokens}
+            if enc_dec:
+                batch["enc_lens"] = enc_lens
             logits, new_cache = model.forward(
-                params, {"tokens": tokens}, mode="decode",
-                cache=cache, pos=pos)
+                params, batch, mode="decode", cache=cache, pos=pos)
             nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
             return nxt, new_cache
 
         return decode
 
-    def _prefill_fn(self, bucket: int):
-        if bucket not in self._prefill_fns:
-            model, max_len = self.model, self.max_len
+    def _prefill_fn(self, bucket: int, enc_s: Optional[int] = None):
+        key = (bucket, enc_s)
+        if key not in self._prefill_fns:
+            model, max_len, enc_len = self.model, self.max_len, self.enc_len
+            q8 = self.cache_dtype == "q8_0"
 
             @jax.jit
-            def prefill(params, tokens):
-                cache = model.init_cache(1, max_len)
-                logits, cache = model.forward(params, {"tokens": tokens},
+            def prefill(params, tokens, enc_frames=None):
+                cache = model.init_cache(1, max_len, enc_len)
+                batch = {"tokens": tokens}
+                if enc_frames is not None:
+                    batch["enc_frames"] = enc_frames
+                logits, cache = model.forward(params, batch,
                                               mode="prefill", cache=cache)
+                if q8:
+                    cache = quantize_kv_cache(cache)
                 return logits, cache
 
-            self._prefill_fns[bucket] = prefill
-        return self._prefill_fns[bucket]
+            self._prefill_fns[key] = prefill
+        return self._prefill_fns[key]
 
     # ------------------------------------------------------------------
-    def admit(self, req: Request) -> Optional[RequestState]:
-        """Prefill a request into a free slot; None if the pool is full."""
-        if not self.free:
-            return None
+    def validate(self, req: Request) -> Optional[str]:
+        """Admission precheck: an error string (request can never be
+        served by this engine), or None. The scheduler rejects failing
+        requests at submit() instead of dying mid-tick."""
         n = len(req.tokens)
         if n + req.max_new >= self.max_len:
-            raise ValueError(f"request {req.uid} too long for engine "
-                             f"({n}+{req.max_new} vs {self.max_len})")
+            return (f"request {req.uid} too long for engine "
+                    f"({n}+{req.max_new} vs {self.max_len})")
+        if self.enc_dec:
+            if req.enc_frames is None:
+                return (f"request {req.uid}: enc-dec model "
+                        f"{self.model.cfg.name} requires enc_frames")
+            frames = np.asarray(req.enc_frames)
+            if frames.ndim != 2 or frames.shape[1] != self.model.cfg.d_model:
+                return (f"request {req.uid}: enc_frames must be "
+                        f"(S_enc, {self.model.cfg.d_model}), got "
+                        f"{frames.shape}")
+            if frames.shape[0] > self.enc_len:
+                return (f"request {req.uid}: {frames.shape[0]} encoder "
+                        f"frames exceed the pool enc_len {self.enc_len}")
+        elif req.enc_frames is not None:
+            return (f"request {req.uid}: enc_frames on decoder-only "
+                    f"model {self.model.cfg.name}")
+        return None
+
+    def admit(self, req: Request) -> Optional[RequestState]:
+        """Prefill a request into a free slot; None if the pool is full.
+        Raises ValueError for requests that can never be served (use
+        ``validate`` to precheck)."""
+        if not self.free:
+            return None
+        err = self.validate(req)
+        if err is not None:
+            raise ValueError(err)
+        n = len(req.tokens)
         slot = self.free.pop()
         bucket = min(_bucket(n), self.max_len)
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :n] = req.tokens
+        enc_s = None
         with use_context(self.dispatch_ctx):
-            logits, cache1 = self._prefill_fn(bucket)(self.params,
-                                                      jnp.asarray(toks))
+            if self.enc_dec:
+                # encode at the exact frame count: the encoder attends
+                # bidirectionally, so bucket padding would corrupt every
+                # frame state (one compile per distinct enc_s).
+                frames = jnp.asarray(np.asarray(req.enc_frames),
+                                     jnp.float32)[None]
+                enc_s = int(frames.shape[1])
+                logits, cache1 = self._prefill_fn(bucket, enc_s)(
+                    self.params, jnp.asarray(toks), frames)
+            else:
+                logits, cache1 = self._prefill_fn(bucket)(
+                    self.params, jnp.asarray(toks))
         self.cache = _scatter_slot(self.cache, cache1, slot)
         first = int(np.argmax(np.asarray(logits)[0, n - 1]))
         st = RequestState(req=req, slot=slot, pos=n, out=[first])
         self._tokens[slot, 0] = first
         self._pos[slot] = n
+        self._enc_lens[slot] = enc_s or 0
         if first == req.eos_id or len(st.out) >= req.max_new:
             st.done = True
-            self.free.append(slot)
+            self._free_slot(slot)
         else:
             self.active[slot] = st
         return st
@@ -144,7 +253,7 @@ class ServeEngine:
         with use_context(self.dispatch_ctx):
             nxt, self.cache = self._decode(
                 self.params, self.cache, jnp.asarray(self._tokens),
-                jnp.asarray(self._pos))
+                jnp.asarray(self._pos), jnp.asarray(self._enc_lens))
         nxt = np.asarray(nxt)
         finished = []
         for slot, st in list(self.active.items()):
@@ -157,18 +266,69 @@ class ServeEngine:
                     or st.pos >= self.max_len - 1:
                 st.done = True
                 self.active.pop(slot)
-                self.free.append(slot)
+                self._free_slot(slot)
                 finished.append(st)
         return finished
+
+    def _free_slot(self, slot: int) -> None:
+        """Return a lane to the pool and zero its decode inputs — a
+        parked lane then attends exactly one (stale but harmless)
+        position instead of its full dead context."""
+        self.free.append(slot)
+        self._tokens[slot, 0] = 0
+        self._pos[slot] = 0
+        self._enc_lens[slot] = 0
 
     @property
     def n_active(self) -> int:
         return len(self.active)
 
+    # ------------------------------------------------------------------
+    def cache_report(self) -> dict:
+        """Cache footprint / decode-traffic accounting.
+
+        ``bytes_per_step`` is the full-pool KV stream of one decode tick
+        (this dense implementation reads every cache position and masks
+        after the dot — exactly the paper's LOAD term). The analytic
+        per-token figure uses ``core.quantize.stored_bytes`` under the
+        paper's dense packing (C3)."""
+        kv_bytes, state_bytes = _cache_bytes(self.cache)
+        cfg = self.model.cfg
+        dt = "q8_0" if self.cache_dtype == "q8_0" else "bf16"
+        per_tok = 2 * cfg.n_layers * stored_bytes(
+            (cfg.n_kv_heads, cfg.head_dim), dt)
+        return {
+            "cache_dtype": self.cache_dtype,
+            "kv_bytes_total": kv_bytes,
+            "state_bytes_total": state_bytes,
+            "bytes_per_step": kv_bytes,
+            "self_kv_bytes_per_token": per_tok,
+            "traffic_ratio_vs_bf16":
+                cache_traffic_ratio() if self.cache_dtype == "q8_0" else 1.0,
+        }
+
     def dispatch_report(self) -> dict:
-        """Trace-time kernel-routing counters, keyed (op, decision,
-        backend). Process-global: reset via api.reset_dispatch_log()."""
-        return dict(dispatch_counters())
+        """Kernel-routing counters (trace-time, keyed (op, decision,
+        backend); process-global — reset via api.reset_dispatch_log())
+        plus the engine's cache footprint/traffic accounting."""
+        return {
+            "counters": dict(dispatch_counters()),
+            "cache": self.cache_report(),
+        }
+
+
+def _cache_bytes(tree) -> tuple[int, int]:
+    """(KV-plane bytes, recurrent-state bytes) of a cache pytree."""
+    if isinstance(tree, dict):
+        if set(tree) in ({"k", "v"}, {"kq", "ks", "vq", "vs"}):
+            return sum(int(l.nbytes) for l in jax.tree.leaves(tree)), 0
+        kv = st = 0
+        for sub in tree.values():
+            a, b = _cache_bytes(sub)
+            kv += a
+            st += b
+        return kv, st
+    return 0, sum(int(l.nbytes) for l in jax.tree.leaves(tree))
 
 
 def _scatter_slot(pool: Any, one: Any, slot: int) -> Any:

@@ -26,6 +26,7 @@ class SchedMetrics:
     ticks: int = 0
     admitted: int = 0
     completed: int = 0
+    rejected: int = 0           # failed validation; completed as errors
     occupancy_sum: float = 0.0
     queue_wait_sum: int = 0     # ticks spent waiting, summed over requests
     ttft_sum: int = 0           # ticks from submit to first token
@@ -47,8 +48,21 @@ class BatchScheduler:
         self.metrics = SchedMetrics()
         self.results: dict[int, RequestState] = {}
 
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> Optional[RequestState]:
+        """Queue a request. Requests this engine can never serve
+        (too long, missing/oversized enc_frames, ...) are rejected here
+        — completed immediately as a failed RequestState in ``results``
+        — so one bad request cannot kill the serving loop. Returns the
+        failed state for rejected requests, None when queued."""
+        err = self.engine.validate(req)
+        if err is not None:
+            st = RequestState(req=req, slot=-1, pos=0, out=[], done=True,
+                              error=err)
+            self.results[req.uid] = st
+            self.metrics.rejected += 1
+            return st
         self.queue.append((req, self.metrics.ticks))
+        return None
 
     def tick(self) -> list[RequestState]:
         m = self.metrics
@@ -57,8 +71,19 @@ class BatchScheduler:
         while (self.queue and self.engine.free
                and admitted < self.max_admit_per_tick):
             req, t_submit = self.queue.popleft()
-            st = self.engine.admit(req)
-            assert st is not None
+            try:
+                st = self.engine.admit(req)
+            except ValueError as e:
+                # a request submit()'s precheck missed: fail it, keep
+                # the serving loop alive
+                st = RequestState(req=req, slot=-1, pos=0, out=[],
+                                  done=True, error=str(e))
+                self.results[req.uid] = st
+                m.rejected += 1
+                continue
+            if st is None:      # pool filled since the loop condition
+                self.queue.appendleft((req, t_submit))
+                break
             m.admitted += 1
             m.queue_wait_sum += m.ticks - t_submit
             m.ttft_sum += m.ticks - t_submit   # first token at admit

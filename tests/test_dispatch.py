@@ -347,5 +347,8 @@ def test_serve_engine_accepts_dispatch_ctx():
     assert st is not None
     eng.step()
     rep = eng.dispatch_report()
-    assert any(dec == "host" for (_, dec, _) in rep), rep
-    assert not any(b == "pallas" for (_, _, b) in rep), rep
+    counters = rep["counters"]
+    assert any(dec == "host" for (_, dec, _) in counters), counters
+    assert not any(b == "pallas" for (_, _, b) in counters), counters
+    assert rep["cache"]["cache_dtype"] == "bf16"
+    assert rep["cache"]["traffic_ratio_vs_bf16"] == 1.0

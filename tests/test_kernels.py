@@ -25,7 +25,8 @@ KEY = jax.random.key(42)
 # ------------------------------------------------------------------ q8 gemm
 
 @pytest.mark.parametrize("m,n,k", [
-    (8, 128, 64), (16, 128, 128), (128, 256, 512),
+    (8, 128, 64), (16, 128, 128),
+    pytest.param(128, 256, 512, marks=pytest.mark.slow),  # big-tile sweep
     (8, 128, 96),          # K not a multiple of default bk -> C2 residual
     (5, 130, 64),          # ragged M/N -> padding path
     (1, 128, 2048),        # matvec (decode shape)
@@ -122,7 +123,11 @@ def test_flash_attention_matches_ref(causal, window, softcap):
                                rtol=2e-4, atol=2e-4)
 
 
-@pytest.mark.parametrize("s", [128, 192, 384])
+@pytest.mark.parametrize("s", [
+    128,
+    pytest.param(192, marks=pytest.mark.slow),
+    pytest.param(384, marks=pytest.mark.slow),
+])
 def test_flash_attention_seq_sweep(s):
     bh, d = 2, 32
     q = jax.random.normal(jax.random.fold_in(KEY, s), (bh, s, d))
@@ -183,7 +188,7 @@ def test_chunked_attention_equals_dense():
 
 @pytest.mark.parametrize("s,b,h,hd,t", [
     (64, 2, 4, 32, 64), (100, 2, 4, 32, 32),   # ragged S -> padded chunk
-    (128, 1, 2, 128, 32),
+    pytest.param(128, 1, 2, 128, 32, marks=pytest.mark.slow),
 ])
 def test_slstm_scan_kernel_matches_ref(s, b, h, hd, t):
     """Time-chunked Pallas sLSTM (state resident in VMEM) ≡ lax.scan
@@ -236,6 +241,34 @@ def test_q8_decode_attention_matches_ref(bh, s, d, length, bk):
     want = q8_decode_attention_ref(q, kq, ks, vq, vs, length)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-4, atol=2e-4)
+
+
+def test_q8_decode_attention_per_lane_lengths():
+    """(BH,) length vector: each lane masks at its own depth — the
+    serving engine's continuous-batching configuration — and must agree
+    with per-lane scalar-length calls."""
+    from repro.kernels.q8_attention.ops import (q8_decode_attention,
+                                                quantize_kv)
+    from repro.kernels.q8_attention.ref import q8_decode_attention_ref
+    bh, s, d = 4, 128, 32
+    q = jax.random.normal(jax.random.fold_in(KEY, 41), (bh, 1, d))
+    k = jax.random.normal(jax.random.fold_in(KEY, 42), (bh, s, d))
+    v = jax.random.normal(jax.random.fold_in(KEY, 43), (bh, s, d))
+    kq, ks = quantize_kv(k)
+    vq, vs = quantize_kv(v)
+    lens = jnp.asarray([1, 17, 64, 128], jnp.int32)
+    got = q8_decode_attention(q, kq, ks, vq, vs, lens, bk=64,
+                              interpret=True)
+    want = q8_decode_attention_ref(q, kq, ks, vq, vs, lens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+    # per-lane == the same lane run alone at a scalar length
+    for i, n in enumerate(lens):
+        one = q8_decode_attention_ref(q[i:i + 1], kq[i:i + 1],
+                                      ks[i:i + 1], vq[i:i + 1],
+                                      vs[i:i + 1], int(n))
+        np.testing.assert_allclose(np.asarray(want[i]), np.asarray(one[0]),
+                                   rtol=1e-5, atol=1e-5)
 
 
 def test_q8_decode_attention_close_to_exact():

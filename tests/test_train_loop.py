@@ -71,6 +71,7 @@ def test_nan_guard_aborts(tmp_path):
         loop.run(init_train_state(model, jax.random.key(0)))
 
 
+@pytest.mark.slow   # wall-clock-timing heuristic, not correctness
 def test_straggler_detection(tmp_path):
     model, loop, _ = _setup(tmp_path, total_steps=8, save_every=100)
     loop.cfg.straggler_factor = 2.0
