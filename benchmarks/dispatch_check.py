@@ -3,6 +3,12 @@ executable dispatch layer (repro.kernels.api) must take the SAME
 ACCEL/HOST decision for every kernel in the Whisper workload — the
 paper's control law is one predicate, exercised two ways.
 
+Budgets come from the platform registry: one plan-agreement row per
+registered ``imax3-28nm/*`` LMM configuration, each exercised through
+``DispatchContext.for_platform`` so the routing context (and the
+platform stamp in every trace record) is derived the way serving
+derives it.
+
 Also routes a real Q8 GEMM through ``dispatch`` under a loose and a
 zero budget and checks the backends actually diverge (Pallas vs host)
 while the numerics agree.
@@ -16,15 +22,14 @@ from benchmarks.common import fmt_table, pct, workloads
 from repro.core.offload import plan_offload
 from repro.core.quantize import quantize_q8_0
 from repro.kernels.api import (DispatchContext, decide, dispatch,
-                               dispatch_counters, reset_dispatch_log,
-                               use_context)
+                               dispatch_counters, dispatch_trace,
+                               reset_dispatch_log, use_context)
+from repro.platforms import get_platform, list_platforms
 
-BUDGETS_KB = (16, 32, 64)
 
-
-def _plan_agreement(work, budget):
-    ctx = DispatchContext(vmem_budget=budget, allow_pallas=True)
-    plan = plan_offload(work, budget)
+def _plan_agreement(work, platform_name):
+    ctx = DispatchContext.for_platform(platform_name, allow_pallas=True)
+    plan = plan_offload(work, ctx.vmem_budget, ctx.policy)
     accel = set(map(id, plan.accel))
     agree = 0
     for spec in work:
@@ -35,35 +40,43 @@ def _plan_agreement(work, budget):
 
 
 def _executed_routing():
-    """Route one GEMM at two budgets; report the backends taken."""
+    """Route one GEMM at two budgets; report the backends taken and the
+    platform stamp carried by the trace records."""
     x = jax.random.normal(jax.random.key(0), (8, 256), jnp.float32)
     w = jax.random.normal(jax.random.key(1), (256, 128), jnp.float32)
     wq = quantize_q8_0(w, axis=0)
-    outs, backends = {}, {}
-    for tag, budget in (("loose", 64 * 2 ** 20), ("zero", 0)):
+    outs, backends, stamps = {}, {}, {}
+    for tag, ctx in (
+            ("loose", DispatchContext.for_platform(
+                "tpu-v5e", allow_pallas=True, interpret=True)),
+            ("zero", DispatchContext(vmem_budget=0, allow_pallas=True,
+                                     interpret=True))):
         reset_dispatch_log()
-        with use_context(DispatchContext(vmem_budget=budget,
-                                         allow_pallas=True,
-                                         interpret=True)):
+        with use_context(ctx):
             outs[tag] = np.asarray(dispatch("q8_matmul", x, wq))
         ((_, decision, backend),) = {k for k in dispatch_counters()}
         backends[tag] = (decision, backend)
+        stamps[tag] = {r.platform for r in dispatch_trace()}
     reset_dispatch_log()
     close = np.allclose(outs["loose"], outs["zero"], rtol=1e-4, atol=1e-3)
-    return backends, close
+    return backends, stamps, close
 
 
 def run():
     w16, _ = workloads()
+    imax_names = [n for n in list_platforms("imax3-28nm")
+                  if get_platform(n).vmem_budget <= 64 * 1024]
     rows = []
     all_agree = True
-    for kb in BUDGETS_KB:
-        agree, total, cov = _plan_agreement(w16, kb * 1024)
+    for name in sorted(imax_names,
+                       key=lambda n: get_platform(n).vmem_budget):
+        agree, total, cov = _plan_agreement(w16, name)
         all_agree &= agree == total
-        rows.append([f"{kb} KB", f"{agree}/{total}", pct(100 * cov)])
-    backends, close = _executed_routing()
+        rows.append([name, f"{get_platform(name).vmem_budget // 1024} KB",
+                     f"{agree}/{total}", pct(100 * cov)])
+    backends, stamps, close = _executed_routing()
     table = fmt_table(
-        ["LMM budget", "plan==dispatch", "call coverage"],
+        ["platform", "LMM budget", "plan==dispatch", "call coverage"],
         rows, "Dispatch check — analytic plan vs executable routing")
     checks = {
         "plan and dispatch agree on every kernel": all_agree,
@@ -72,6 +85,8 @@ def run():
         "zero budget routes HOST->xla":
             backends["zero"] == ("host", "xla"),
         "routed outputs allclose across budgets": bool(close),
+        "platform-derived context stamps its records":
+            stamps["loose"] == {"tpu-v5e"} and stamps["zero"] == {""},
     }
     return table, checks
 

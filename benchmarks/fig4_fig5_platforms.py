@@ -1,13 +1,15 @@
-"""Figs 4 & 5: E2E latency and PDP by platform.
+"""Figs 4 & 5: E2E latency and PDP by platform — every hardware constant
+sourced through the ``repro.platforms`` registry.
 
-Paper rows carry the paper's published latency (Fig 4) and PDP (Fig 5).
-Note the paper's Fig-5 PDP values embed *measured phase-wise average
-power*, not nominal-TDP × latency (their §IV-A caveat): e.g. Q8_0 IMAX
+Paper rows carry the paper's published latency (Fig 4) and PDP (Fig 5),
+read from each registered platform's ``paper`` observables. Note the
+paper's Fig-5 PDP values embed *measured phase-wise average power*, not
+nominal-TDP × latency (their §IV-A caveat): e.g. Q8_0 IMAX
 11.1 s × 1.32 W = 14.65 J (Eq 1 with nominal power) vs the published
 12.6 J. We report both: ``pdp_eq1`` (latency × nominal power, our Eq-1
 derivation) and ``pdp_paper`` (their figure). Headline ratio checks run
 on the paper's own numbers; our calibrated model's Eq-1 PDP must land
-within 25 % of the published value.
+within 15 % of Eq-1 with the platform's nominal constants.
 
 'imax3-28nm(model)' rows are OUR calibrated accelerator model's
 predictions; 'tpu-v5e(projection)' places the brief's target chip on the
@@ -15,8 +17,8 @@ same axes (uncalibrated roofline constants).
 """
 
 from benchmarks.common import fmt_table, workloads
-from repro import hw
 from repro.core.energy import calibrate_imax, platform_pdp_table
+from repro.platforms import get_platform
 
 
 def run():
@@ -25,8 +27,8 @@ def run():
     rows_all = platform_pdp_table(w16, w8, calib)
     rows = []
     for r in rows_all:
-        paper_pdp = hw.PAPER_PDP_J.get((r["device"], r["kernel"]))
         phase = r.get("pdp_phase_j")
+        paper_pdp = r.get("pdp_paper_j")
         rows.append([r["device"], r["kernel"], f"{r['latency_s']:.2f}",
                      f"{r['power_w']:.3f}", f"{r['pdp_j']:.1f}",
                      f"{phase:.1f}" if phase else "-",
@@ -35,11 +37,16 @@ def run():
     table = fmt_table(["device", "kernel", "latency (s)", "power (W)",
                        "PDP eq1 (J)", "PDP phase (J)", "PDP paper (J)",
                        "source"], rows,
-                      "Figs 4+5 — E2E latency & PDP by platform")
+                      "Figs 4+5 — E2E latency & PDP by platform "
+                      "(registry-sourced)")
 
-    imax8 = hw.PAPER_PDP_J[("imax3-28nm", "q8_0")]
-    orin8 = hw.PAPER_PDP_J[("jetson-agx-orin", "q8_0")]
-    rtx8 = hw.PAPER_PDP_J[("rtx-4090", "q8_0")]
+    imax = get_platform("imax3-28nm")
+    orin = get_platform("jetson-agx-orin")
+    rtx = get_platform("rtx-4090")
+    imax8 = imax.paper_observable("pdp_j", "q8_0")
+    orin8 = orin.paper_observable("pdp_j", "q8_0")
+    rtx8 = rtx.paper_observable("pdp_j", "q8_0")
+    imax_lat8 = imax.paper_observable("latency_s", "q8_0")
     by = {(r["device"], r["kernel"]): r for r in rows_all}
     model8 = by[("imax3-28nm(model)", "q8_0")]
     checks = {
@@ -48,24 +55,24 @@ def run():
         "paper headline: 9.83x vs RTX4090 (Q8_0)":
             abs(rtx8 / imax8 - 9.83) < 0.02,
         "model latency within 15% of paper (q8)":
-            abs(model8["latency_s"] / hw.PAPER_LATENCY_S[
-                ("imax3-28nm", "q8_0")] - 1.0) < 0.15,
-        # Eq 1 with the paper's own nominal constants gives 11.1x1.32 =
-        # 14.65 J; our calibrated model must land within 15% of that.
+            abs(model8["latency_s"] / imax_lat8 - 1.0) < 0.15,
+        # Eq 1 with the platform's own nominal constants gives
+        # 11.1 x 1.32 = 14.65 J; our calibrated model must land within
+        # 15% of that.
         "model Eq1-PDP within 15% of paper-constants Eq1 (q8)":
             abs(model8["pdp_j"]
-                / (hw.PAPER_LATENCY_S[("imax3-28nm", "q8_0")]
-                   * hw.IMAX_POWER_Q8_W[32 * 1024]) - 1.0) < 0.15,
+                / (imax_lat8 * imax.platform_power("q8_0")) - 1.0) < 0.15,
         "published Fig5 (measured power) vs Eq1-nominal — info":
             (f"published {imax8}J implies IMAX duty factor "
-             f"{(imax8 - 0.6485 * 11.1) / (1.32 * 11.1):.2f}; "
+             f"{(imax8 - get_platform('cortex-a72').power.nominal_w * imax_lat8) / (imax.platform_power('q8_0') * imax_lat8):.2f}; "
              f"our Eq1 model: {model8['pdp_j']:.1f}J, "
              f"phase-wise: {model8['pdp_phase_j']:.1f}J"),
         "IMAX slower than GPUs but beats host CPU (Fig 4 ordering)":
-            hw.PAPER_LATENCY_S[("rtx-4090", "q8_0")]
-            < hw.PAPER_LATENCY_S[("jetson-agx-orin", "q8_0")]
+            rtx.paper_observable("latency_s", "q8_0")
+            < orin.paper_observable("latency_s", "q8_0")
             < model8["latency_s"]
-            < hw.PAPER_LATENCY_S[("cortex-a72", "q8_0")],
+            < get_platform("cortex-a72").paper_observable("latency_s",
+                                                          "q8_0"),
         "calibration residuals": calib.residuals,
     }
     return table, checks

@@ -10,16 +10,21 @@ monotone instead of U-shaped; reported for contrast).
 from benchmarks.common import fmt_table, workloads
 from repro.core.energy import calibrate_imax, lmm_sweep
 from repro.core.footprint import select_blocks
+from repro.platforms import get_platform, list_platforms
 
 
 def run():
     w16, w8 = workloads()
     calib = calibrate_imax(w16, w8)
+    # the swept budgets are the registered imax3-28nm LMM configurations
+    # (Fig 6 plots up to 128 KB)
+    budgets = tuple(sorted(
+        get_platform(n).vmem_budget for n in list_platforms("imax3-28nm")
+        if get_platform(n).vmem_budget <= 128 * 1024))
     out = []
     mins = {}
     for kern, work in (("fp16", w16), ("q8_0", w8)):
-        pts = lmm_sweep(work, calib.model, kern,
-                        budgets=tuple(k * 1024 for k in (16, 32, 64, 128)))
+        pts = lmm_sweep(work, calib.model, kern, budgets=budgets)
         for p in pts:
             out.append([kern, f"{p.budget_bytes // 1024}KB",
                         f"{p.latency_s:.2f}", f"{p.power_w:.3f}",

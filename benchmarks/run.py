@@ -1,9 +1,17 @@
 """Benchmark driver: one module per paper table/figure + the roofline
 table. ``python -m benchmarks.run`` prints every table and a check
 summary; non-zero exit if a reproduction check fails.
+
+Also emits ``BENCH_platforms.json`` — a machine-readable per-platform
+summary (latency/PDP rows from the registry-driven Fig-4/5 table,
+headline paper ratios, dispatch plan/execute agreement, calibration
+residuals). CI uploads it as an artifact on every run, so the file's
+history is the perf-trajectory baseline.
 """
 
 import importlib
+import json
+import os
 import sys
 import traceback
 
@@ -20,13 +28,48 @@ MODULES = [
     "benchmarks.decode_traffic",
 ]
 
+BENCH_JSON = os.environ.get("BENCH_PLATFORMS_JSON", "BENCH_platforms.json")
+
+
+def platforms_record(module_checks: dict) -> dict:
+    """The machine-readable per-platform record: every registry target's
+    latency/PDP (paper rows + our model rows), the paper's headline Q8_0
+    PDP ratios, and the dispatch-layer agreement result."""
+    from benchmarks.common import workloads
+    from repro.core.energy import calibrate_imax, platform_pdp_table
+    from repro.platforms import get_platform, list_platforms
+
+    w16, w8 = workloads()
+    calib = calibrate_imax(w16, w8)
+    rows = platform_pdp_table(w16, w8, calib)
+    imax8 = get_platform("imax3-28nm").paper_observable("pdp_j", "q8_0")
+    dispatch_checks = module_checks.get("benchmarks.dispatch_check", {})
+    return {
+        "schema": 1,
+        "platforms": list_platforms(),
+        "pdp_table": rows,
+        "paper_ratios": {
+            "q8_pdp_vs_jetson-agx-orin":
+                get_platform("jetson-agx-orin").paper_observable(
+                    "pdp_j", "q8_0") / imax8,
+            "q8_pdp_vs_rtx-4090":
+                get_platform("rtx-4090").paper_observable(
+                    "pdp_j", "q8_0") / imax8,
+        },
+        "dispatch_agreement": bool(dispatch_checks.get(
+            "plan and dispatch agree on every kernel", False)),
+        "calibration_residuals": calib.residuals,
+    }
+
 
 def main():
     failures = []
+    module_checks: dict = {}
     for name in MODULES:
         try:
             mod = importlib.import_module(name)
             table, checks = mod.run()
+            module_checks[name] = checks
             print(table)
             print("\nchecks:")
             for k, v in checks.items():
@@ -40,6 +83,14 @@ def main():
             traceback.print_exc()
             failures.append(f"{name}: exception")
         print()
+    try:
+        rec = platforms_record(module_checks)
+        with open(BENCH_JSON, "w") as fh:
+            json.dump(rec, fh, indent=1, sort_keys=True)
+        print(f"wrote {BENCH_JSON} ({len(rec['pdp_table'])} platform rows)")
+    except Exception:
+        traceback.print_exc()
+        failures.append("BENCH_platforms.json: exception")
     if failures:
         print(f"{len(failures)} BENCHMARK CHECK FAILURES:")
         for f in failures:

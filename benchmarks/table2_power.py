@@ -1,4 +1,5 @@
-"""Table II: power by LMM size (paper synthesis values + interpolation).
+"""Table II: power by LMM size — one row per registered ``imax3-28nm/*``
+platform, interpolation checked against each platform's own curve.
 
 Also derives the TPU analogue: VMEM is fixed silicon on v5e, so the
 'budget' knob costs no static power — the table contrasts the two
@@ -6,28 +7,40 @@ hardware models' power-vs-local-memory curves.
 """
 
 from benchmarks.common import fmt_table
-from repro import hw
 from repro.core.energy import imax_power
+from repro.platforms import get_platform, list_platforms
 
 
 def run():
     rows = []
-    for kb in (16, 32, 64, 128, 256):
-        b = kb * 1024
+    for name in list_platforms(family="imax3-28nm"):
+        p = get_platform(name)
+        b = p.vmem_budget
         rows.append([
-            f"{kb}KB",
+            p.name,
+            f"{b // 1024}KB",
             f"{imax_power(b, 'fp16'):.3f} W",
-            f"{hw.IMAX_POWER_FP16_W[b]:.3f} W",
+            f"{p.power.curves['fp16'][b]:.3f} W",
             f"{imax_power(b, 'q8_0'):.2f} W",
-            f"{hw.IMAX_POWER_Q8_W[b]:.2f} W",
+            f"{p.power.curves['q8_0'][b]:.2f} W",
         ])
+    rows.sort(key=lambda r: int(r[1][:-2]))
     table = fmt_table(
-        ["LMM", "FP16 (model)", "(paper)", "Q8_0 (model)", "(paper)"],
+        ["platform", "LMM", "FP16 (model)", "(paper)", "Q8_0 (model)",
+         "(paper)"],
         rows, "Table II — IMAX 28nm power by LMM size (per lane)")
+    p32 = get_platform("imax3-28nm/32k")
+    p64 = get_platform("imax3-28nm/64k")
     checks = {
-        "32KB fp16 = 0.647W": abs(imax_power(32 * 1024, "fp16") - 0.647) < 1e-9,
+        "32KB fp16 = 0.647W":
+            abs(p32.platform_power("fp16") - 0.647) < 1e-9,
         "32KB->64KB jump is the PDP cliff":
-            imax_power(64 * 1024, "fp16") / imax_power(32 * 1024, "fp16") > 3.0,
+            p64.platform_power("fp16") / p32.platform_power("fp16") > 3.0,
+        "every registered LMM size hits its curve point exactly":
+            all(abs(get_platform(n).platform_power("fp16")
+                    - get_platform(n).power.curves["fp16"][
+                        get_platform(n).vmem_budget]) < 1e-12
+                for n in list_platforms(family="imax3-28nm")),
     }
     return table, checks
 

@@ -47,10 +47,13 @@ def make_requests(cfg, rng):
     return reqs
 
 
+PLATFORM = "imax3-28nm/32k"    # the paper's PDP-optimum target
+
+
 def serve(model, params, cfg, cache_dtype):
     reset_dispatch_log()
     engine = ServeEngine(model, params, n_slots=4, max_len=64, enc_len=16,
-                         cache_dtype=cache_dtype)
+                         cache_dtype=cache_dtype, platform=PLATFORM)
     sched = BatchScheduler(engine)
     for req in make_requests(cfg, np.random.default_rng(0)):
         sched.submit(req)
@@ -73,6 +76,11 @@ def serve(model, params, cfg, cache_dtype):
                  if k[0] == "q8_decode_attention"}
     if q8_routes:
         print(f"  [{cache_dtype}] q8_decode_attention routing: {q8_routes}")
+    er = engine.energy_report()
+    print(f"  [{cache_dtype}] energy on {er['platform']}: "
+          f"{er['joules_per_token']:.3e} J/token | PDP {er['pdp_j']:.3e} J"
+          f" | cache stream {er['cache_energy_j']:.3e} J"
+          f" ({er['power_w']:.3f} W, {er['bound']}-bound)")
     return ({uid: st.out for uid, st in sched.results.items()},
             cache["bytes_per_step"])
 

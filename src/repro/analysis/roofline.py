@@ -13,6 +13,10 @@ counts scan bodies once, so it is kept only as a reference field
 SPMD-partitioned per-device program, so analyzer outputs are per-device;
 globals scale by the chip count, which cancels back out in the terms.
 
+Hardware constants come from a registered ``repro.platforms`` target
+(default ``tpu-v5e``) — pass ``platform=`` as a name, a ``Platform``, or
+(legacy) a ``hw.ChipSpec``.
+
 The dominant term is the modeled step-latency bound;
 MODEL_FLOPS/HLO_FLOPs measures how much compiled compute is "useful"
 (catches remat recompute and sharding-induced redundancy).
@@ -21,11 +25,35 @@ MODEL_FLOPS/HLO_FLOPs measures how much compiled compute is "useful"
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Union
 
-from repro import hw
 from repro.analysis.hlo import HloCost, analyze_hlo
 from repro.configs import ArchConfig
+from repro.platforms import MemoryHierarchy, Platform, PowerModel, get_platform
+from repro.platforms.paper import ChipSpec
+
+PlatformLike = Union[str, Platform, ChipSpec, None]
+
+
+def _as_platform(target: PlatformLike) -> Platform:
+    """Resolve the roofline's hardware target; ChipSpec is accepted for
+    backward compatibility and wrapped into an unregistered Platform."""
+    if target is None:
+        return get_platform("tpu-v5e")
+    if isinstance(target, (str, Platform)):
+        return get_platform(target)
+    if isinstance(target, ChipSpec):
+        return Platform(
+            name=target.name, family=target.name, kind="tpu",
+            memory=MemoryHierarchy(
+                local_bytes=target.vmem_bytes, main_bytes=target.hbm_bytes,
+                main_bw=target.hbm_bandwidth, link_bw=target.ici_bandwidth),
+            power=PowerModel(nominal_w=target.power_w,
+                             idle_w=target.idle_power_w),
+            compute={"bf16": target.peak_flops_bf16},
+        )
+    raise TypeError(f"platform: expected name/Platform/ChipSpec, "
+                    f"got {type(target).__name__}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,6 +74,8 @@ class Roofline:
     xla_flops: float = 0.0       # raw cost_analysis (scan-undercounted)
     xla_bytes: float = 0.0
     notes: tuple = ()
+    platform: str = "tpu-v5e"    # registry name the constants came from
+    peak_flops: float = 0.0      # per-chip peak used for the score axis
 
     @property
     def dominant(self) -> str:
@@ -67,9 +97,9 @@ class Roofline:
     def roofline_fraction(self) -> float:
         """useful-FLOPs time at peak / modeled bound. 1.0 = perfectly
         compute-bound with zero waste (the score axis)."""
-        if self.bound_s <= 0:
+        if self.bound_s <= 0 or self.peak_flops <= 0:
             return 0.0
-        ideal = self.model_flops / (self.chips * hw.TPU_V5E.peak_flops_bf16)
+        ideal = self.model_flops / (self.chips * self.peak_flops)
         return ideal / self.bound_s
 
     def row(self) -> dict:
@@ -87,7 +117,7 @@ class Roofline:
 
 def roofline_from_compiled(compiled, *, arch: str, shape: str, mesh: str,
                            chips: int, model_flops: float,
-                           chip: hw.ChipSpec = hw.TPU_V5E,
+                           platform: PlatformLike = None,
                            hlo_text: Optional[str] = None) -> Roofline:
     cost = compiled.cost_analysis()
     if isinstance(cost, (list, tuple)):
@@ -96,16 +126,18 @@ def roofline_from_compiled(compiled, *, arch: str, shape: str, mesh: str,
     hc = analyze_hlo(text)
     return roofline_from_hlocost(
         hc, arch=arch, shape=shape, mesh=mesh, chips=chips,
-        model_flops=model_flops, chip=chip,
+        model_flops=model_flops, platform=platform,
         xla_flops=float(cost.get("flops", 0.0)),
         xla_bytes=float(cost.get("bytes accessed", 0.0)))
 
 
 def roofline_from_hlocost(hc: HloCost, *, arch: str, shape: str, mesh: str,
                           chips: int, model_flops: float,
-                          chip: hw.ChipSpec = hw.TPU_V5E,
+                          platform: PlatformLike = None,
                           xla_flops: float = 0.0,
                           xla_bytes: float = 0.0) -> Roofline:
+    plat = _as_platform(platform)
+    peak = plat.peak_flops("bf16")
     notes = []
     if hc.unknown_trip_loops:
         notes.append(f"{len(hc.unknown_trip_loops)} loops with unresolved "
@@ -119,14 +151,15 @@ def roofline_from_hlocost(hc: HloCost, *, arch: str, shape: str, mesh: str,
     return Roofline(
         arch=arch, shape=shape, mesh=mesh, chips=chips,
         hlo_flops=g_flops, hlo_bytes=g_bytes, collective_bytes=g_coll,
-        compute_s=g_flops / (chips * chip.peak_flops_bf16),
-        memory_s=g_bytes / (chips * chip.hbm_bandwidth),
-        collective_s=g_coll / (chips * chip.ici_bandwidth),
+        compute_s=g_flops / (chips * peak),
+        memory_s=g_bytes / (chips * plat.memory.main_bw),
+        collective_s=g_coll / (chips * plat.memory.link_bw),
         model_flops=model_flops,
         collectives=dict(hc.collectives),
         collective_counts=dict(hc.collective_counts),
         xla_flops=xla_flops, xla_bytes=xla_bytes,
         notes=tuple(notes),
+        platform=plat.name, peak_flops=peak,
     )
 
 

@@ -1,49 +1,50 @@
 """Energy model: power, PDP, calibration, LMM/VMEM sweeps (paper C5).
 
-Reproduces the paper's evaluation methodology:
+Reproduces the paper's evaluation methodology, sourcing every hardware
+fact through the platform registry (``repro.platforms``):
 
-* ``imax_power`` / ``vmem_static_power`` — Table II power-vs-LMM curves.
-* ``calibrate_imax`` — closed-form fit of the 4-parameter AccelModel to the
-  paper's published observables (FP16/Q8_0 E2E latency 13.5 s / 11.1 s,
-  EXEC shares 60.89 % / 74.70 %, host-only latency 24.4 s / 19.6 s). The
-  paper's numbers over-determine the model; the residual mismatch is
-  reported by the benchmark as a reproduction check.
-* ``pdp`` and ``lmm_sweep`` — Figs 4/5/6: latency & PDP vs LMM size, with
-  the PDP minimum expected at 32 KB.
-
-The same machinery runs against TPU v5e constants (uncalibrated, honest
-roofline) to place a TPU projection on the paper's axes and to drive the
-VMEM-block-budget sweep of the Pallas kernels.
+* ``imax_power`` / ``interp_power`` — Table II power-vs-LMM curves
+  (log-linear interpolation) read from the ``imax3-28nm`` platforms.
+* ``calibrate_imax`` — closed-form fit of the 4-parameter AccelModel to
+  the paper's published observables carried on the platform (FP16/Q8_0
+  E2E latency 13.5 s / 11.1 s, EXEC shares 60.89 % / 74.70 %, host-only
+  latency 24.4 s / 19.6 s). The paper's numbers over-determine the
+  model; the residual mismatch is reported by the benchmark as a
+  reproduction check.
+* ``pdp`` and ``lmm_sweep`` — Figs 4/5/6: latency & PDP vs LMM size,
+  with the PDP minimum expected at 32 KB.
+* ``platform_pdp_table`` — Figs 4+5 over the whole registry: every
+  platform with published observables, our calibrated IMAX model, and
+  the TPU v5e projection on one axis.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Optional, Sequence, Union
 
-from repro import hw
 from repro.core.burst import split_burst
 from repro.core.offload import AccelModel, Breakdown, execution_breakdown, staged_bytes, plan_offload
 from repro.core.workload import KernelSpec, total_flops
+from repro.platforms import Platform, get_platform, list_platforms
+from repro.platforms.base import interp_power_log
+
+PlatformLike = Union[str, Platform]
 
 
 def interp_power(table: dict[int, float], size_bytes: int) -> float:
-    """Log-linear interpolation of a power-vs-size table (Table II)."""
-    pts = sorted(table.items())
-    if size_bytes <= pts[0][0]:
-        return pts[0][1]
-    if size_bytes >= pts[-1][0]:
-        return pts[-1][1]
-    for (s0, p0), (s1, p1) in zip(pts, pts[1:]):
-        if s0 <= size_bytes <= s1:
-            t = (size_bytes - s0) / (s1 - s0)
-            return p0 + t * (p1 - p0)
-    raise AssertionError
+    """Log-linear interpolation of a power-vs-size table (Table II):
+    linear in log(size), so the geometric-mean size maps to the
+    arithmetic-mean power."""
+    return interp_power_log(table, size_bytes)
 
 
-def imax_power(lmm_bytes: int, kernel: str = "fp16", lanes: int = 1) -> float:
-    table = hw.IMAX_POWER_FP16_W if kernel == "fp16" else hw.IMAX_POWER_Q8_W
-    return lanes * interp_power(table, lmm_bytes)
+def imax_power(lmm_bytes: int, kernel: str = "fp16", lanes: int = 1,
+               platform: PlatformLike = "imax3-28nm") -> float:
+    """Table-II power at an arbitrary LMM size, interpolated on the
+    platform's power curves."""
+    return get_platform(platform).power.power(kernel, lmm_bytes,
+                                              lanes=lanes)
 
 
 def pdp(latency_s: float, power_w: float) -> float:
@@ -52,13 +53,15 @@ def pdp(latency_s: float, power_w: float) -> float:
 
 
 def phase_pdp(breakdown, accel_power_w: float,
-              host_power_w: float = hw.PLATFORM_POWER_W["cortex-a72"]) -> float:
+              host_power_w: Optional[float] = None) -> float:
     """Phase-wise energy: the accelerator draws power only while a kernel
     is resident (EXEC+LOAD+CONF); the host CPU draws power for the whole
     run (orchestration + residual + fallback). This is the accounting
     that reproduces the paper's published Fig-5 Q8_0 PDP (12.6 J), which
     nominal-power x latency (Eq 1: 11.1 x 1.32 = 14.7 J) does not — their
     §IV-A notes power was measured per phase."""
+    if host_power_w is None:
+        host_power_w = get_platform("cortex-a72").power.nominal_w
     return (accel_power_w * breakdown.accel_s
             + host_power_w * breakdown.total_s)
 
@@ -71,26 +74,43 @@ def phase_pdp(breakdown, accel_power_w: float,
 class Calibration:
     model: AccelModel
     residuals: dict[str, float]   # relative errors vs paper observables
+    platform: Optional[Platform] = None   # target carrying the model
 
 
 def calibrate_imax(work_fp16: Sequence[KernelSpec],
                    work_q8: Sequence[KernelSpec],
-                   budget_bytes: int = 32 * 1024,
-                   conf_share: float = 0.04) -> Calibration:
-    """Closed-form fit of (flops_rate, mem_bw, conf_time, host_rate) to the
-    paper's *FP16* observables only; the Q8_0 observables are then
+                   budget_bytes: Optional[int] = None,
+                   conf_share: float = 0.04,
+                   platform: PlatformLike = "imax3-28nm/32k",
+                   host: PlatformLike = "cortex-a72") -> Calibration:
+    """Closed-form fit of (flops_rate, mem_bw, conf_time, host_rate) to
+    ``platform``'s *FP16* observables only; the Q8_0 observables are then
     **predictions** and their residuals are the cross-validation of the
     model (reported by benchmarks/fig7_breakdown.py).
 
-    FP16 observables used: E2E latency 13.5 s, EXEC share 60.89 %, host-only
-    latency 24.4 s. ``conf_share`` apportions the paper's unlabeled
-    CONF/REGV/RANGE/REFILL sliver of Fig 7 (~4 % of accel time).
-    """
-    t16 = hw.PAPER_LATENCY_S[("imax3-28nm", "fp16")]
-    t8 = hw.PAPER_LATENCY_S[("imax3-28nm", "q8_0")]
-    s16, s8 = hw.PAPER_EXEC_SHARE["fp16"], hw.PAPER_EXEC_SHARE["q8_0"]
-    host16 = hw.PAPER_LATENCY_S[("cortex-a72", "fp16")]
-    host8 = hw.PAPER_LATENCY_S[("cortex-a72", "q8_0")]
+    FP16 observables used: E2E latency 13.5 s, EXEC share 60.89 %, host-
+    only latency 24.4 s — all read from the platform registry entries.
+    ``conf_share`` apportions the paper's unlabeled CONF/REGV/RANGE/
+    REFILL sliver of Fig 7 (~4 % of accel time)."""
+    plat = get_platform(platform)
+    hostp = get_platform(host)
+    if budget_bytes is None:
+        budget_bytes = plat.vmem_budget
+    t16 = plat.paper_observable("latency_s", "fp16")
+    t8 = plat.paper_observable("latency_s", "q8_0")
+    s16 = plat.paper_observable("exec_share", "fp16")
+    s8 = plat.paper_observable("exec_share", "q8_0")
+    host16 = hostp.paper_observable("latency_s", "fp16")
+    host8 = hostp.paper_observable("latency_s", "q8_0")
+    missing = [k for k, v in [("latency fp16", t16), ("latency q8", t8),
+                              ("exec_share fp16", s16),
+                              ("exec_share q8", s8),
+                              ("host latency fp16", host16),
+                              ("host latency q8", host8)] if v is None]
+    if missing:
+        raise ValueError(
+            f"platform {plat.name!r}/{hostp.name!r} lacks the paper "
+            f"observables needed for calibration: {missing}")
 
     f_total = total_flops(list(work_fp16))
     host_rate16 = f_total / host16
@@ -110,7 +130,7 @@ def calibrate_imax(work_fp16: Sequence[KernelSpec],
     load16 = accel16 - exec_s - conf_total
 
     model = AccelModel(
-        name="imax3-28nm(calibrated)",
+        name=f"{plat.name}(calibrated)",
         flops_rate=f_off16 / exec_s,
         mem_bw=b16 / load16,
         conf_time=conf_total / max(calls16, 1),
@@ -125,7 +145,8 @@ def calibrate_imax(work_fp16: Sequence[KernelSpec],
         "latency_q8(pred)": bd8.total_s / t8 - 1.0,
         "exec_share_q8(pred)": bd8.exec_share / s8 - 1.0,
     }
-    return Calibration(model=model, residuals=residuals)
+    return Calibration(model=model, residuals=residuals,
+                       platform=plat.with_accel_model(model))
 
 
 # ----------------------------------------------------------------------------
@@ -143,14 +164,16 @@ class SweepPoint:
 
 def lmm_sweep(work: Sequence[KernelSpec], model: AccelModel, kernel: str,
               budgets: Sequence[int] = tuple(k * 1024 for k in (16, 32, 64, 128)),
-              lanes: int = 1) -> list[SweepPoint]:
+              lanes: int = 1,
+              platform: PlatformLike = "imax3-28nm") -> list[SweepPoint]:
     """Latency/power/PDP vs local-memory budget (Fig 6). Larger budgets
     admit more kernels (less host fallback) but cost static power
-    (Table II); the paper's minimum is at 32 KB."""
+    (the platform's Table-II curves); the paper's minimum is at 32 KB."""
+    plat = get_platform(platform)
     out = []
     for budget in budgets:
         bd = execution_breakdown(work, model, budget)
-        p = imax_power(budget, kernel, lanes)
+        p = plat.power.power(kernel, budget, lanes=lanes)
         out.append(SweepPoint(budget, bd.total_s, p, pdp(bd.total_s, p), bd))
     return out
 
@@ -159,17 +182,18 @@ def lmm_sweep(work: Sequence[KernelSpec], model: AccelModel, kernel: str,
 # TPU projection (beyond-paper platform row; honest v5e constants)
 # ----------------------------------------------------------------------------
 
-def tpu_accel_model(chip: hw.ChipSpec = hw.TPU_V5E,
+def tpu_accel_model(platform: PlatformLike = "tpu-v5e",
                     mxu_efficiency: float = 0.5,
                     conf_time: float = 2e-6) -> AccelModel:
-    """v5e as the 'accelerator': matvec-dominated decode is HBM-bound, so
-    mem_bw is the binding constant; mxu_efficiency derates peak for the
-    small-GEMM regime. The 'host' fallback is the same chip's VPU at a
-    scalar-ish rate (kernels that skip the MXU path)."""
+    """The TPU platform as the 'accelerator': matvec-dominated decode is
+    HBM-bound, so mem_bw is the binding constant; mxu_efficiency derates
+    peak for the small-GEMM regime. The 'host' fallback is the same
+    chip's VPU at a scalar-ish rate (kernels that skip the MXU path)."""
+    plat = get_platform(platform)
     return AccelModel(
-        name=chip.name,
-        flops_rate=chip.peak_flops_bf16 * mxu_efficiency,
-        mem_bw=chip.hbm_bandwidth,
+        name=plat.name,
+        flops_rate=plat.peak_flops("bf16") * mxu_efficiency,
+        mem_bw=plat.memory.main_bw,
         conf_time=conf_time,
         host_flops_rate=2e12,   # VPU-path effective rate
     )
@@ -177,32 +201,39 @@ def tpu_accel_model(chip: hw.ChipSpec = hw.TPU_V5E,
 
 def platform_pdp_table(work_fp16, work_q8, calib: Calibration,
                        budget_bytes: int = 32 * 1024) -> list[dict]:
-    """Fig 4 + Fig 5 in one table: paper platforms (paper numbers) + our
+    """Fig 4 + Fig 5 in one table, iterating the platform registry:
+    every platform carrying published observables (paper rows) + our
     calibrated IMAX model + the TPU v5e projection."""
     rows = []
-    for (dev, kern), lat in sorted(hw.PAPER_LATENCY_S.items()):
-        if dev == "imax3-28nm":
-            power = imax_power(budget_bytes, "fp16" if kern == "fp16" else "q8_0")
-        else:
-            power = hw.PLATFORM_POWER_W.get(dev, float("nan"))
-        rows.append(dict(device=dev, kernel=kern, latency_s=lat,
-                         power_w=power, pdp_j=pdp(lat, power),
-                         source="paper"))
+    for name in list_platforms():
+        plat = get_platform(name)
+        lat = plat.paper.get("latency_s", {})
+        for kern in sorted(lat):
+            power = plat.platform_power(kern)
+            rows.append(dict(
+                device=plat.family, platform=plat.name, kernel=kern,
+                latency_s=lat[kern], power_w=power,
+                pdp_j=pdp(lat[kern], power),
+                pdp_paper_j=plat.paper_observable("pdp_j", kern),
+                source="paper"))
+    imax = get_platform("imax3-28nm")
     for kern, work in (("fp16", work_fp16), ("q8_0", work_q8)):
         bd = execution_breakdown(work, calib.model, budget_bytes)
-        power = imax_power(budget_bytes, kern)
-        rows.append(dict(device="imax3-28nm(model)", kernel=kern,
+        power = imax.power.power(kern, budget_bytes)
+        rows.append(dict(device=f"{imax.family}(model)",
+                         platform=imax.name, kernel=kern,
                          latency_s=bd.total_s, power_w=power,
                          pdp_j=pdp(bd.total_s, power),
                          pdp_phase_j=phase_pdp(bd, power), source="model"))
-    tpu = tpu_accel_model()
+    tpu_plat = get_platform("tpu-v5e")
+    tpu = tpu_plat.accel_model or tpu_accel_model(tpu_plat)
     for kern, work in (("fp16", work_fp16), ("q8_0", work_q8)):
-        bd = execution_breakdown(work, tpu, hw.TPU_V5E.vmem_bytes)
+        bd = execution_breakdown(work, tpu, tpu_plat.vmem_budget)
         # utilization-scaled power
         util = bd.exec_s / max(bd.total_s, 1e-12)
-        power = hw.TPU_V5E.idle_power_w + util * (
-            hw.TPU_V5E.power_w - hw.TPU_V5E.idle_power_w)
-        rows.append(dict(device="tpu-v5e(projection)", kernel=kern,
+        power = tpu_plat.power.power(kern, util=util)
+        rows.append(dict(device=f"{tpu_plat.name}(projection)",
+                         platform=tpu_plat.name, kernel=kern,
                          latency_s=bd.total_s, power_w=power,
                          pdp_j=pdp(bd.total_s, power), source="model"))
     return rows

@@ -24,7 +24,11 @@ monkeypatch ``os.environ``):
   bind to the Pallas backend (default: only on real TPU — on CPU the
   interpreter is a correctness tool, not a fast path);
 * ``REPRO_INTERPRET``      — ``1``/``0``: run Pallas kernels in
-  interpreter mode (default: on unless running on TPU).
+  interpreter mode (default: on unless running on TPU);
+* ``REPRO_PLATFORM``       — name of a registered hardware platform
+  (``repro.platforms``); ``DispatchContext.from_env`` derives its
+  budget/policy/pallas-eligibility from the platform, with the explicit
+  knobs above still winning where set.
 """
 
 import os
@@ -62,16 +66,28 @@ def kernel_backend_override():
     return v
 
 
-def vmem_budget_default() -> int:
+def vmem_budget_override():
+    """Explicit REPRO_VMEM_BUDGET byte count, or None when unset."""
     v = os.environ.get("REPRO_VMEM_BUDGET", "")
     if not v:
-        return DEFAULT_VMEM_BUDGET
+        return None
     try:
         return int(v)
     except ValueError:
         raise ValueError(
             f"REPRO_VMEM_BUDGET={v!r}: expected an integer byte count"
         ) from None
+
+
+def vmem_budget_default() -> int:
+    v = vmem_budget_override()
+    return DEFAULT_VMEM_BUDGET if v is None else v
+
+
+def platform_default():
+    """Platform name from REPRO_PLATFORM, or None. Resolved against the
+    ``repro.platforms`` registry by ``DispatchContext.from_env``."""
+    return os.environ.get("REPRO_PLATFORM", "").strip() or None
 
 
 def allow_pallas_default() -> bool:

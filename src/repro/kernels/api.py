@@ -59,6 +59,12 @@ class DispatchContext:
     wrappers also use it for block selection (C4).
     ``force_backend`` bypasses the control law globally; ``backends``
     does so per-op (``{"q8_matmul": "ref"}``).
+    ``platform`` names the registered hardware target this context was
+    derived from (``for_platform``); it is stamped into every
+    ``DispatchRecord`` so traces are attributable per target. ``tag``
+    is a free-form observability label stamped alongside it — e.g. one
+    per ServeEngine, so two engines on the same platform can tell their
+    trace records apart.
     """
 
     vmem_budget: int
@@ -67,9 +73,43 @@ class DispatchContext:
     allow_pallas: bool = False
     force_backend: Optional[str] = None
     backends: Mapping[str, str] = dataclasses.field(default_factory=dict)
+    platform: Optional[str] = None
+    tag: Optional[str] = None
+
+    @classmethod
+    def for_platform(cls, platform, **overrides) -> "DispatchContext":
+        """Derive a context from a registered ``repro.platforms`` target
+        (by name or ``Platform`` object): the LMM/VMEM budget, the
+        packing policy, and pallas-eligibility all come from the
+        platform. The platform says whether its accel path *may* bind to
+        Pallas; the environment says whether this process *can* run it
+        (``flags.allow_pallas_default()`` — real TPU, or an explicit
+        ``REPRO_ALLOW_PALLAS=1``). Keyword ``overrides`` win over both.
+        """
+        from repro.platforms import get_platform
+        p = get_platform(platform)
+        kw = dict(
+            vmem_budget=p.vmem_budget,
+            policy=p.policy,
+            interpret=flags.interpret_default(),
+            allow_pallas=p.allow_pallas and flags.allow_pallas_default(),
+            force_backend=flags.kernel_backend_override(),
+            platform=p.name,
+        )
+        kw.update(overrides)
+        return cls(**kw)
 
     @classmethod
     def from_env(cls) -> "DispatchContext":
+        name = flags.platform_default()
+        if name:
+            over = {}
+            budget = flags.vmem_budget_override()
+            if budget is not None:
+                over["vmem_budget"] = budget
+            if flags._env_bool("REPRO_ALLOW_PALLAS") is not None:
+                over["allow_pallas"] = flags.allow_pallas_default()
+            return cls.for_platform(name, **over)
         return cls(
             vmem_budget=flags.vmem_budget_default(),
             interpret=flags.interpret_default(),
@@ -127,6 +167,8 @@ class DispatchRecord:
     footprint: int
     budget: int
     spec: KernelSpec
+    platform: str = ""   # registered platform the context was derived from
+    tag: str = ""        # caller-scoped label (e.g. one per ServeEngine)
 
 
 _TRACE_MAX = 1024
@@ -220,7 +262,9 @@ def dispatch(op_name: str, *args, ctx: Optional[DispatchContext] = None,
         out = op.backends[backend](ctx, *args, **kwargs)
         decision = "accel->host"
     _trace.append(DispatchRecord(op_name, decision, backend, footprint,
-                                 ctx.vmem_budget, spec))
+                                 ctx.vmem_budget, spec,
+                                 platform=ctx.platform or "",
+                                 tag=ctx.tag or ""))
     _counters[(op_name, decision, backend)] += 1
     return out
 

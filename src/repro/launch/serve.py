@@ -6,7 +6,13 @@ serve through the same scheduler as decoder-only models.
 Usage::
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --reduced \
-        --requests 16 --slots 4 [--q8] [--cache-dtype q8_0]
+        --requests 16 --slots 4 [--q8] [--cache-dtype q8_0] \
+        [--platform imax3-28nm/32k]
+
+``--platform`` serves against a registered hardware target
+(``repro.platforms``): the kernel-dispatch context is derived from the
+platform (LMM/VMEM budget, packing policy, pallas-eligibility) and the
+run ends with the platform's energy report (joules/token, PDP).
 """
 
 import argparse
@@ -29,6 +35,10 @@ def main(argv=None):
                          "bytes/step via the q8_decode_attention kernel")
     ap.add_argument("--enc-len", type=int, default=64,
                     help="encoder-state pool length (enc-dec models)")
+    ap.add_argument("--platform", default=None,
+                    help="registered hardware target (repro.platforms; "
+                         "e.g. imax3-28nm/32k, tpu-v5e); drives dispatch "
+                         "and enables the energy report")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -51,9 +61,15 @@ def main(argv=None):
     if args.cache_dtype == "q8_0":
         print("serving a Q8_0-quantized KV cache")
 
+    if args.platform:
+        from repro.platforms import get_platform
+        plat = get_platform(args.platform)   # fail fast on unknown names
+        print(f"serving on platform {plat.name} "
+              f"(LMM/VMEM budget {plat.vmem_budget} B)")
     engine = ServeEngine(model, params, n_slots=args.slots,
                          max_len=args.max_len, enc_len=args.enc_len,
-                         cache_dtype=args.cache_dtype)
+                         cache_dtype=args.cache_dtype,
+                         platform=args.platform)
     sched = BatchScheduler(engine)
 
     rng = np.random.default_rng(args.seed)
@@ -80,6 +96,13 @@ def main(argv=None):
           f"({dt:.1f}s), {total_tokens} tokens, "
           f"occupancy {m.mean_occupancy:.2f}, mean TTFT {m.mean_ttft:.1f} "
           f"ticks, {total_tokens/dt:.1f} tok/s")
+    if args.platform:
+        er = engine.energy_report("q8_0" if args.q8 else "fp16")
+        print(f"energy[{er['platform']}]: {er['joules_per_token']:.3e} "
+              f"J/token, PDP {er['pdp_j']:.3e} J "
+              f"(power {er['power_w']:.3f} W, {er['bound']}-bound, "
+              f"cache stream {er['cache_energy_j']:.3e} J, "
+              f"accel share {er['accel_flops_share']:.0%})")
     return m
 
 

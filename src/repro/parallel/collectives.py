@@ -48,10 +48,9 @@ def compressed_psum(grads: Any, err: Any, axis_names) -> tuple[Any, Any]:
     grads/err: same-structure pytrees. Returns (mean_grads, new_err).
     Must be called inside shard_map with ``axis_names`` bound.
     """
-    n = 1
-    for a in (axis_names if isinstance(axis_names, (tuple, list))
-              else (axis_names,)):
-        n *= jax.lax.axis_size(a)
+    # jax<0.5 has no lax.axis_size; psum of 1 over the axis is the
+    # portable size (only ever used as the mean denominator).
+    n = jax.lax.psum(1, axis_names)
 
     def one(g, e):
         corrected = g.astype(jnp.float32) + e

@@ -44,13 +44,21 @@ def _stage_apply(layer_fn: Callable, stage_params, x):
 
 
 def pipeline_forward(layer_fn: Callable, stage_params, mbs: jax.Array,
-                     *, axis: str = "pipe") -> jax.Array:
+                     *, axis: str = "pipe",
+                     n_stages: int | None = None) -> jax.Array:
     """Inside shard_map: stage_params is this rank's (1, L/S, ...) slice;
     mbs is the full (n_micro, mb, ...) input (replicated). Returns
     (n_micro, mb, ...) outputs (valid on every rank after the final
     broadcast ppermute ring completes).
+
+    ``n_stages`` must be the static 'pipe' axis size — the ppermute ring
+    and the tick count are built at trace time (``make_pipelined_fn``
+    passes it from the mesh; jax<0.5 has no ``lax.axis_size``).
     """
-    n_stages = jax.lax.axis_size(axis)
+    if n_stages is None:
+        raise ValueError("pipeline_forward needs the static stage count; "
+                         "pass n_stages= (make_pipelined_fn reads it from "
+                         "the mesh)")
     stage = jax.lax.axis_index(axis)
     params = jax.tree.map(lambda x: x[0], stage_params)
     n_micro = mbs.shape[0]
@@ -92,7 +100,8 @@ def make_pipelined_fn(layer_fn: Callable, mesh: Mesh, n_stages: int,
         return P(axis)   # leading stage dim sharded
 
     def run(stage_params, mbs):
-        return pipeline_forward(layer_fn, stage_params, mbs, axis=axis)
+        return pipeline_forward(layer_fn, stage_params, mbs, axis=axis,
+                                n_stages=mesh.shape[axis])
 
     def f(stacked_params, mbs):
         staged = split_stages(stacked_params, n_stages)

@@ -1,0 +1,29 @@
+"""First-class platform API: one registry for hardware targets.
+
+>>> from repro.platforms import get_platform, list_platforms
+>>> p = get_platform("imax3-28nm/32k")
+>>> p.vmem_budget, p.platform_power("q8_0")
+(32768, 1.32)
+
+The ``Platform`` object drives kernel dispatch
+(``DispatchContext.for_platform``), serving energy accounting
+(``ServeEngine(platform=...).energy_report()``), the analytic energy
+model (``core.energy``), and the roofline (``analysis.roofline``).
+``repro.hw`` remains as a compatibility shim over ``platforms.paper``.
+"""
+
+from repro.platforms.base import (MemoryHierarchy, Platform, PowerModel,
+                                  interp_power_log)
+from repro.platforms.builtin import (IMAX_LMM_SIZES,
+                                     register_builtin_platforms)
+from repro.platforms.registry import (get_platform, list_platforms,
+                                      platform_families, platforms_in_family,
+                                      register_platform)
+
+__all__ = [
+    "MemoryHierarchy", "Platform", "PowerModel", "interp_power_log",
+    "IMAX_LMM_SIZES", "get_platform", "list_platforms",
+    "platform_families", "platforms_in_family", "register_platform",
+]
+
+register_builtin_platforms()

@@ -35,6 +35,7 @@ mechanism: slot allocation, cache scatter, masked decode.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Any, Optional
 
 import jax
@@ -44,14 +45,17 @@ import numpy as np
 from repro import flags
 from repro.core.quantize import stored_bytes
 from repro.kernels.api import (DispatchContext, dispatch_counters,
-                               use_context)
+                               dispatch_trace, use_context)
 from repro.kernels.q8_attention.ops import cache_traffic_ratio
 from repro.models.attention import quantize_kv_cache
 from repro.models.model import Model
+from repro.platforms import Platform, get_platform
 
 EOS_DEFAULT = 2
 
 CACHE_DTYPES = ("bf16", "q8_0")
+
+_ENGINE_SEQ = itertools.count()   # unique dispatch-trace tags per engine
 
 
 @dataclasses.dataclass
@@ -98,11 +102,19 @@ class ServeEngine:
     def __init__(self, model: Model, params: Any, *, n_slots: int = 8,
                  max_len: int = 256, enc_len: int = 64,
                  cache_dtype: str = "bf16",
+                 platform: Optional[Any] = None,
                  dispatch_ctx: Optional[DispatchContext] = None):
-        """``dispatch_ctx``: kernel-routing context (budget, backend
+        """``platform``: a registered hardware target (name or
+        ``repro.platforms.Platform``). Supplies the default dispatch
+        context (``DispatchContext.for_platform``) and enables
+        ``energy_report()`` — the paper's joules-per-token accounting on
+        the serving path.
+
+        ``dispatch_ctx``: kernel-routing context (budget, backend
         policy — repro.kernels.api) applied while the prefill/decode
-        functions trace; None uses the env/default context. Routing is
-        baked in at first trace, so construct one engine per context.
+        functions trace; None uses the platform-derived (or env/default)
+        context. Routing is baked in at first trace, so construct one
+        engine per context.
 
         ``cache_dtype``: "bf16" (dense planes) or "q8_0" (int8+scale
         planes, decode reads via the q8_decode_attention op)."""
@@ -120,6 +132,14 @@ class ServeEngine:
                     f"cache_dtype='q8_0' supports plain softmax decode "
                     f"attention only; {cfg.name} uses softcap/windowed "
                     f"attention")
+        self.platform: Optional[Platform] = \
+            get_platform(platform) if platform is not None else None
+        if dispatch_ctx is None and self.platform is not None:
+            # the tag scopes this engine's trace records: two engines on
+            # the same platform in one process stay distinguishable
+            dispatch_ctx = DispatchContext.for_platform(
+                self.platform,
+                tag=f"serve:{self.platform.name}#{next(_ENGINE_SEQ)}")
         self.model = model
         self.params = params
         self.dispatch_ctx = dispatch_ctx
@@ -140,6 +160,9 @@ class ServeEngine:
         self._enc_lens = np.zeros((n_slots,), np.int32)
         self._decode = self._build_decode()
         self._prefill_fns: dict[tuple, Any] = {}
+        # serving-energy accounting (energy_report)
+        self._ticks = 0        # executed batched decode steps
+        self._generated = 0    # tokens emitted (prefill firsts + decode)
 
     # ------------------------------------------------------------------
     def _build_decode(self):
@@ -234,6 +257,7 @@ class ServeEngine:
                     self.params, jnp.asarray(toks))
         self.cache = _scatter_slot(self.cache, cache1, slot)
         first = int(np.argmax(np.asarray(logits)[0, n - 1]))
+        self._generated += 1
         st = RequestState(req=req, slot=slot, pos=n, out=[first])
         self._tokens[slot, 0] = first
         self._pos[slot] = n
@@ -255,6 +279,8 @@ class ServeEngine:
                 self.params, self.cache, jnp.asarray(self._tokens),
                 jnp.asarray(self._pos), jnp.asarray(self._enc_lens))
         nxt = np.asarray(nxt)
+        self._ticks += 1
+        self._generated += len(self.active)
         finished = []
         for slot, st in list(self.active.items()):
             tok = int(nxt[slot])
@@ -314,6 +340,94 @@ class ServeEngine:
         return {
             "counters": dict(dispatch_counters()),
             "cache": self.cache_report(),
+        }
+
+    # ------------------------------------------------------------------
+    def _param_stats(self) -> tuple[int, int]:
+        """(element count, stored bytes) of the served parameters."""
+        leaves = jax.tree.leaves(self.params)
+        return (sum(int(l.size) for l in leaves),
+                sum(int(l.nbytes) for l in leaves))
+
+    def energy_report(self, kernel: str = "fp16") -> dict:
+        """Joules-per-token / PDP accounting for the serve so far on the
+        engine's platform — the paper's headline metric (Eq. 1), live on
+        the serving path.
+
+        The decode phase dominates serving energy, and every decode tick
+        streams the weights plus the whole KV pool through the cache
+        matvec; the model here is the platform roofline over exactly
+        those terms:
+
+        * memory: ``ticks x (weight_bytes + cache bytes/step)`` at the
+          platform's DRAM/HBM bandwidth,
+        * compute: ``2 x N_params`` FLOPs per generated token at the
+          platform's ``kernel``-dtype rate,
+        * modeled latency = max(memory, compute) (the binding resource),
+        * power: the platform ``PowerModel`` — Table-II curve targets
+          interpolate at their LMM size for the ``kernel`` family
+          ("fp16" | "q8_0" — the served weight family, *not* the cache
+          dtype); flat targets scale nominal power by compute
+          utilization.
+
+        The dispatch trace records stamped with this platform fold in as
+        the ACCEL/HOST mix (``accel_flops_share``); cache traffic folds
+        in via ``cache_report()`` — so a q8_0 cache pool shows up
+        directly as a smaller ``cache_energy_j``.
+        """
+        if self.platform is None:
+            raise ValueError(
+                "energy_report() needs a platform: construct the engine "
+                "with ServeEngine(..., platform='imax3-28nm/32k')")
+        p = self.platform
+        cache = self.cache_report()
+        n_elems, weight_bytes = self._param_stats()
+        ticks = self._ticks
+        tokens = self._generated
+        cache_bytes = ticks * cache["bytes_per_step"]
+        stream_bytes = ticks * weight_bytes + cache_bytes
+        flops = 2.0 * n_elems * tokens
+        bw = max(p.memory.main_bw, 1e-9)
+        rate = p.peak_flops("q8_0" if kernel == "q8_0" else "f16")
+        t_mem = stream_bytes / bw
+        t_comp = flops / rate
+        latency_s = max(t_mem, t_comp)
+        util = t_comp / latency_s if latency_s > 0 else 0.0
+        power_w = p.power.power(kernel, p.memory.local_bytes or None,
+                                util=util)
+        energy_j = latency_s * power_w
+        # ACCEL/HOST mix from the trace records THIS engine produced
+        # (its context's unique tag); a caller-supplied dispatch_ctx has
+        # no engine tag, so fall back to platform-name attribution
+        tag = self.dispatch_ctx.tag if self.dispatch_ctx else None
+        if tag:
+            recs = [r for r in dispatch_trace() if r.tag == tag]
+        else:
+            recs = [r for r in dispatch_trace() if r.platform == p.name]
+        accel_flops = sum(r.spec.flops for r in recs
+                          if r.decision == "accel")
+        trace_flops = sum(r.spec.flops for r in recs)
+        return {
+            "platform": p.name,
+            "kernel": kernel,
+            "cache_dtype": self.cache_dtype,
+            "ticks": ticks,
+            "tokens": tokens,
+            "weight_bytes": weight_bytes,
+            "cache_bytes_per_step": cache["bytes_per_step"],
+            "stream_bytes_total": stream_bytes,
+            "modeled_flops": flops,
+            "memory_s": t_mem,
+            "compute_s": t_comp,
+            "latency_s": latency_s,
+            "bound": "memory" if t_mem >= t_comp else "compute",
+            "power_w": power_w,
+            "pdp_j": energy_j,
+            "joules_per_token": energy_j / max(tokens, 1),
+            "cache_energy_j": (cache_bytes / bw) * power_w,
+            "accel_flops_share":
+                accel_flops / trace_flops if trace_flops else 0.0,
+            "trace_records": len(recs),
         }
 
 

@@ -93,4 +93,22 @@ def test_interp_power_bounds():
     t = {16384: 1.0, 32768: 2.0}
     assert interp_power(t, 8000) == 1.0
     assert interp_power(t, 50000) == 2.0
-    assert interp_power(t, 24576) == pytest.approx(1.5)
+    # log-linear: the geometric-mean size maps to the mean power ...
+    assert interp_power(t, round(16384 * 2 ** 0.5)) == pytest.approx(
+        1.5, abs=1e-4)
+    # ... so the byte midpoint sits above the linear-in-bytes value
+    assert interp_power(t, 24576) == pytest.approx(1.585, abs=1e-3)
+
+
+def test_interp_power_32k_64k_midpoint():
+    """Pin the Table-II 32KB->64KB segment: interpolation is log-linear
+    in size, so the geometric mean (32*sqrt(2) KB) yields the arithmetic
+    mean power, and the 48KB byte-midpoint lands log2(1.5) of the way up
+    the segment — not halfway."""
+    lo, hi = hw.IMAX_POWER_FP16_W[32 * 1024], hw.IMAX_POWER_FP16_W[64 * 1024]
+    geo = round(32 * 1024 * 2 ** 0.5)
+    assert imax_power(geo, "fp16") == pytest.approx((lo + hi) / 2, rel=1e-4)
+    t = 0.5849625007211562      # log2(1.5)
+    assert imax_power(48 * 1024, "fp16") == pytest.approx(
+        lo + t * (hi - lo), rel=1e-6)
+    assert imax_power(48 * 1024, "fp16") > lo + 0.5 * (hi - lo)

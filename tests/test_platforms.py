@@ -1,0 +1,245 @@
+"""The Platform API: registry, dispatch derivation, serving energy."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.energy import imax_power
+from repro.kernels.api import (DispatchContext, dispatch, dispatch_trace,
+                               reset_dispatch_log, use_context)
+from repro.platforms import (MemoryHierarchy, Platform, PowerModel,
+                             get_platform, list_platforms,
+                             register_platform)
+from repro.platforms.registry import _ALIASES, _REGISTRY
+
+
+# ------------------------------------------------------------- registry
+
+
+def test_builtin_platforms_registered():
+    names = list_platforms()
+    for expected in ("imax3-28nm/16k", "imax3-28nm/32k", "imax3-28nm/64k",
+                     "imax3-28nm/128k", "imax3-28nm/256k", "imax3-fpga",
+                     "tpu-v5e", "cortex-a72", "jetson-agx-orin",
+                     "rtx-4090"):
+        assert expected in names, names
+
+
+def test_registry_round_trip():
+    p = Platform(name="test-chip/1", family="test-chip", kind="tpu",
+                 memory=MemoryHierarchy(local_bytes=1234, main_bw=1e9),
+                 power=PowerModel(nominal_w=5.0),
+                 compute={"bf16": 1e12},
+                 aliases=("test-chip",))
+    try:
+        assert register_platform(p) is p
+        assert get_platform("test-chip/1") is p
+        assert get_platform("test-chip") is p          # alias
+        assert get_platform(p) is p                    # pass-through
+        assert "test-chip/1" in list_platforms("test-chip")
+        with pytest.raises(ValueError, match="already registered"):
+            register_platform(dataclasses.replace(p, aliases=()))
+        register_platform(dataclasses.replace(p, kind="cpu"),
+                          overwrite=True)
+        assert get_platform("test-chip/1").kind == "cpu"
+    finally:
+        _REGISTRY.pop("test-chip/1", None)
+        _ALIASES.pop("test-chip", None)
+
+
+def test_unknown_platform_errors_with_known_names():
+    with pytest.raises(KeyError, match="imax3-28nm/32k"):
+        get_platform("no-such-chip")
+
+
+def test_alias_resolves_to_pdp_optimum():
+    assert get_platform("imax3-28nm").name == "imax3-28nm/32k"
+    assert get_platform("imax3-28nm").vmem_budget == 32 * 1024
+
+
+def test_power_model_curves_and_flat():
+    imax = get_platform("imax3-28nm/32k")
+    assert imax.platform_power("fp16") == pytest.approx(0.647)
+    assert imax.platform_power("q8_0") == pytest.approx(1.32)
+    assert imax.platform_power("q8_0", lanes=2) == pytest.approx(2.64)
+    # arbitrary sizes interpolate on the same curves as core.energy
+    assert imax.power.power("fp16", 48 * 1024) == pytest.approx(
+        imax_power(48 * 1024, "fp16"))
+    # flat target: utilization-scaled nominal power
+    tpu = get_platform("tpu-v5e")
+    assert tpu.power.power(util=0.0) == pytest.approx(60.0)
+    assert tpu.power.power(util=1.0) == pytest.approx(200.0)
+
+
+def test_peak_flops_fallback_chain():
+    tpu = get_platform("tpu-v5e")
+    assert tpu.peak_flops("bf16") == pytest.approx(197e12)
+    assert tpu.peak_flops("q8_0") == pytest.approx(394e12)   # -> int8
+    a72 = get_platform("cortex-a72")
+    assert a72.peak_flops("q8_0") == a72.peak_flops("f16")   # no int8 rate
+
+
+# ------------------------------------------- DispatchContext.for_platform
+
+
+def test_for_platform_derives_budget_policy_platform():
+    ctx = DispatchContext.for_platform("imax3-28nm/64k")
+    assert ctx.vmem_budget == 64 * 1024
+    assert ctx.policy == "optimized"
+    assert ctx.platform == "imax3-28nm/64k"
+    # alias derives the canonical name
+    assert DispatchContext.for_platform("imax3-28nm").platform \
+        == "imax3-28nm/32k"
+
+
+def test_for_platform_allow_pallas_gated_by_env(monkeypatch):
+    # platform says "may", environment says "can": with the env opt-in,
+    # kernel-offload targets bind pallas and plain hosts never do
+    monkeypatch.setenv("REPRO_ALLOW_PALLAS", "1")
+    assert DispatchContext.for_platform("tpu-v5e").allow_pallas
+    assert DispatchContext.for_platform("imax3-28nm/32k").allow_pallas
+    assert not DispatchContext.for_platform("cortex-a72").allow_pallas
+    monkeypatch.setenv("REPRO_ALLOW_PALLAS", "0")
+    assert not DispatchContext.for_platform("tpu-v5e").allow_pallas
+    # explicit override wins over both
+    assert DispatchContext.for_platform("tpu-v5e",
+                                        allow_pallas=True).allow_pallas
+
+
+def test_host_platform_routes_everything_host():
+    # cortex-a72 has no offload surface: budget 0 -> every op HOST
+    assert DispatchContext.for_platform("cortex-a72").vmem_budget == 0
+
+
+def test_from_env_platform(monkeypatch):
+    monkeypatch.setenv("REPRO_PLATFORM", "imax3-28nm/128k")
+    ctx = DispatchContext.from_env()
+    assert ctx.platform == "imax3-28nm/128k"
+    assert ctx.vmem_budget == 128 * 1024
+    # explicit budget knob still wins
+    monkeypatch.setenv("REPRO_VMEM_BUDGET", "4096")
+    assert DispatchContext.from_env().vmem_budget == 4096
+
+
+def test_dispatch_record_carries_platform_identity():
+    import jax.numpy as jnp
+    from repro.core.quantize import quantize_q8_0
+    x = jax.random.normal(jax.random.key(0), (4, 64), jnp.float32)
+    wq = quantize_q8_0(
+        jax.random.normal(jax.random.key(1), (64, 32), jnp.float32), axis=0)
+    reset_dispatch_log()
+    try:
+        with use_context(DispatchContext.for_platform("imax3-28nm/32k")):
+            dispatch("q8_matmul", x, wq)
+        with use_context(DispatchContext(vmem_budget=1024)):
+            dispatch("q8_matmul", x, wq)
+        recs = dispatch_trace()
+        assert [r.platform for r in recs] == ["imax3-28nm/32k", ""]
+        assert recs[0].budget == 32 * 1024
+    finally:
+        reset_dispatch_log()
+
+
+# ------------------------------------------------- serving energy report
+
+
+def _serve_whisper(cache_dtype, platform, n_new=3):
+    from repro.configs import get_config, reduced
+    from repro.models.model import build
+    from repro.serving.engine import AudioRequest, ServeEngine
+    cfg = reduced(get_config("whisper-tiny-en"))
+    model = build(cfg)
+    params = model.init_values(jax.random.key(0))
+    eng = ServeEngine(model, params, n_slots=2, max_len=64, enc_len=16,
+                      cache_dtype=cache_dtype, platform=platform)
+    rng = np.random.default_rng(0)
+    frames = rng.standard_normal((8, cfg.d_model)).astype(np.float32) * 0.5
+    eng.admit(AudioRequest(uid=0, tokens=[5, 6, 7], max_new=n_new,
+                           eos_id=-2, enc_frames=frames))
+    while eng.n_active:
+        eng.step()
+    return eng
+
+
+def test_energy_report_finite_on_required_platforms():
+    reset_dispatch_log()
+    for plat in ("imax3-28nm/32k", "tpu-v5e"):
+        for cdt in ("bf16", "q8_0"):
+            eng = _serve_whisper(cdt, plat)
+            rep = eng.energy_report()
+            assert rep["platform"] == plat
+            assert rep["tokens"] > 0 and rep["ticks"] > 0
+            for key in ("joules_per_token", "pdp_j", "cache_energy_j",
+                        "power_w", "latency_s"):
+                assert np.isfinite(rep[key]) and rep[key] > 0, (plat, cdt,
+                                                                key, rep)
+            assert 0.0 <= rep["accel_flops_share"] <= 1.0
+            assert rep["trace_records"] > 0
+    reset_dispatch_log()
+
+
+def test_energy_report_q8_cache_cheaper():
+    """The paper's C1 LOAD saving shows up as serving energy: a q8_0 KV
+    pool streams ~0.53x the cache bytes/step of bf16, so its cache
+    energy (and joules/token, decode being memory-bound) is no worse."""
+    reset_dispatch_log()
+    eb = _serve_whisper("bf16", "imax3-28nm/32k").energy_report()
+    eq = _serve_whisper("q8_0", "imax3-28nm/32k").energy_report()
+    reset_dispatch_log()
+    assert eq["ticks"] == eb["ticks"]
+    assert eq["cache_energy_j"] <= eb["cache_energy_j"]
+    assert eq["cache_energy_j"] / eb["cache_energy_j"] == \
+        pytest.approx(0.53125, rel=1e-3)
+    assert eq["joules_per_token"] <= eb["joules_per_token"]
+
+
+def test_energy_reports_do_not_cross_contaminate():
+    """Two engines on the same platform in one process must attribute
+    trace records to themselves (per-engine context tags), not pool
+    them by platform name."""
+    reset_dispatch_log()
+    try:
+        e1 = _serve_whisper("bf16", "imax3-28nm/32k")
+        r1 = e1.energy_report()
+        e2 = _serve_whisper("q8_0", "imax3-28nm/32k")   # no reset between
+        r2 = e2.energy_report()
+        assert e1.dispatch_ctx.tag != e2.dispatch_ctx.tag
+        # the pooled-by-platform view sees both engines' records; each
+        # engine's report sees only its own
+        pooled = len([r for r in dispatch_trace()
+                      if r.platform == "imax3-28nm/32k"])
+        assert r1["trace_records"] > 0 and r2["trace_records"] > 0
+        assert pooled == r1["trace_records"] + r2["trace_records"]
+    finally:
+        reset_dispatch_log()
+
+
+def test_calibrate_missing_observables_raises():
+    """A platform without the q8 observables must fail the calibration
+    guard with a clear ValueError, not a TypeError downstream."""
+    import dataclasses as dc
+    from repro.core.energy import calibrate_imax
+    from repro.core.workload import WHISPER_TINY, whisper_workload
+    w16 = whisper_workload(WHISPER_TINY, dtype="f16")
+    w8 = whisper_workload(WHISPER_TINY, dtype="q8_0")
+    base = get_platform("imax3-28nm/32k")
+    fp16_only = dc.replace(base, paper={
+        "latency_s": {"fp16": 13.5},
+        "exec_share": {"fp16": 0.6089},
+    })
+    with pytest.raises(ValueError, match="q8"):
+        calibrate_imax(w16, w8, platform=fp16_only)
+
+
+def test_energy_report_requires_platform():
+    from repro.configs import get_config, reduced
+    from repro.models.model import build
+    from repro.serving.engine import ServeEngine
+    cfg = reduced(get_config("qwen3-4b"))
+    model = build(cfg)
+    params = model.init_values(jax.random.key(0))
+    eng = ServeEngine(model, params, n_slots=1, max_len=32)
+    with pytest.raises(ValueError, match="platform"):
+        eng.energy_report()

@@ -35,17 +35,50 @@ def _greedy_reference(model, params, prompt, n_new):
     return out
 
 
+# logit margin under which a greedy pick may legitimately flip between
+# the engine's decode path and the full-forward reference (accumulation
+# order differs; bf16 activations round ~1e-2-scale logit differences).
+# Keyed by the config's *compute* dtype — params are stored f32.
+_TIE_MARGIN = {"bf16": 0.15, "f16": 0.05}
+_TIE_MARGIN_DEFAULT = 1e-3
+
+
+def _assert_greedy_matches(model, params, prompt, got, margin):
+    """Engine tokens must equal the slot-free greedy reference, except
+    that at the FIRST divergence the engine's pick must be a near-tie:
+    its reference logit within ``margin`` of the reference argmax. After
+    a tie flip the sequences legitimately differ, so comparison stops
+    there (the prefix equality is still asserted)."""
+    toks = list(prompt)
+    for i, tok in enumerate(got):
+        logits, _ = model.forward(params,
+                                  {"tokens": jnp.asarray([toks])},
+                                  mode="train")
+        lg = np.asarray(logits[0, -1], np.float32)
+        want = int(lg.argmax())
+        if tok == want:
+            toks.append(tok)
+            continue
+        gap = float(lg[want] - lg[tok])
+        assert gap < margin, (
+            f"engine diverged at step {i} ({tok} vs {want}) with a "
+            f"non-tie logit gap {gap:.4f} >= {margin}")
+        return
+    # fully identical sequences
+
+
 def test_engine_matches_slotfree_reference():
-    """Tokens from the batched continuous engine == full-forward greedy."""
+    """Tokens from the batched continuous engine == full-forward greedy,
+    up to near-ties at the bf16 rounding boundary (per-dtype margin)."""
     cfg, model, params, eng = _engine()
+    margin = _TIE_MARGIN.get(cfg.dtype, _TIE_MARGIN_DEFAULT)
     prompts = [[5, 6, 7, 8], [9, 10, 11], [3, 4, 5, 6, 7, 8, 9]]
     sts = [eng.admit(Request(uid=i, tokens=p, max_new=4, eos_id=-2))
            for i, p in enumerate(prompts)]
     while eng.n_active:
         eng.step()
     for st, p in zip(sts, prompts):
-        want = _greedy_reference(model, params, p, 4)
-        assert st.out == want, (st.out, want)
+        _assert_greedy_matches(model, params, p, st.out, margin)
 
 
 def test_interleaved_admission_does_not_corrupt():
