@@ -26,6 +26,7 @@ MODULES = [
     "benchmarks.roofline_table",
     "benchmarks.dispatch_check",
     "benchmarks.decode_traffic",
+    "benchmarks.e2e_asr",
 ]
 
 BENCH_JSON = os.environ.get("BENCH_PLATFORMS_JSON", "BENCH_platforms.json")
@@ -44,10 +45,20 @@ def platforms_record(module_checks: dict) -> dict:
     rows = platform_pdp_table(w16, w8, calib)
     imax8 = get_platform("imax3-28nm").paper_observable("pdp_j", "q8_0")
     dispatch_checks = module_checks.get("benchmarks.dispatch_check", {})
+    asr_checks = module_checks.get("benchmarks.e2e_asr", {})
     return {
         "schema": 1,
         "platforms": list_platforms(),
         "pdp_table": rows,
+        # end-to-end ASR: modeled joules per audio-second per platform
+        # (benchmarks/e2e_asr.py — frontend + chunked encode + decode)
+        "e2e_asr": {
+            "joules_per_audio_s": asr_checks.get("joules_per_audio_s", {}),
+            "steady_state_compute_ms_per_audio_s": asr_checks.get(
+                "steady_state_compute_ms_per_audio_s"),
+            "streaming_matches_one_shot": bool(asr_checks.get(
+                "streaming chunked encode == one-shot tokens", False)),
+        },
         "paper_ratios": {
             "q8_pdp_vs_jetson-agx-orin":
                 get_platform("jetson-agx-orin").paper_observable(

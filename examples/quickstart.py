@@ -1,10 +1,13 @@
-"""Quickstart: the paper's technique end to end in 60 lines.
+"""Quickstart: the paper's technique end to end in 80 lines.
 
 1. Build a Whisper-family model (the paper's target).
 2. Quantize its weights to Q8_0 (paper C1/C3 — ggml block format).
 3. Run the coverage / offload / energy analyses that drive the paper's
    co-design (Tables I/IV, Fig 6).
 4. Run one inference through the quantized model.
+5. Transcribe a synthetic waveform end to end (audio -> log-mel
+   frontend -> chunked encoder -> tokens) through the serving engine,
+   one-shot and streaming, with the platform energy report.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -17,6 +20,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import jax.numpy as jnp
 
+from repro import transcribe
+from repro.audio.stream import synth_waveform
 from repro.configs import get_config, reduced
 from repro.core.burst import offload_rate, optimal_burst
 from repro.core.energy import calibrate_imax, lmm_sweep
@@ -69,6 +74,23 @@ def main():
                                           "tokens": tokens}, mode="train")
     print(f"\nQ8_0 inference OK: logits {logits.shape}, "
           f"finite={bool(jnp.isfinite(logits.astype(jnp.float32)).all())}")
+
+    # -- 5. end-to-end ASR: audio -> tokens ----------------------------------
+    wave = synth_waveform(0.4)
+    one = transcribe(wave, 16_000, model=model, params=params,
+                     chunk_frames=8, max_new=5, platform="imax3-28nm",
+                     cache_dtype="q8_0")
+    streamed = transcribe(wave, 16_000, model=model, params=params,
+                          chunk_frames=8, max_new=5, stream=True,
+                          engine=one.engine)
+    assert streamed.tokens == one.tokens, (streamed.tokens, one.tokens)
+    print(f"\ntranscribe OK: {one.n_frames} encoder frames -> "
+          f"tokens {one.tokens}")
+    print(f"streaming == one-shot ({len(streamed.partials)} partial "
+          f"hypotheses along the way)")
+    print(f"energy[{one.energy['platform']}]: "
+          f"{one.energy['joules_per_audio_s']:.3e} J/audio-s "
+          f"({one.energy['joules_per_token']:.3e} J/token)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,19 @@
+"""repro — JAX/Pallas reproduction of "Energy-Efficient Hardware
+Acceleration of Whisper ASR on a CGLA".
+
+End-user entry points re-exported lazily (importing ``repro`` stays
+cheap; jax loads on first use)::
+
+    from repro import transcribe
+    result = transcribe(samples, 16_000, platform="imax3-28nm")
+"""
+
+__all__ = ["TranscribeResult", "transcribe"]
+
+
+def __getattr__(name):
+    if name in __all__:
+        import importlib
+        mod = importlib.import_module("repro.audio.transcribe")
+        return getattr(mod, name)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")

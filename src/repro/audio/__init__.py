@@ -1,0 +1,29 @@
+"""Audio frontend + streaming encode: samples -> log-mel -> frame
+embeddings -> (chunked) encoder states -> tokens.
+
+The paper evaluates full Whisper ASR; this package closes the repo's
+audio->tokens gap on top of the existing serving/dispatch stack:
+
+* ``features``   — Whisper-style log-mel frontend in pure JAX (framing,
+  Hann window, RFFT power spectrum, mel filterbank as a dispatched
+  matmul) with a NumPy golden reference;
+* ``stream``     — streaming frontend/encoder: fixed-size encoder
+  chunks, sample-exact incremental framing, state accumulation;
+* ``transcribe`` — the one-call ``repro.transcribe()`` API over the
+  serving engine (platform-aware, bf16/q8_0 cache policies).
+"""
+
+from repro.audio.features import (FrontendConfig, audio_frames,
+                                  frame_starts, hann_window, log_mel,
+                                  log_mel_ref, mel_filterbank,
+                                  mel_to_frames)
+from repro.audio.stream import (StreamingFrontend, chunk_list,
+                                synth_waveform)
+from repro.audio.transcribe import TranscribeResult, transcribe
+
+__all__ = [
+    "FrontendConfig", "StreamingFrontend", "TranscribeResult",
+    "audio_frames", "chunk_list", "frame_starts", "hann_window",
+    "log_mel", "log_mel_ref", "mel_filterbank", "mel_to_frames",
+    "synth_waveform", "transcribe",
+]

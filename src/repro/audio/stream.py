@@ -1,0 +1,118 @@
+"""Streaming audio frontend: sample-exact incremental log-mel frames.
+
+``StreamingFrontend`` accepts audio in arbitrary-size pushes and emits
+encoder frame embeddings *incrementally*, guaranteeing that
+
+    concat(push(c) for c in chunks) + flush()  ==  audio_frames(audio)
+
+bit-for-bit: a mel frame is emitted only once its full ``n_fft`` sample
+window has arrived (the frontend holds ``n_fft - hop`` samples of
+lookback), and embedding frames are emitted in whole stride groups so
+the temporal pooling sees the same row groups as the one-shot path.
+``flush()`` zero-pads the tail exactly like ``features.log_mel`` does.
+
+The downstream encoder-chunk streaming (fixed-size chunks, block-
+diagonal attention, incremental cross-K/V extension) lives in
+``serving.engine`` (``open_stream`` / ``stream_feed``); this module is
+pure frontend.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.audio.features import (FrontendConfig, log_mel, mel_to_frames)
+
+
+class StreamingFrontend:
+    """Incremental ``audio_frames``: push samples, get frame embeddings.
+
+    ``push`` returns the newly-completed (k, d_model) embedding frames
+    (possibly empty); ``flush`` pads and emits the tail. The
+    concatenation of all outputs equals the one-shot
+    ``features.audio_frames`` on the same samples, exactly.
+    """
+
+    def __init__(self, d_model: int,
+                 cfg: FrontendConfig = FrontendConfig()):
+        self.cfg = cfg
+        self.d_model = d_model
+        self._buf = np.zeros(0, np.float32)   # samples from _mel_done*hop on
+        self._total = 0                       # samples received
+        self._mel_done = 0                    # emitted mel frames (k*stride)
+        self._closed = False
+
+    @property
+    def samples_received(self) -> int:
+        return self._total
+
+    @property
+    def frames_emitted(self) -> int:
+        """Embedding frames emitted so far."""
+        return self._mel_done // self.cfg.stride
+
+    def push(self, samples) -> np.ndarray:
+        """Feed more samples; returns the newly-final embedding frames
+        ((k, d_model), k >= 0)."""
+        if self._closed:
+            raise ValueError("push() after flush()")
+        cfg = self.cfg
+        x = np.asarray(samples, np.float32).reshape(-1)
+        self._buf = np.concatenate([self._buf, x])
+        self._total += len(x)
+        # mel frame t is final once t*hop + n_fft samples have arrived
+        complete = 0 if self._total < cfg.n_fft \
+            else (self._total - cfg.n_fft) // cfg.hop + 1
+        m1 = (complete // cfg.stride) * cfg.stride   # whole stride groups
+        if m1 <= self._mel_done:
+            return np.zeros((0, self.d_model), np.float32)
+        # samples for mel frames [_mel_done, m1), relative to the buffer
+        # (the buffer starts at global offset _mel_done * hop)
+        n_new = m1 - self._mel_done
+        end = (n_new - 1) * cfg.hop + cfg.n_fft
+        lm = log_mel(self._buf[:end], cfg)[:n_new]
+        out = np.asarray(mel_to_frames(lm, self.d_model, cfg))
+        self._buf = self._buf[n_new * cfg.hop:]
+        self._mel_done = m1
+        return out
+
+    def flush(self) -> np.ndarray:
+        """End of stream: emit the remaining (zero-padded) tail frames."""
+        if self._closed:
+            return np.zeros((0, self.d_model), np.float32)
+        self._closed = True
+        cfg = self.cfg
+        remaining = cfg.n_frames(self._total) - self._mel_done
+        if remaining <= 0:
+            return np.zeros((0, self.d_model), np.float32)
+        lm = log_mel(self._buf, cfg)
+        assert lm.shape[0] == remaining, (lm.shape, remaining)
+        out = np.asarray(mel_to_frames(lm, self.d_model, cfg))
+        self._buf = np.zeros(0, np.float32)
+        self._mel_done += remaining
+        return out
+
+
+def chunk_list(frames, chunk: int) -> List[np.ndarray]:
+    """Split (T, d) frames into fixed-size encoder chunks (last partial)."""
+    if chunk <= 0:
+        raise ValueError(f"chunk must be positive, got {chunk}")
+    fr = np.asarray(frames)
+    return [fr[i:i + chunk] for i in range(0, fr.shape[0], chunk)]
+
+
+def synth_waveform(seconds: float = 1.0, sr: int = 16_000,
+                   seed: int = 0) -> np.ndarray:
+    """Deterministic synthetic test waveform: two tones + a chirp +
+    light noise, peak-normalized — the CLI/benchmark/test input (the
+    repo serves randomly-initialized models, so no real speech needed)."""
+    rng = np.random.default_rng(seed)
+    t = np.arange(int(seconds * sr)) / sr
+    x = (0.4 * np.sin(2 * np.pi * 220.0 * t)
+         + 0.3 * np.sin(2 * np.pi * 440.0 * t + 0.7)
+         + 0.2 * np.sin(2 * np.pi * (300.0 + 600.0 * t) * t)
+         + 0.05 * rng.standard_normal(t.shape))
+    peak = np.abs(x).max() or 1.0
+    return (x / peak * 0.8).astype(np.float32)

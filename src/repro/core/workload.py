@@ -28,7 +28,8 @@ class KernelSpec:
     k: int            # dot-product length
     dtype: str        # storage dtype of A: 'f16' | 'q8_0' | 'f32'
     count: int = 1    # invocations per run
-    tag: str = "proj"  # proj | attn_qk | attn_av | mlp | logits | conv | ssm
+    tag: str = "proj"  # proj | attn_qk | attn_av | mlp | logits | conv |
+    #                    ssm | frontend (audio log-mel/projection GEMMs)
 
     @property
     def flops(self) -> int:

@@ -242,12 +242,20 @@ def decide(op_name: str, spec: KernelSpec,
 
 
 def dispatch(op_name: str, *args, ctx: Optional[DispatchContext] = None,
-             **kwargs):
+             tag: Optional[str] = None, **kwargs):
     """Route one kernel call through the registered backend the control
-    law selects. Returns whatever the backend returns."""
+    law selects. Returns whatever the backend returns.
+
+    ``tag`` (reserved — never forwarded to the backend) overrides the
+    ``KernelSpec.tag`` the op's spec builder stamps, so call sites
+    outside the transformer proper (e.g. the audio frontend's mel/
+    projection GEMMs, tagged ``"frontend"``) stay distinguishable in the
+    dispatch trace and the workload accounting."""
     op = get_op(op_name)
     ctx = ctx or current_context()
     spec = op.spec(*args, **kwargs)
+    if tag is not None:
+        spec = dataclasses.replace(spec, tag=tag)
     decision, backend, footprint = _decide(op, spec, ctx)
     try:
         out = op.backends[backend](ctx, *args, **kwargs)

@@ -1,11 +1,15 @@
 """Whisper-style encoder-decoder (the paper's model family).
 
-The conv/mel frontend is a STUB per the brief: ``input_specs()`` provides
-precomputed frame embeddings (B, S_enc, d_model); a tiny learnable
-projection stands in for conv2 so the frontend remains trainable end to
-end. Encoder: sinusoidal positions + bidirectional attention. Decoder:
-learned positions, causal self-attn + cross-attn + GELU MLP (whisper uses
-LayerNorm and untied... tied token embeddings — we tie, per whisper).
+The model consumes frame *embeddings* (B, S_enc, d_model): either
+precomputed (``input_specs()``/synthetic) or produced from raw audio by
+the ``repro.audio`` log-mel frontend; a tiny learnable projection stands
+in for conv2 so the frontend remains trainable end to end. Encoder:
+sinusoidal positions + bidirectional attention (``encode_chunked`` for
+the streaming block-diagonal variant). Decoder: learned positions,
+causal self-attn + cross-attn + GELU MLP (whisper uses LayerNorm and
+untied... tied token embeddings — we tie, per whisper).
+``cross_attn_kv`` projects new encoder states into the per-layer cross
+K/V planes serving uses to extend a streaming slot's cache in place.
 """
 
 from __future__ import annotations
@@ -20,7 +24,7 @@ from repro.core.quantize import as_array
 from repro.models import attention as attn_mod
 from repro.models.layers import (KeyGen, Param, embed, init_embedding,
                                  init_layernorm, init_mlp, layernorm,
-                                 logits_head, mlp, ninit,
+                                 logits_head, mlp, mm, ninit, rmsnorm,
                                  sinusoidal_positions, split_params,
                                  stack_axes)
 from repro.parallel.sharding import constrain
@@ -92,6 +96,42 @@ def encode(params: dict, cfg: ArchConfig, frames: jax.Array) -> jax.Array:
         layer = jax.checkpoint(layer)
     x, _ = jax.lax.scan(layer, x, params["enc_layers"])
     return layernorm(params["enc_ln"], x)
+
+
+def encode_chunked(params: dict, cfg: ArchConfig, frames: jax.Array,
+                   chunk: int) -> jax.Array:
+    """Block-diagonal encode: frames (B, S, d_model) split into
+    fixed-size chunks, each encoded independently (bidirectional
+    attention *within* the chunk only), states concatenated.
+
+    This is the streaming-ASR encoder semantics: a chunk's states never
+    depend on later audio, so incremental chunk-at-a-time encoding
+    (serving's ``stream_feed``) reproduces the one-shot result exactly.
+    One compile per distinct chunk length (the fixed size + one tail)."""
+    s = frames.shape[1]
+    outs = [encode(params, cfg, frames[:, i:i + chunk])
+            for i in range(0, s, chunk)]
+    return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=1)
+
+
+def cross_attn_kv(params: dict, cfg: ArchConfig, states: jax.Array):
+    """Per-decoder-layer cross-attention K/V for new encoder states.
+
+    states: (B, S_new, d_model) -> (k, v), each (L, B, S_new, Hkv, Dh) —
+    exactly the planes ``decode_tokens``'s prefill writes into the cross
+    cache (same ``mm`` compute dtype, biases, and k-norm as
+    ``attention._project_qkv``), so serving can *extend* a slot's cached
+    encoder K/V as audio chunks arrive instead of re-encoding."""
+    def one(lp):
+        k = mm(states, lp["wk"])
+        v = mm(states, lp["wv"])
+        if "bk" in lp:
+            k = k + lp["bk"].astype(k.dtype)
+            v = v + lp["bv"].astype(v.dtype)
+        if "k_norm" in lp:
+            k = rmsnorm(lp["k_norm"], k, cfg.norm_eps)
+        return k, v
+    return jax.vmap(one)(params["dec_layers"]["cross_attn"])
 
 
 def decode_tokens(params: dict, cfg: ArchConfig, tokens: jax.Array,

@@ -64,9 +64,11 @@ class Model:
     def forward(self, values, batch: dict, *, mode: str = "train",
                 cache=None, pos=None):
         """Returns (logits, new_cache). ``batch`` keys by family:
-        tokens (all); enc_frames (audio); img_embed (vlm, train/prefill);
-        enc_lens (audio decode, optional: per-lane valid encoder lengths
-        for cross-attention over padded cached encoder states)."""
+        tokens (all); enc_frames (audio) or enc_states (audio:
+        precomputed encoder output, e.g. streaming chunked encode —
+        skips the encoder); img_embed (vlm, train/prefill); enc_lens
+        (audio decode, optional: per-lane valid encoder lengths for
+        cross-attention over padded cached encoder states)."""
         cfg = self.cfg
         if cfg.enc_dec:
             if mode == "decode":
@@ -74,13 +76,22 @@ class Model:
                                                 mode="decode", cache=cache,
                                                 pos=pos,
                                                 enc_lens=batch.get("enc_lens"))
-            enc_out = encdec_mod.encode(values, cfg, batch["enc_frames"])
+            enc_out = batch.get("enc_states")
+            if enc_out is None:
+                enc_out = encdec_mod.encode(values, cfg, batch["enc_frames"])
             return encdec_mod.decode_tokens(values, cfg, batch["tokens"],
                                             enc_out, mode=mode, cache=cache)
         prefix = batch.get("img_embed") if mode != "decode" else None
         return tf_mod.decoder_forward(values, cfg, batch["tokens"],
                                       mode=mode, cache=cache, pos=pos,
                                       prefix_embed=prefix)
+
+    def encode(self, values, frames):
+        """Encoder-only pass (enc-dec models): frame embeddings
+        (B, S, d_model) -> encoder states (B, S, d_model)."""
+        if not self.cfg.enc_dec:
+            raise ValueError(f"{self.cfg.name} is not encoder-decoder")
+        return encdec_mod.encode(values, self.cfg, frames)
 
     # ---- cache ------------------------------------------------------------
     def init_cache(self, batch: int, max_len: int, enc_len: int = 1500,

@@ -43,10 +43,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import flags
-from repro.core.quantize import stored_bytes
+from repro.core.quantize import quantize_q8_0, stored_bytes
 from repro.kernels.api import (DispatchContext, dispatch_counters,
                                dispatch_trace, use_context)
 from repro.kernels.q8_attention.ops import cache_traffic_ratio
+from repro.models import encdec as encdec_mod
 from repro.models.attention import quantize_kv_cache
 from repro.models.model import Model
 from repro.platforms import Platform, get_platform
@@ -67,18 +68,52 @@ class Request:
     # enc-dec (audio) requests: precomputed frame embeddings
     # (S_enc, d_model); required when the served model is enc_dec.
     enc_frames: Optional[Any] = None
+    # alternatively, precomputed *encoder states* (S_enc, d_model) —
+    # e.g. from the chunked streaming encoder — which skip the
+    # engine-side encode entirely (exactly one of the two for enc-dec).
+    enc_states: Optional[Any] = None
 
 
 @dataclasses.dataclass
 class AudioRequest(Request):
-    """A Request whose ``enc_frames`` is required — the whisper serving
-    path. Same scheduler/engine treatment as text requests; the frames
-    are encoded once at admit and cached per slot."""
+    """A Request that must carry encoder input — the whisper serving
+    path: either ``enc_frames`` (encoded once at admit) or precomputed
+    ``enc_states`` (chunked/streaming encode output). Same scheduler/
+    engine treatment as text requests; the encoder result is cached per
+    slot."""
 
     def __post_init__(self):
-        if self.enc_frames is None:
+        if self.enc_frames is None and self.enc_states is None:
             raise ValueError(
-                f"AudioRequest {self.uid} requires enc_frames")
+                f"AudioRequest {self.uid} requires enc_frames or "
+                f"enc_states")
+
+
+@dataclasses.dataclass
+class StreamingAudioRequest(Request):
+    """An audio request whose encoder frames arrive incrementally.
+
+    ``chunks`` is the list of frame-embedding chunks ((s_i, d_model),
+    fixed size except the tail — ``repro.audio.stream`` produces them
+    from raw samples). The scheduler feeds one chunk per tick through
+    ``ServeEngine.open_stream``/``stream_feed``: each chunk is encoded
+    once (block-diagonal chunked encode), the slot's cached encoder K/V
+    is *extended* in place, and the lane's ``enc_lens`` grows — decode
+    ticks in between emit partial hypotheses (``RequestState.partials``).
+    ``stream_finalize`` re-anchors the prompt against the full audio, so
+    the final transcript is token-identical to one-shot serving."""
+
+    chunks: Optional[list] = None
+
+    def __post_init__(self):
+        if not self.chunks:
+            raise ValueError(
+                f"StreamingAudioRequest {self.uid} requires a non-empty "
+                f"list of frame chunks")
+        if self.enc_frames is not None or self.enc_states is not None:
+            raise ValueError(
+                f"StreamingAudioRequest {self.uid}: frames arrive via "
+                f"chunks, not enc_frames/enc_states")
 
 
 @dataclasses.dataclass
@@ -89,6 +124,17 @@ class RequestState:
     out: list                # generated ids
     done: bool = False
     error: Optional[str] = None   # set when rejected/failed, slot == -1
+    # streaming requests: one snapshot of ``out`` per fed audio chunk
+    # (the partial hypotheses emitted while audio was still arriving)
+    partials: list = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class _StreamState:
+    """Engine-side state of one open audio stream (slot-keyed)."""
+    states: list                  # encoded chunk states, each (1, s_i, d)
+    n_frames: int = 0             # frames fed == valid encoder positions
+    anchored: bool = False        # prompt prefill has run at least once
 
 
 def _bucket(n: int, buckets=(32, 64, 128, 256, 512, 1024, 2048)) -> int:
@@ -160,6 +206,15 @@ class ServeEngine:
         self._enc_lens = np.zeros((n_slots,), np.int32)
         self._decode = self._build_decode()
         self._prefill_fns: dict[tuple, Any] = {}
+        # streaming audio: open streams by slot + jitted encoder helpers
+        # (jit retraces per chunk length — fixed chunks + one tail)
+        self._streams: dict[int, _StreamState] = {}
+        if self.enc_dec:
+            cfg_ = cfg
+            self._encode = jax.jit(self.model.encode)
+            self._cross_kv = jax.jit(
+                lambda params, states: encdec_mod.cross_attn_kv(
+                    params, cfg_, states))
         # serving-energy accounting (energy_report)
         self._ticks = 0        # executed batched decode steps
         self._generated = 0    # tokens emitted (prefill firsts + decode)
@@ -180,18 +235,24 @@ class ServeEngine:
 
         return decode
 
-    def _prefill_fn(self, bucket: int, enc_s: Optional[int] = None):
-        key = (bucket, enc_s)
+    def _prefill_fn(self, bucket: int, enc_s: Optional[int] = None,
+                    from_states: bool = False):
+        """Jitted prefill, keyed (token bucket, encoder length, input
+        kind). ``from_states=True`` takes precomputed encoder states
+        (streaming chunked encode / ``Request.enc_states``) instead of
+        frame embeddings, skipping the in-prefill encoder pass."""
+        key = (bucket, enc_s, from_states)
         if key not in self._prefill_fns:
             model, max_len, enc_len = self.model, self.max_len, self.enc_len
             q8 = self.cache_dtype == "q8_0"
+            enc_key = "enc_states" if from_states else "enc_frames"
 
             @jax.jit
-            def prefill(params, tokens, enc_frames=None):
+            def prefill(params, tokens, enc=None):
                 cache = model.init_cache(1, max_len, enc_len)
                 batch = {"tokens": tokens}
-                if enc_frames is not None:
-                    batch["enc_frames"] = enc_frames
+                if enc is not None:
+                    batch[enc_key] = enc
                 logits, cache = model.forward(params, batch,
                                               mode="prefill", cache=cache)
                 if q8:
@@ -210,20 +271,43 @@ class ServeEngine:
         if n + req.max_new >= self.max_len:
             return (f"request {req.uid} too long for engine "
                     f"({n}+{req.max_new} vs {self.max_len})")
+        d_model = self.model.cfg.d_model
         if self.enc_dec:
-            if req.enc_frames is None:
+            if isinstance(req, StreamingAudioRequest):
+                total = 0
+                for i, c in enumerate(req.chunks):
+                    shp = np.shape(c)
+                    if len(shp) != 2 or shp[1] != d_model or shp[0] < 1:
+                        return (f"request {req.uid}: chunk {i} must be "
+                                f"(s, {d_model}) with s >= 1, got {shp}")
+                    total += shp[0]
+                if total > self.enc_len:
+                    return (f"request {req.uid}: {total} streamed encoder "
+                            f"frames exceed the pool enc_len "
+                            f"{self.enc_len}")
+                return None
+            if req.enc_frames is None and req.enc_states is None:
                 return (f"request {req.uid}: enc-dec model "
-                        f"{self.model.cfg.name} requires enc_frames")
-            frames = np.asarray(req.enc_frames)
-            if frames.ndim != 2 or frames.shape[1] != self.model.cfg.d_model:
-                return (f"request {req.uid}: enc_frames must be "
-                        f"(S_enc, {self.model.cfg.d_model}), got "
-                        f"{frames.shape}")
-            if frames.shape[0] > self.enc_len:
-                return (f"request {req.uid}: {frames.shape[0]} encoder "
-                        f"frames exceed the pool enc_len {self.enc_len}")
-        elif req.enc_frames is not None:
-            return (f"request {req.uid}: enc_frames on decoder-only "
+                        f"{self.model.cfg.name} requires enc_frames or "
+                        f"enc_states")
+            if req.enc_frames is not None and req.enc_states is not None:
+                return (f"request {req.uid}: pass enc_frames or "
+                        f"enc_states, not both")
+            enc = req.enc_frames if req.enc_frames is not None \
+                else req.enc_states
+            what = "enc_frames" if req.enc_frames is not None \
+                else "enc_states"
+            shp = np.shape(enc)
+            if len(shp) != 2 or shp[1] != d_model:
+                return (f"request {req.uid}: {what} must be "
+                        f"(S_enc, {d_model}), got {shp}")
+            if shp[0] > self.enc_len:
+                return (f"request {req.uid}: {shp[0]} encoder "
+                        f"positions exceed the pool enc_len "
+                        f"{self.enc_len}")
+        elif req.enc_frames is not None or req.enc_states is not None \
+                or isinstance(req, StreamingAudioRequest):
+            return (f"request {req.uid}: encoder input on decoder-only "
                     f"model {self.model.cfg.name}")
         return None
 
@@ -231,6 +315,10 @@ class ServeEngine:
         """Prefill a request into a free slot; None if the pool is full.
         Raises ValueError for requests that can never be served (use
         ``validate`` to precheck)."""
+        if isinstance(req, StreamingAudioRequest):
+            raise ValueError(
+                f"request {req.uid}: streaming requests are served via "
+                f"open_stream/stream_feed (or BatchScheduler.submit)")
         if not self.free:
             return None
         err = self.validate(req)
@@ -243,7 +331,15 @@ class ServeEngine:
         toks[0, :n] = req.tokens
         enc_s = None
         with use_context(self.dispatch_ctx):
-            if self.enc_dec:
+            if self.enc_dec and req.enc_states is not None:
+                # precomputed encoder states (chunked/streaming encode):
+                # prefill skips the encoder pass entirely.
+                states = jnp.asarray(req.enc_states)[None]
+                enc_s = int(states.shape[1])
+                logits, cache1 = self._prefill_fn(
+                    bucket, enc_s, from_states=True)(
+                        self.params, jnp.asarray(toks), states)
+            elif self.enc_dec:
                 # encode at the exact frame count: the encoder attends
                 # bidirectionally, so bucket padding would corrupt every
                 # frame state (one compile per distinct enc_s).
@@ -269,6 +365,147 @@ class ServeEngine:
             self.active[slot] = st
         return st
 
+    # ---------------------------------------------------- streaming audio
+    def open_stream(self, req: StreamingAudioRequest
+                    ) -> Optional[RequestState]:
+        """Allocate a slot for a streaming audio request; None if the
+        pool is full. No prefill happens yet — the first ``stream_feed``
+        anchors the prompt against the first chunk's states."""
+        if not isinstance(req, StreamingAudioRequest):
+            raise ValueError(f"request {req.uid}: open_stream takes a "
+                             f"StreamingAudioRequest")
+        err = self.validate(req)
+        if err is not None:
+            raise ValueError(err)
+        if not self.free:
+            return None
+        slot = self.free.pop()
+        st = RequestState(req=req, slot=slot, pos=0, out=[])
+        self._streams[slot] = _StreamState(states=[])
+        return st
+
+    def stream_feed(self, st: RequestState, frames) -> RequestState:
+        """Feed one chunk of frame embeddings ((s, d_model)) to an open
+        stream: encode the chunk (block-diagonal — its states never
+        change as more audio arrives), extend the slot's cached cross
+        K/V in place, and grow the lane's ``enc_lens`` so the very next
+        decode tick attends the new audio. Appends a partial-hypothesis
+        snapshot to ``st.partials``."""
+        slot = st.slot
+        ss = self._streams[slot]
+        fr = jnp.asarray(np.asarray(frames, np.float32))[None]
+        s_new = int(fr.shape[1])
+        if ss.n_frames + s_new > self.enc_len:
+            raise ValueError(
+                f"request {st.req.uid}: stream overflows the pool "
+                f"enc_len {self.enc_len} ({ss.n_frames}+{s_new})")
+        with use_context(self.dispatch_ctx):
+            states = self._encode(self.params, fr)
+        ss.states.append(states)
+        first_feed = not ss.anchored
+        if not first_feed:
+            # incremental extension: project the new states through each
+            # decoder layer's cross K/V and write them after the
+            # already-cached positions (quantizing for a q8_0 pool).
+            with use_context(self.dispatch_ctx):
+                k, v = self._cross_kv(self.params, states)
+            self._extend_cross(slot, k, v, ss.n_frames)
+        ss.n_frames += s_new
+        if first_feed:
+            self._anchor(st, ss, final=False)
+        else:
+            self._enc_lens[slot] = ss.n_frames
+        st.partials.append(list(st.out))
+        return st
+
+    def stream_finalize(self, st: RequestState) -> RequestState:
+        """End of audio: re-anchor the prompt against the *full* encoder
+        states (one bucketed prefill — the encoder work is NOT redone),
+        so the final transcript is token-identical to one-shot serving
+        of the same chunked audio. The mid-stream hypothesis is kept as
+        the last entry of ``st.partials``."""
+        slot = st.slot
+        ss = self._streams.pop(slot)
+        if st.out:
+            st.partials.append(list(st.out))
+        self.active.pop(slot, None)
+        self._anchor(st, ss, final=True)
+        return st
+
+    def _anchor(self, st: RequestState, ss: _StreamState,
+                final: bool) -> None:
+        """Prompt prefill for a streaming lane over the states fed so
+        far (the same jitted states-prefill the one-shot path uses; the
+        scatter re-writes the slot's cross planes with values identical
+        to the incremental extension)."""
+        req, slot = st.req, st.slot
+        n = len(req.tokens)
+        states = ss.states[0] if len(ss.states) == 1 \
+            else jnp.concatenate(ss.states, axis=1)
+        bucket = min(_bucket(n), self.max_len)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :n] = req.tokens
+        with use_context(self.dispatch_ctx):
+            logits, cache1 = self._prefill_fn(
+                bucket, int(states.shape[1]), from_states=True)(
+                    self.params, jnp.asarray(toks), states)
+        self.cache = _scatter_slot(self.cache, cache1, slot)
+        first = int(np.argmax(np.asarray(logits)[0, n - 1]))
+        self._generated += 1
+        ss.anchored = True
+        st.out = [first]
+        st.pos = n
+        self._tokens[slot, 0] = first
+        self._pos[slot] = n
+        self._enc_lens[slot] = ss.n_frames
+        finished = first == req.eos_id or req.max_new <= 1
+        if final and finished:
+            st.done = True
+            self._free_slot(slot)
+        elif not finished:
+            self.active[slot] = st
+        # mid-stream + finished: lane pauses (stays allocated, resumes
+        # at the next anchor)
+
+    def _extend_cross(self, slot: int, k, v, offset: int) -> None:
+        """Write new cross-K/V positions ((L, 1, s_new, Hkv, ·)) into
+        lane ``slot`` of the pool's cross cache at ``offset``."""
+        cross = self.cache["layers"]["cross"]
+
+        def dus(plane, new):
+            return jax.lax.dynamic_update_slice(
+                plane, new.astype(plane.dtype), (0, slot, offset, 0, 0))
+
+        if self.cache_dtype == "q8_0":
+            kt = quantize_q8_0(k, axis=-1)
+            vt = quantize_q8_0(v, axis=-1)
+            new_cross = {"kq": dus(cross["kq"], kt.q),
+                         "ks": dus(cross["ks"], kt.scale),
+                         "vq": dus(cross["vq"], vt.q),
+                         "vs": dus(cross["vs"], vt.scale)}
+        else:
+            new_cross = {"k": dus(cross["k"], k), "v": dus(cross["v"], v)}
+        self.cache = {"layers": {**self.cache["layers"],
+                                 "cross": new_cross}}
+
+    def encode_chunks(self, chunks) -> jnp.ndarray:
+        """Encode a list of frame-embedding chunks through the engine's
+        jitted per-size encoder — the exact functions ``stream_feed``
+        uses — and concatenate the states (1, sum(s_i), d_model). The
+        one-shot ``transcribe`` path uses this so its states are
+        bit-identical to the streaming path's."""
+        outs = []
+        with use_context(self.dispatch_ctx):
+            for c in chunks:
+                fr = jnp.asarray(np.asarray(c, np.float32))[None]
+                outs.append(self._encode(self.params, fr))
+        return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=1)
+
+    @property
+    def n_streams(self) -> int:
+        """Open (not yet finalized) audio streams."""
+        return len(self._streams)
+
     # ------------------------------------------------------------------
     def step(self) -> list[RequestState]:
         """One batched decode tick over the whole pool."""
@@ -290,6 +527,13 @@ class ServeEngine:
             self._pos[slot] = st.pos
             if tok == st.req.eos_id or len(st.out) >= st.req.max_new \
                     or st.pos >= self.max_len - 1:
+                if slot in self._streams:
+                    # mid-stream hypothesis complete: pause the lane
+                    # (keep the slot and its growing encoder cache);
+                    # stream_finalize re-anchors and decodes the final
+                    # transcript.
+                    self.active.pop(slot)
+                    continue
                 st.done = True
                 self.active.pop(slot)
                 self._free_slot(slot)
@@ -343,6 +587,14 @@ class ServeEngine:
         }
 
     # ------------------------------------------------------------------
+    def reset_serve_stats(self) -> None:
+        """Zero the serve-energy accounting (executed ticks / emitted
+        tokens) so the next ``energy_report()`` prices only work from
+        this point on. Per-call reports on a reused engine
+        (``repro.transcribe(engine=...)``) reset before serving."""
+        self._ticks = 0
+        self._generated = 0
+
     def _param_stats(self) -> tuple[int, int]:
         """(element count, stored bytes) of the served parameters."""
         leaves = jax.tree.leaves(self.params)

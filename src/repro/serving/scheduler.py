@@ -3,10 +3,19 @@
 Policy layer over ServeEngine: FCFS queue with slot-aware admission and
 optional prefill/decode interleave ratio. One ``tick()`` =
 
+  0. feed one pending audio chunk to every open stream (finalizing
+     streams whose audio has fully arrived);
   1. admit waiting requests while slots are free (each admit = one
-     bucketed prefill);
+     bucketed prefill; streaming requests open a stream and feed their
+     first chunk);
   2. one batched decode step over all active slots;
   3. collect finished requests.
+
+Streaming audio (``StreamingAudioRequest``): one chunk is delivered per
+tick — the serving-time model of real-time arrival — so a lane decodes
+*while* its audio is still arriving (partial hypotheses land in
+``RequestState.partials``) and is re-anchored at end of audio for the
+final transcript.
 
 Metrics track queue latency, time-to-first-token (in ticks), and slot
 occupancy — the quantities a production scheduler optimizes.
@@ -18,7 +27,8 @@ import dataclasses
 from collections import deque
 from typing import Optional
 
-from repro.serving.engine import Request, RequestState, ServeEngine
+from repro.serving.engine import (Request, RequestState, ServeEngine,
+                                  StreamingAudioRequest)
 
 
 @dataclasses.dataclass
@@ -47,6 +57,8 @@ class BatchScheduler:
         self.queue: deque[tuple[Request, int]] = deque()   # (req, t_submit)
         self.metrics = SchedMetrics()
         self.results: dict[int, RequestState] = {}
+        # open streams: slot -> (state, pending frame chunks)
+        self._streams: dict[int, tuple[RequestState, deque]] = {}
 
     def submit(self, req: Request) -> Optional[RequestState]:
         """Queue a request. Requests this engine can never serve
@@ -66,13 +78,27 @@ class BatchScheduler:
 
     def tick(self) -> list[RequestState]:
         m = self.metrics
+        # 0. deliver one audio chunk per open stream (real-time model);
+        # streams whose audio has fully arrived are finalized.
+        for slot in list(self._streams):
+            st, pending = self._streams[slot]
+            self.engine.stream_feed(st, pending.popleft())
+            if not pending:
+                del self._streams[slot]
+                st = self.engine.stream_finalize(st)
+                if st.done:
+                    m.completed += 1
+                    self.results[st.req.uid] = st
         # 1. admission
         admitted = 0
         while (self.queue and self.engine.free
                and admitted < self.max_admit_per_tick):
             req, t_submit = self.queue.popleft()
             try:
-                st = self.engine.admit(req)
+                if isinstance(req, StreamingAudioRequest):
+                    st = self.engine.open_stream(req)
+                else:
+                    st = self.engine.admit(req)
             except ValueError as e:
                 # a request submit()'s precheck missed: fail it, keep
                 # the serving loop alive
@@ -84,11 +110,21 @@ class BatchScheduler:
             if st is None:      # pool filled since the loop condition
                 self.queue.appendleft((req, t_submit))
                 break
+            if isinstance(req, StreamingAudioRequest):
+                pending = deque(req.chunks)
+                self.engine.stream_feed(st, pending.popleft())
+                if pending:
+                    self._streams[st.slot] = (st, pending)
+                else:
+                    st = self.engine.stream_finalize(st)
+                    if st.done:
+                        m.completed += 1
+                        self.results[req.uid] = st
             m.admitted += 1
             m.queue_wait_sum += m.ticks - t_submit
             m.ttft_sum += m.ticks - t_submit   # first token at admit
             admitted += 1
-            if st.done:
+            if st.done and st.req.uid not in self.results:
                 m.completed += 1
                 self.results[req.uid] = st
         # 2. decode tick
@@ -101,10 +137,11 @@ class BatchScheduler:
         return finished
 
     def run_until_drained(self, max_ticks: int = 10_000) -> None:
-        while (self.queue or self.engine.n_active) and \
+        while (self.queue or self._streams or self.engine.n_active) and \
                 self.metrics.ticks < max_ticks:
             self.tick()
 
     @property
     def drained(self) -> bool:
-        return not self.queue and self.engine.n_active == 0
+        return (not self.queue and not self._streams
+                and self.engine.n_active == 0)
