@@ -1,0 +1,249 @@
+"""Decode throughput: tokens/s and host syncs per token across
+``decode_block x cache_dtype`` — the serving engine's measured-perf
+trajectory.
+
+The fused decode loop (``ServeEngine.step``) runs ``decode_block``
+decode steps inside one donated jit and syncs to host once per tick, so
+the per-token host cost (jit dispatch, device round trip, Python
+bookkeeping) is amortized ``decode_block``-fold. This benchmark pins
+that down three ways:
+
+* **counts** (deterministic): host syncs per token drop exactly
+  ``1/decode_block``-fold, one sync per tick, and the emitted tokens
+  are identical across every block size and vs the pre-PR ``seed_loop``
+  reference (host-resident state re-uploaded per step, undonated
+  decode) — these are the blocking checks;
+* **wall clock** (hardware-dependent): tokens/s per grid cell, measured
+  with compile-warmup + interleaved passes + best-of (so scheduler
+  noise and cgroup throttling hit all cells equally); the
+  ``block16 >= 3x block1`` throughput target is enforced only under
+  ``REPRO_BENCH_STRICT_THROUGHPUT=1`` (the non-blocking CI smoke job)
+  because wall-clock ratios on tiny shared-CPU runners are load-bound;
+* the model is a micro whisper config (1 enc / 1 dec layer, d=64):
+  the point is the loop overhead around a decode step, not the step
+  itself — ``decode_traffic``/``e2e_asr`` cover the reduced config.
+"""
+
+import dataclasses
+import gc
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import benchmarks.common  # noqa: F401  (puts src/ on the path)
+from repro.configs import get_config, reduced
+from repro.models.model import build
+from repro.serving.engine import AudioRequest, ServeEngine
+
+BLOCKS = (1, 4, 16)
+CACHE_DTYPES = ("bf16", "q8_0")
+N_SLOTS = 2
+MAX_LEN = 64
+ENC_FRAMES = 12
+MAX_NEW = 49          # 1 prefill token + 48 decode tokens; 48 % 16 == 0
+PROMPTS = ([5, 6, 7], [9, 10, 11, 12])
+PASSES = 6            # timed passes per cell (interleaved, best-of)
+
+
+def _micro_whisper():
+    """Whisper shrunk to the loop-overhead regime (q8-compatible:
+    head_dim 32, plain softmax)."""
+    cfg = dataclasses.replace(
+        reduced(get_config("whisper-tiny-en")),
+        d_model=64, n_heads=2, n_kv_heads=2, d_ff=128, vocab=256,
+        enc_layers=1, n_layers=1)
+    model = build(cfg)
+    return cfg, model, model.init_values(jax.random.key(0))
+
+
+def _requests(cfg):
+    rng = np.random.default_rng(0)
+    return [AudioRequest(uid=i, tokens=list(p), max_new=MAX_NEW,
+                         eos_id=-1,
+                         enc_frames=rng.standard_normal(
+                             (ENC_FRAMES, cfg.d_model)).astype(
+                                 np.float32) * 0.5)
+            for i, p in enumerate(PROMPTS)]
+
+
+class _SeedLoop:
+    """The pre-PR decode loop, reproduced as a reference: per-lane state
+    lives in host NumPy and is re-uploaded every step, the decode jit is
+    undonated (the KV pool is copied per step), and every token costs a
+    host round trip. Serves the lanes an engine has just admitted."""
+
+    def __init__(self, eng: ServeEngine):
+        self.eng = eng
+        model = eng.model
+
+        @jax.jit
+        def decode(params, cache, tokens, pos, enc_lens):
+            logits, new_cache = model.forward(
+                params, {"tokens": tokens, "enc_lens": enc_lens},
+                mode="decode", cache=cache, pos=pos)
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return nxt, new_cache
+
+        self.decode = decode
+
+    def serve(self, sts) -> int:
+        eng = self.eng
+        tokens = np.array(eng._tokens)
+        pos = np.array(eng._pos)
+        enc = np.array(eng._enc_lens)
+        cache = eng.cache
+        active = {st.slot: st for st in sts if not st.done}
+        n = 0
+        while active:
+            nxt, cache = self.decode(
+                eng.params, cache, jnp.asarray(tokens), jnp.asarray(pos),
+                jnp.asarray(enc))
+            nxt = np.asarray(nxt)
+            for slot, st in list(active.items()):
+                tok = int(nxt[slot])
+                st.out.append(tok)
+                st.pos += 1
+                n += 1
+                tokens[slot, 0] = tok
+                pos[slot] = st.pos
+                if tok == st.req.eos_id or len(st.out) >= st.req.max_new \
+                        or st.pos >= eng.max_len - 1:
+                    del active[slot]
+        return n
+
+
+def _fused_pass(eng, cfg):
+    sts = [eng.admit(r) for r in _requests(cfg)]
+    g0, s0 = eng._generated, eng._host_syncs
+    t0 = time.monotonic()
+    while eng.n_active:
+        eng.step()
+    dt = time.monotonic() - t0
+    return ([st.out for st in sts], eng._generated - g0,
+            eng._host_syncs - s0, eng._ticks, dt)
+
+
+def _seed_pass(eng, loop, cfg):
+    sts = [eng.admit(r) for r in _requests(cfg)]
+    eng.active.clear()            # the reference loop takes over
+    t0 = time.monotonic()
+    n = loop.serve(sts)
+    dt = time.monotonic() - t0
+    eng.free = list(range(eng.n_slots))
+    return [st.out for st in sts], n, dt
+
+
+def run():
+    cfg, model, params = _micro_whisper()
+
+    def engine(cache_dtype, block):
+        return ServeEngine(model, params, n_slots=N_SLOTS,
+                           max_len=MAX_LEN, enc_len=16,
+                           cache_dtype=cache_dtype, decode_block=block)
+
+    cells = {}          # (dtype, block) -> dict
+    seed = {}           # dtype -> dict
+    for dt in CACHE_DTYPES:
+        for b in BLOCKS:
+            cells[(dt, b)] = {"eng": engine(dt, b), "best": float("inf")}
+        e = engine(dt, 1)
+        seed[dt] = {"eng": e, "loop": _SeedLoop(e), "best": float("inf")}
+
+    # compile warmup, then interleaved timed passes: contention and
+    # throttle phases hit every cell, best-of filters the spikes
+    for dt in CACHE_DTYPES:
+        for b in BLOCKS:
+            _fused_pass(cells[(dt, b)]["eng"], cfg)
+        _seed_pass(seed[dt]["eng"], seed[dt]["loop"], cfg)
+    gc.disable()
+    try:
+        for _ in range(PASSES):
+            for dt in CACHE_DTYPES:
+                for b in BLOCKS:
+                    c = cells[(dt, b)]
+                    outs, toks, syncs, ticks, wall = _fused_pass(
+                        c["eng"], cfg)
+                    c["sum_toks"] = c.get("sum_toks", 0) + toks
+                    c["sum_syncs"] = c.get("sum_syncs", 0) + syncs
+                    c.update(outs=outs, toks=toks, best=min(c["best"], wall))
+                s = seed[dt]
+                outs, toks, wall = _seed_pass(s["eng"], s["loop"], cfg)
+                s.update(outs=outs, toks=toks, best=min(s["best"], wall))
+    finally:
+        gc.enable()
+
+    tok_s, syncs_per_tok = {}, {}
+    one_sync_per_tick = True
+    parity = {dt: True for dt in CACHE_DTYPES}
+    for (dt, b), c in cells.items():
+        eng = c["eng"]
+        tok_s[f"{dt}/block{b}"] = round(c["toks"] / c["best"], 1)
+        # count-exact: decode-tick syncs over decode tokens (timed passes)
+        syncs_per_tok[f"{dt}/block{b}"] = round(
+            c["sum_syncs"] / max(c["sum_toks"], 1), 5)
+        one_sync_per_tick &= eng._host_syncs == eng._ticks
+        parity[dt] &= c["outs"] == cells[(dt, 1)]["outs"]
+    seed_tok_s = {dt: round(s["toks"] / s["best"], 1)
+                  for dt, s in seed.items()}
+    seed_parity = {dt: seed[dt]["outs"] == cells[(dt, 1)]["outs"]
+                   for dt in CACHE_DTYPES}
+    speedup_16v1 = {dt: tok_s[f"{dt}/block16"] / tok_s[f"{dt}/block1"]
+                    for dt in CACHE_DTYPES}
+    speedup_16vseed = {dt: tok_s[f"{dt}/block16"] / seed_tok_s[dt]
+                       for dt in CACHE_DTYPES}
+
+    lines = [
+        f"decode throughput: micro whisper (1+1 layers, d=64), "
+        f"{N_SLOTS} lanes x {MAX_NEW - 1} decode tokens, best of "
+        f"{PASSES} interleaved passes",
+        f"{'cache':6s} {'block':>5s} {'tok/s':>8s} {'syncs/tok':>10s}",
+    ]
+    for dt in CACHE_DTYPES:
+        for b in BLOCKS:
+            lines.append(f"{dt:6s} {b:5d} {tok_s[f'{dt}/block{b}']:8.1f} "
+                         f"{syncs_per_tok[f'{dt}/block{b}']:10.4f}")
+        lines.append(f"{dt:6s} {'seed':>5s} {seed_tok_s[dt]:8.1f} "
+                     f"{1.0:10.4f}   (pre-PR host-resident loop)")
+    for dt in CACHE_DTYPES:
+        lines.append(
+            f"{dt}: block16 = {speedup_16v1[dt]:.2f}x block1, "
+            f"{speedup_16vseed[dt]:.2f}x seed loop")
+
+    checks = {
+        # deterministic properties — blocking
+        "fused blocks token-identical to block1 (bf16)": parity["bf16"],
+        "fused blocks token-identical to block1 (q8_0)": parity["q8_0"],
+        "fused tokens match the seed host loop":
+            all(seed_parity.values()),
+        "exactly one host sync per tick": one_sync_per_tick,
+        "block16 syncs/token == block1/16":
+            abs(syncs_per_tok["bf16/block1"]
+                - 16 * syncs_per_tok["bf16/block16"]) < 1e-9,
+        # wall clock — informative here, enforced in the strict CI job
+        "tokens_per_s": tok_s,
+        "seed_loop_tokens_per_s": seed_tok_s,
+        "host_syncs_per_token": syncs_per_tok,
+        "speedup_block16_vs_block1":
+            {dt: round(v, 2) for dt, v in speedup_16v1.items()},
+        "speedup_block16_vs_seed_loop":
+            {dt: round(v, 2) for dt, v in speedup_16vseed.items()},
+    }
+    if os.environ.get("REPRO_BENCH_STRICT_THROUGHPUT"):
+        checks["block16 >= 3x block1 tok/s (bf16, strict)"] = \
+            speedup_16v1["bf16"] >= 3.0
+    return "\n".join(lines), checks
+
+
+if __name__ == "__main__":
+    import sys
+    table, checks = run()
+    print(table)
+    failed = [k for k, v in checks.items()
+              if isinstance(v, bool) and not v]
+    for k, v in checks.items():
+        print(f"  [{('PASS' if v else 'FAIL') if isinstance(v, bool) else 'info'}] {k}"
+              + ("" if isinstance(v, bool) else f": {v}"))
+    sys.exit(1 if failed else 0)

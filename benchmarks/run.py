@@ -26,6 +26,7 @@ MODULES = [
     "benchmarks.roofline_table",
     "benchmarks.dispatch_check",
     "benchmarks.decode_traffic",
+    "benchmarks.decode_throughput",
     "benchmarks.e2e_asr",
 ]
 
@@ -46,6 +47,7 @@ def platforms_record(module_checks: dict) -> dict:
     imax8 = get_platform("imax3-28nm").paper_observable("pdp_j", "q8_0")
     dispatch_checks = module_checks.get("benchmarks.dispatch_check", {})
     asr_checks = module_checks.get("benchmarks.e2e_asr", {})
+    tp_checks = module_checks.get("benchmarks.decode_throughput", {})
     return {
         "schema": 1,
         "platforms": list_platforms(),
@@ -66,6 +68,28 @@ def platforms_record(module_checks: dict) -> dict:
             "q8_pdp_vs_rtx-4090":
                 get_platform("rtx-4090").paper_observable(
                     "pdp_j", "q8_0") / imax8,
+        },
+        # fused decode loop: tokens/s + host syncs per token across the
+        # decode_block x cache_dtype grid (benchmarks/decode_throughput)
+        # — the perf-trajectory record for the serving hot path
+        "decode_throughput": {
+            "tokens_per_s": tp_checks.get("tokens_per_s", {}),
+            "seed_loop_tokens_per_s":
+                tp_checks.get("seed_loop_tokens_per_s", {}),
+            "host_syncs_per_token":
+                tp_checks.get("host_syncs_per_token", {}),
+            "speedup_block16_vs_block1":
+                tp_checks.get("speedup_block16_vs_block1", {}),
+            "speedup_block16_vs_seed_loop":
+                tp_checks.get("speedup_block16_vs_seed_loop", {}),
+            "fused_matches_sequential": bool(
+                tp_checks.get(
+                    "fused blocks token-identical to block1 (bf16)", False)
+                and tp_checks.get(
+                    "fused blocks token-identical to block1 (q8_0)",
+                    False)),
+            "one_host_sync_per_tick": bool(tp_checks.get(
+                "exactly one host sync per tick", False)),
         },
         "dispatch_agreement": bool(dispatch_checks.get(
             "plan and dispatch agree on every kernel", False)),

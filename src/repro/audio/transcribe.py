@@ -43,12 +43,15 @@ class TranscribeResult:
     partials: list                   # streaming: one hypothesis per chunk
     audio_s: float                   # seconds of input audio
     n_frames: int                    # encoder frame embeddings consumed
-    ticks: int                       # batched decode ticks executed
+    ticks: int                       # fused decode ticks executed
     wall_s: float                    # serve wall time (incl. jit on first use)
     compute_ms_per_audio_s: float    # wall_s / audio_s * 1000
     platform: Optional[str]
     cache_dtype: str
     energy: Optional[dict]           # energy_report + joules_per_audio_s
+    decode_block: int = 1            # decode steps fused per tick
+    decode_steps: int = 0            # executed decode steps (ticks x block)
+    host_syncs: int = 0              # device->host fetches on the decode path
     engine: Any = dataclasses.field(default=None, repr=False)
 
     @property
@@ -70,6 +73,7 @@ def transcribe(samples, sr: int = 16_000, *,
                model=None, params=None,
                platform: Optional[str] = None,
                cache_dtype: Optional[str] = None,
+               decode_block: Optional[int] = None,
                chunk_frames: int = DEFAULT_CHUNK_FRAMES,
                prompt=DEFAULT_PROMPT, max_new: int = 16,
                eos_id: int = -1, stream: bool = False,
@@ -84,12 +88,17 @@ def transcribe(samples, sr: int = 16_000, *,
     serves through the chunk-at-a-time streaming path (one chunk per
     scheduler tick, partial hypotheses in ``result.partials``); the
     final tokens are identical to ``stream=False`` on the same audio.
+    ``decode_block`` fuses that many decode steps per engine tick (one
+    host sync per tick — tokens are identical for any block size).
     Pass ``engine=`` (e.g. ``result.engine`` from a previous call with
     the same shapes) to reuse compiled prefill/decode functions; the
     reused engine's platform/cache policy apply (conflicting explicit
-    ``platform``/``cache_dtype`` arguments raise), and the serve stats
-    are reset so ticks/energy in the result cover this call only.
+    ``platform``/``cache_dtype`` arguments raise; ``decode_block`` is a
+    mutable knob and simply retunes the reused engine), and the serve
+    stats are reset so ticks/energy in the result cover this call only.
     """
+    if decode_block is not None and int(decode_block) < 1:
+        raise ValueError(f"decode_block must be >= 1, got {decode_block}")
     fe = frontend or FrontendConfig()
     x = resample_linear(samples, sr, fe.sample_rate)
     audio_s = len(x) / fe.sample_rate
@@ -110,7 +119,8 @@ def transcribe(samples, sr: int = 16_000, *,
         engine = ServeEngine(
             model, params, n_slots=1,
             max_len=len(prompt) + max_new + 2, enc_len=n_frames,
-            cache_dtype=cache_dtype, platform=platform)
+            cache_dtype=cache_dtype, decode_block=decode_block or 1,
+            platform=platform)
     else:
         # the reused engine's policies are the truth — refuse silent
         # mismatches with explicitly requested ones
@@ -127,6 +137,8 @@ def transcribe(samples, sr: int = 16_000, *,
                     f"platform={platform!r} conflicts with the reused "
                     f"engine's {have!r}")
         cache_dtype = engine.cache_dtype
+        if decode_block is not None:
+            engine.decode_block = int(decode_block)
     engine.reset_serve_stats()
     t0 = time.monotonic()
     if stream:
@@ -158,4 +170,7 @@ def transcribe(samples, sr: int = 16_000, *,
         wall_s=wall,
         compute_ms_per_audio_s=wall / max(audio_s, 1e-9) * 1e3,
         platform=engine.platform.name if engine.platform else None,
-        cache_dtype=cache_dtype, energy=energy, engine=engine)
+        cache_dtype=cache_dtype, energy=energy,
+        decode_block=engine.decode_block,
+        decode_steps=engine._decode_steps, host_syncs=engine._host_syncs,
+        engine=engine)

@@ -7,7 +7,10 @@ Usage::
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --reduced \
         --requests 16 --slots 4 [--q8] [--cache-dtype q8_0] \
-        [--platform imax3-28nm/32k]
+        [--decode-block 16] [--platform imax3-28nm/32k]
+
+``--decode-block K`` fuses K decode steps per scheduler tick (one host
+sync per tick; tokens identical for any K).
 
 ``--platform`` serves against a registered hardware target
 (``repro.platforms``): the kernel-dispatch context is derived from the
@@ -35,6 +38,9 @@ def main(argv=None):
                          "bytes/step via the q8_decode_attention kernel")
     ap.add_argument("--enc-len", type=int, default=64,
                     help="encoder-state pool length (enc-dec models)")
+    ap.add_argument("--decode-block", type=int, default=1,
+                    help="decode steps fused per tick (device-resident "
+                         "loop; one host sync per tick)")
     ap.add_argument("--platform", default=None,
                     help="registered hardware target (repro.platforms; "
                          "e.g. imax3-28nm/32k, tpu-v5e); drives dispatch "
@@ -69,6 +75,7 @@ def main(argv=None):
     engine = ServeEngine(model, params, n_slots=args.slots,
                          max_len=args.max_len, enc_len=args.enc_len,
                          cache_dtype=args.cache_dtype,
+                         decode_block=args.decode_block,
                          platform=args.platform)
     sched = BatchScheduler(engine)
 
@@ -95,7 +102,9 @@ def main(argv=None):
     print(f"{m.completed}/{args.requests} requests in {m.ticks} ticks "
           f"({dt:.1f}s), {total_tokens} tokens, "
           f"occupancy {m.mean_occupancy:.2f}, mean TTFT {m.mean_ttft:.1f} "
-          f"ticks, {total_tokens/dt:.1f} tok/s")
+          f"ticks, {total_tokens/dt:.1f} tok/s, "
+          f"decode block {args.decode_block} "
+          f"({engine._host_syncs} decode host syncs)")
     if args.platform:
         er = engine.energy_report("q8_0" if args.q8 else "fp16")
         print(f"energy[{er['platform']}]: {er['joules_per_token']:.3e} "

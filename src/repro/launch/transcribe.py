@@ -5,7 +5,8 @@ Usage::
 
     PYTHONPATH=src python -m repro.launch.transcribe \
         --platform imax3-28nm --cache-dtype q8_0 [--stream] \
-        [--seconds 1.0] [--arch whisper-tiny-en] [--full]
+        [--decode-block 16] [--seconds 1.0] [--arch whisper-tiny-en] \
+        [--full]
 
 ``--stream`` serves through the chunk-at-a-time streaming path (one
 audio chunk per scheduler tick, partial hypotheses printed as they
@@ -31,6 +32,9 @@ def main(argv=None):
                     help="serve via the streaming chunked-encode path")
     ap.add_argument("--cache-dtype", choices=["bf16", "q8_0"],
                     default="bf16")
+    ap.add_argument("--decode-block", type=int, default=1,
+                    help="decode steps fused per tick (one host sync "
+                         "per tick; tokens identical for any value)")
     ap.add_argument("--platform", default=None,
                     help="registered hardware target (repro.platforms); "
                          "enables the energy report")
@@ -49,14 +53,16 @@ def main(argv=None):
           + (f", platform {args.platform}" if args.platform else ""))
     r = transcribe(wave, 16_000, arch=args.arch, reduced=not args.full,
                    platform=args.platform, cache_dtype=args.cache_dtype,
+                   decode_block=args.decode_block,
                    chunk_frames=args.chunk_frames, max_new=args.max_new,
                    stream=args.stream, seed=args.seed)
     if args.stream:
         for i, p in enumerate(r.partials):
             print(f"  partial[{i}]: {p}")
     print(f"tokens: {r.tokens}")
-    print(f"{r.n_frames} encoder frames, {r.ticks} decode ticks, "
-          f"{r.wall_s:.2f}s wall "
+    print(f"{r.n_frames} encoder frames, {r.ticks} decode ticks "
+          f"x block {r.decode_block} = {r.decode_steps} decode steps, "
+          f"{r.host_syncs} decode host syncs, {r.wall_s:.2f}s wall "
           f"({r.compute_ms_per_audio_s:.0f} ms compute per audio-second, "
           f"includes jit)")
     if r.energy:

@@ -53,10 +53,21 @@ def init_cross_attention(keys: KeyGen, cfg: ArchConfig) -> dict:
 
 def _project_qkv(p: dict, x: jax.Array, cfg: ArchConfig,
                  x_kv: Optional[jax.Array] = None):
-    x_kv = x if x_kv is None else x_kv
-    q = mm(x, p["wq"])
-    k = mm(x_kv, p["wk"])
-    v = mm(x_kv, p["wv"])
+    wq, wk, wv = p["wq"], p["wk"], p["wv"]
+    if x_kv is None and isinstance(wq, jax.Array):
+        # self-attention with plain (non-Q8) weights: one fused QKV dot
+        # over the head-concatenated weight instead of three — fewer
+        # kernel launches on the decode hot path (the per-element
+        # contraction is unchanged, so the split results are
+        # bit-identical to three separate projections).
+        h, hk = cfg.n_heads, cfg.n_kv_heads
+        y = mm(x, jnp.concatenate([wq, wk, wv], axis=1))
+        q, k, v = y[..., :h, :], y[..., h:h + hk, :], y[..., h + hk:, :]
+    else:
+        x_kv = x if x_kv is None else x_kv
+        q = mm(x, wq)
+        k = mm(x_kv, wk)
+        v = mm(x_kv, wv)
     if "bq" in p:
         q = q + p["bq"].astype(q.dtype)
         k = k + p["bk"].astype(k.dtype)
@@ -234,13 +245,7 @@ def attention(p: dict, x: jax.Array, cfg: ArchConfig, *,
                     return jax.lax.dynamic_update_slice(
                         c, new[None, :].astype(c.dtype),
                         (layer_idx, 0, pos_v, 0, 0))
-                # continuous batching: per-lane positions -> scatter;
-                # vmap over batch, per-lane target (L, S, Hkv, D)
-                return jax.vmap(
-                    lambda cb, kn, pp: jax.lax.dynamic_update_slice(
-                        cb, kn[None, None].astype(cb.dtype),
-                        (layer_idx, pp, 0, 0)),
-                    in_axes=(1, 0, 0), out_axes=1)(c, new[:, 0], pos_b)
+                return _per_lane_write(c, new, layer_idx, pos_b)
             if q8:
                 # quantize the one new token and write its int8+scale
                 # planes in place; the cache matvec then runs through
@@ -334,6 +339,31 @@ def attention(p: dict, x: jax.Array, cfg: ArchConfig, *,
                      preferred_element_type=jnp.float32)
     y = mm_out(out.astype(x.dtype), p["wo"])
     return constrain(y, "batch", None, "embed"), new_cache
+
+
+def _per_lane_write(c: jax.Array, new: jax.Array, layer_idx,
+                    pos_b: jax.Array) -> jax.Array:
+    """Write one new token per lane into the stacked cache:
+    ``c[layer_idx, b, pos_b[b]] = new[b, 0]`` for every lane ``b``.
+
+    Continuous batching puts each lane at its own position, so this is
+    inherently a scatter — but XLA-CPU lowers small scatters through a
+    slow generic path that dominates a fused decode step. On CPU the
+    one-hot ``where`` formulation (a vectorized full-plane select) is
+    ~4x cheaper and the plane is already streamed by the decode matvec
+    anyway; on TPU/GPU the per-lane DUS scatter writes a token-sized
+    slab in place and never touches the rest of the pool. Both are
+    elementwise-identical; the choice is made at trace time."""
+    if jax.default_backend() == "cpu":
+        n_layers, _, s = c.shape[:3]
+        sel = (jnp.arange(n_layers)[:, None, None] == layer_idx) \
+            & (jnp.arange(s)[None, None, :] == pos_b[None, :, None])
+        return jnp.where(sel[..., None, None],
+                         new[None, :, :].astype(c.dtype), c)
+    return jax.vmap(
+        lambda cb, kn, pp: jax.lax.dynamic_update_slice(
+            cb, kn[None, None].astype(cb.dtype), (layer_idx, pp, 0, 0)),
+        in_axes=(1, 0, 0), out_axes=1)(c, new[:, 0], pos_b)
 
 
 def _q8_cache_attention(q: jax.Array, planes: dict, layer_idx,

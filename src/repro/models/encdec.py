@@ -147,7 +147,15 @@ def decode_tokens(params: dict, cfg: ArchConfig, tokens: jax.Array,
     x = embed(params["embed"], tokens)
     if mode == "decode":
         posv = jnp.asarray(pos, jnp.int32)
-        dec_pos = as_array(params["dec_pos"], x.dtype)
+        # gather the one needed row per lane BEFORE any dtype cast: the
+        # fused decode scan runs this every step, and casting the whole
+        # (MAX_DEC_POS, d_model) table first would stream ~16 MB through
+        # a loop-invariant cast per token (the dominant cost of a decode
+        # step at reduced sizes). Gather is exact, so the order change
+        # is bit-identical.
+        dec_pos = params["dec_pos"]
+        if not isinstance(dec_pos, jax.Array):
+            dec_pos = as_array(dec_pos, jnp.float32)   # Q8Tensor params
         if posv.ndim == 1:    # per-lane positions (continuous batching)
             pe = jnp.take(dec_pos, posv, axis=0)[:, None]
         else:

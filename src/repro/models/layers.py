@@ -186,7 +186,11 @@ def embed(p: dict, tokens: jax.Array, compute_dtype=jnp.bfloat16) -> jax.Array:
     if isinstance(tbl, Q8Tensor):
         from repro.core.quantize import dequantize_q8_0
         tbl = dequantize_q8_0(tbl, axis=-2)
-    x = jnp.take(tbl.astype(compute_dtype), tokens, axis=0)
+    # gather rows first, cast the (B, S, d) result after: decode looks
+    # up S=1 tokens per lane per step, and casting the padded-vocab
+    # table before the take would re-stream it every fused-scan step
+    # (gather commutes with the cast bit-exactly).
+    x = jnp.take(tbl, tokens, axis=0).astype(compute_dtype)
     return constrain(x, "batch", "q_seq", "embed")
 
 

@@ -9,10 +9,33 @@ Continuous-batching design (vLLM-style, adapted to JAX's static shapes):
   batch together;
 * prefill runs per-request at a bucketed sequence length (powers of two:
   compile once per bucket) and the resulting cache is scattered into a
-  free lane. Bucket-padding junk beyond the prompt is never attendable:
-  decode writes position ``pos`` before attending ``[0, pos]``;
+  free lane **inside the prefill jit** (the pool buffer is donated, so
+  the scatter is an in-place lane write, and only the first-token argmax
+  — a single scalar — crosses back to host, never the
+  ``[1, bucket, vocab]`` logits);
 * Q8_0 weights (``core.quantize.quantize_tree``) serve through the same
   forward — the paper's quantized serving variant is a flag, not a fork.
+
+Device-resident fused decode (``decode_block``): all per-lane decode
+state — last token, position, encoder length, active/EOS masks, emitted
+counts, per-lane ``max_new`` budgets — lives in device arrays owned by
+the engine. One ``step()`` runs ``decode_block`` decode steps fused in a
+single jit (``lax.scan`` over the step body) with the cache pool and
+state buffers donated, and syncs to host **once per tick**: the
+``(K, n_slots)`` token block plus its emit mask. On-device
+EOS/max-new/max-len masking freezes finished lanes mid-scan (their
+token/position stop advancing and their emits are masked off), so a
+``K``-step fused tick is token-identical to ``K`` single steps. Host
+Python then replays the emit mask to run the bookkeeping no jit can:
+appending to ``RequestState.out``, freeing slots, pausing streams.
+
+Sync-point inventory (everything that crosses host<->device):
+  * ``admit()``/``_anchor()`` — one int32 scalar (the first token);
+  * ``step()``       — one fetch of the ``(K, n_slots)`` token block +
+    emit mask (``_host_syncs`` counts these; ``_decode_steps`` counts
+    the fused decode steps they bought);
+  * everything else (lane-state updates at admit/free, stream cross-K/V
+    extension) is host->device only and never blocks.
 
 Cache-dtype policy (``cache_dtype="bf16" | "q8_0"``): a q8_0 pool stores
 int8+f16-scale planes (``models.attention.init_kv_cache``); prefill
@@ -29,13 +52,16 @@ cross-cache (padded to ``enc_len``), and decode masks each lane's cross
 attention to its true encoder length.
 
 The batch scheduler (scheduler.py) decides admission; this module is the
-mechanism: slot allocation, cache scatter, masked decode.
+mechanism: slot allocation, cache scatter, masked fused decode.
 """
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import functools
 import itertools
+import warnings
 from typing import Any, Optional
 
 import jax
@@ -51,6 +77,20 @@ from repro.models import encdec as encdec_mod
 from repro.models.attention import quantize_kv_cache
 from repro.models.model import Model
 from repro.platforms import Platform, get_platform
+
+
+@contextlib.contextmanager
+def _quiet_donation():
+    """CPU has no donation support; jit warns once per compile that the
+    donated pool/state buffers fell back to copies. The donation is
+    still correct (and is what makes TPU/GPU decode update the pool in
+    place), so silence exactly that warning — scoped to the engine's
+    own jit calls, never process-wide."""
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        yield
+
 
 EOS_DEFAULT = 2
 
@@ -148,6 +188,7 @@ class ServeEngine:
     def __init__(self, model: Model, params: Any, *, n_slots: int = 8,
                  max_len: int = 256, enc_len: int = 64,
                  cache_dtype: str = "bf16",
+                 decode_block: int = 1,
                  platform: Optional[Any] = None,
                  dispatch_ctx: Optional[DispatchContext] = None):
         """``platform``: a registered hardware target (name or
@@ -163,10 +204,18 @@ class ServeEngine:
         engine per context.
 
         ``cache_dtype``: "bf16" (dense planes) or "q8_0" (int8+scale
-        planes, decode reads via the q8_decode_attention op)."""
+        planes, decode reads via the q8_decode_attention op).
+
+        ``decode_block``: decode steps fused per ``step()`` tick (one
+        host sync per tick regardless of the block size). A mutable
+        knob — ``engine.decode_block = 16`` retunes a live engine; one
+        compile per distinct block size."""
         if cache_dtype not in CACHE_DTYPES:
             raise ValueError(f"cache_dtype {cache_dtype!r}: expected one "
                              f"of {CACHE_DTYPES}")
+        if int(decode_block) < 1:
+            raise ValueError(f"decode_block must be >= 1, got "
+                             f"{decode_block}")
         cfg = model.cfg
         if cache_dtype == "q8_0":
             if flags.BASELINE:
@@ -194,17 +243,26 @@ class ServeEngine:
         self.enc_len = enc_len
         self.enc_dec = bool(cfg.enc_dec)
         self.cache_dtype = cache_dtype
+        self.decode_block = int(decode_block)
         cdt = "q8_0" if cache_dtype == "q8_0" else jnp.bfloat16
         self.cache = model.init_cache(n_slots, max_len, enc_len, dtype=cdt)
         self.free = list(range(n_slots))
         self.active: dict[int, RequestState] = {}   # slot -> state
-        self._tokens = np.zeros((n_slots, 1), np.int32)
-        # parked lanes decode at pos 0 (one attendable position) and the
-        # results are discarded; _free_slot zeroes pos/tokens so a dead
-        # lane never attends its stale context.
-        self._pos = np.zeros((n_slots,), np.int32)
-        self._enc_lens = np.zeros((n_slots,), np.int32)
-        self._decode = self._build_decode()
+        # --- device-resident decode state (never re-uploaded per tick):
+        # last emitted token, write position, valid encoder length, and
+        # the per-lane masks/budgets the fused scan needs to freeze
+        # finished lanes on device. Parked lanes decode at pos 0 (one
+        # attendable position) with active=False so their emits are
+        # masked; _free_slot zeroes pos/tokens so a dead lane never
+        # attends its stale context.
+        self._tokens = jnp.zeros((n_slots, 1), jnp.int32)
+        self._pos = jnp.zeros((n_slots,), jnp.int32)
+        self._enc_lens = jnp.zeros((n_slots,), jnp.int32)
+        self._lane_active = jnp.zeros((n_slots,), bool)
+        self._lane_eos = jnp.zeros((n_slots,), jnp.int32)
+        self._lane_max = jnp.zeros((n_slots,), jnp.int32)
+        self._lane_out = jnp.zeros((n_slots,), jnp.int32)
+        self._decode_fns: dict[int, Any] = {}   # block size -> fused jit
         self._prefill_fns: dict[tuple, Any] = {}
         # streaming audio: open streams by slot + jitted encoder helpers
         # (jit retraces per chunk length — fixed chunks + one tail)
@@ -215,40 +273,81 @@ class ServeEngine:
             self._cross_kv = jax.jit(
                 lambda params, states: encdec_mod.cross_attn_kv(
                     params, cfg_, states))
+            self._extend = jax.jit(
+                functools.partial(_extend_cross_cache,
+                                  q8=cache_dtype == "q8_0"),
+                donate_argnums=(0,))
         # serving-energy accounting (energy_report)
-        self._ticks = 0        # executed batched decode steps
-        self._generated = 0    # tokens emitted (prefill firsts + decode)
+        self._ticks = 0         # executed fused decode ticks (host syncs)
+        self._decode_steps = 0  # executed decode steps (= ticks x block)
+        self._generated = 0     # tokens emitted (prefill firsts + decode)
+        self._host_syncs = 0    # device->host fetches on the decode path
 
     # ------------------------------------------------------------------
-    def _build_decode(self):
-        model, enc_dec = self.model, self.enc_dec
+    def _build_decode(self, k: int):
+        """The fused decode tick: ``k`` decode steps scanned inside one
+        jit. Carry = (cache, tokens, pos, active, n_out) — all donated,
+        so the KV pool and lane state are updated in place instead of
+        copied every step. Finished lanes (EOS / max_new / max_len) are
+        frozen on device: their token/pos stop advancing and their
+        emits are masked, which makes the fused tick token-identical to
+        ``k`` sequential single steps."""
+        model, enc_dec, max_len = self.model, self.enc_dec, self.max_len
 
-        @jax.jit
-        def decode(params, cache, tokens, pos, enc_lens):
-            batch = {"tokens": tokens}
-            if enc_dec:
-                batch["enc_lens"] = enc_lens
-            logits, new_cache = model.forward(
-                params, batch, mode="decode", cache=cache, pos=pos)
-            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-            return nxt, new_cache
+        @functools.partial(jax.jit, donate_argnums=(1, 2, 3, 4, 5))
+        def decode_block(params, cache, tokens, pos, active, n_out,
+                         enc_lens, eos, max_new):
+            def one(carry, _):
+                cache, tokens, pos, active, n_out = carry
+                batch = {"tokens": tokens}
+                if enc_dec:
+                    batch["enc_lens"] = enc_lens
+                logits, cache = model.forward(
+                    params, batch, mode="decode", cache=cache, pos=pos)
+                nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+                emit = active
+                tokens = jnp.where(active[:, None], nxt[:, None], tokens)
+                pos = jnp.where(active, pos + 1, pos)
+                n_out = jnp.where(active, n_out + 1, n_out)
+                stop = (nxt == eos) | (n_out >= max_new) \
+                    | (pos >= max_len - 1)
+                active = active & ~stop
+                return (cache, tokens, pos, active, n_out), (nxt, emit)
 
-        return decode
+            carry = (cache, tokens, pos, active, n_out)
+            carry, (tok_blk, emit_blk) = jax.lax.scan(
+                one, carry, None, length=k)
+            cache, tokens, pos, active, n_out = carry
+            return tok_blk, emit_blk, cache, tokens, pos, active, n_out
+
+        return decode_block
+
+    def _decode_fn(self, k: int):
+        fn = self._decode_fns.get(k)
+        if fn is None:
+            fn = self._decode_fns[k] = self._build_decode(k)
+        return fn
 
     def _prefill_fn(self, bucket: int, enc_s: Optional[int] = None,
                     from_states: bool = False):
         """Jitted prefill, keyed (token bucket, encoder length, input
         kind). ``from_states=True`` takes precomputed encoder states
         (streaming chunked encode / ``Request.enc_states``) instead of
-        frame embeddings, skipping the in-prefill encoder pass."""
+        frame embeddings, skipping the in-prefill encoder pass.
+
+        The function takes the whole slot pool (donated: the scatter is
+        an in-place lane write) and returns ``(first, pool)`` where
+        ``first`` is the argmax of the last prompt position — computed
+        on device so admission fetches one scalar, not the full
+        ``[1, bucket, vocab]`` logits."""
         key = (bucket, enc_s, from_states)
         if key not in self._prefill_fns:
             model, max_len, enc_len = self.model, self.max_len, self.enc_len
             q8 = self.cache_dtype == "q8_0"
             enc_key = "enc_states" if from_states else "enc_frames"
 
-            @jax.jit
-            def prefill(params, tokens, enc=None):
+            @functools.partial(jax.jit, donate_argnums=(1,))
+            def prefill(params, pool, tokens, n, slot, enc=None):
                 cache = model.init_cache(1, max_len, enc_len)
                 batch = {"tokens": tokens}
                 if enc is not None:
@@ -257,10 +356,26 @@ class ServeEngine:
                                               mode="prefill", cache=cache)
                 if q8:
                     cache = quantize_kv_cache(cache)
-                return logits, cache
+                pool = _scatter_slot(pool, cache, slot)
+                first = jnp.argmax(
+                    jnp.take(logits[0], n - 1, axis=0)).astype(jnp.int32)
+                return first, pool
 
             self._prefill_fns[key] = prefill
         return self._prefill_fns[key]
+
+    def _set_lane(self, slot: int, *, token: int, pos: int, enc_len: int,
+                  eos: int, max_new: int, n_out: int,
+                  active: bool) -> None:
+        """Write one lane's device-resident decode state (admission /
+        anchor / free — never the per-tick hot path)."""
+        self._tokens = self._tokens.at[slot, 0].set(token)
+        self._pos = self._pos.at[slot].set(pos)
+        self._enc_lens = self._enc_lens.at[slot].set(enc_len)
+        self._lane_eos = self._lane_eos.at[slot].set(eos)
+        self._lane_max = self._lane_max.at[slot].set(max_new)
+        self._lane_out = self._lane_out.at[slot].set(n_out)
+        self._lane_active = self._lane_active.at[slot].set(active)
 
     # ------------------------------------------------------------------
     def validate(self, req: Request) -> Optional[str]:
@@ -330,15 +445,16 @@ class ServeEngine:
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :n] = req.tokens
         enc_s = None
-        with use_context(self.dispatch_ctx):
+        with use_context(self.dispatch_ctx), _quiet_donation():
             if self.enc_dec and req.enc_states is not None:
                 # precomputed encoder states (chunked/streaming encode):
                 # prefill skips the encoder pass entirely.
                 states = jnp.asarray(req.enc_states)[None]
                 enc_s = int(states.shape[1])
-                logits, cache1 = self._prefill_fn(
+                first, self.cache = self._prefill_fn(
                     bucket, enc_s, from_states=True)(
-                        self.params, jnp.asarray(toks), states)
+                        self.params, self.cache, jnp.asarray(toks), n,
+                        slot, states)
             elif self.enc_dec:
                 # encode at the exact frame count: the encoder attends
                 # bidirectionally, so bucket padding would corrupt every
@@ -346,19 +462,20 @@ class ServeEngine:
                 frames = jnp.asarray(np.asarray(req.enc_frames),
                                      jnp.float32)[None]
                 enc_s = int(frames.shape[1])
-                logits, cache1 = self._prefill_fn(bucket, enc_s)(
-                    self.params, jnp.asarray(toks), frames)
+                first, self.cache = self._prefill_fn(bucket, enc_s)(
+                    self.params, self.cache, jnp.asarray(toks), n, slot,
+                    frames)
             else:
-                logits, cache1 = self._prefill_fn(bucket)(
-                    self.params, jnp.asarray(toks))
-        self.cache = _scatter_slot(self.cache, cache1, slot)
-        first = int(np.argmax(np.asarray(logits)[0, n - 1]))
+                first, self.cache = self._prefill_fn(bucket)(
+                    self.params, self.cache, jnp.asarray(toks), n, slot)
+        first = int(first)   # scalar fetch — the only admit-time sync
         self._generated += 1
         st = RequestState(req=req, slot=slot, pos=n, out=[first])
-        self._tokens[slot, 0] = first
-        self._pos[slot] = n
-        self._enc_lens[slot] = enc_s or 0
-        if first == req.eos_id or len(st.out) >= req.max_new:
+        done = first == req.eos_id or len(st.out) >= req.max_new
+        self._set_lane(slot, token=first, pos=n, enc_len=enc_s or 0,
+                       eos=req.eos_id, max_new=req.max_new, n_out=1,
+                       active=not done)
+        if done:
             st.done = True
             self._free_slot(slot)
         else:
@@ -406,15 +523,17 @@ class ServeEngine:
         if not first_feed:
             # incremental extension: project the new states through each
             # decoder layer's cross K/V and write them after the
-            # already-cached positions (quantizing for a q8_0 pool).
-            with use_context(self.dispatch_ctx):
+            # already-cached positions (quantizing for a q8_0 pool; the
+            # pool buffer is donated — an in-place plane write).
+            with use_context(self.dispatch_ctx), _quiet_donation():
                 k, v = self._cross_kv(self.params, states)
-            self._extend_cross(slot, k, v, ss.n_frames)
+                self.cache = self._extend(self.cache, k, v, slot,
+                                          ss.n_frames)
         ss.n_frames += s_new
         if first_feed:
             self._anchor(st, ss, final=False)
         else:
-            self._enc_lens[slot] = ss.n_frames
+            self._enc_lens = self._enc_lens.at[slot].set(ss.n_frames)
         st.partials.append(list(st.out))
         return st
 
@@ -445,20 +564,20 @@ class ServeEngine:
         bucket = min(_bucket(n), self.max_len)
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :n] = req.tokens
-        with use_context(self.dispatch_ctx):
-            logits, cache1 = self._prefill_fn(
+        with use_context(self.dispatch_ctx), _quiet_donation():
+            first, self.cache = self._prefill_fn(
                 bucket, int(states.shape[1]), from_states=True)(
-                    self.params, jnp.asarray(toks), states)
-        self.cache = _scatter_slot(self.cache, cache1, slot)
-        first = int(np.argmax(np.asarray(logits)[0, n - 1]))
+                    self.params, self.cache, jnp.asarray(toks), n, slot,
+                    states)
+        first = int(first)   # scalar fetch, as in admit()
         self._generated += 1
         ss.anchored = True
         st.out = [first]
         st.pos = n
-        self._tokens[slot, 0] = first
-        self._pos[slot] = n
-        self._enc_lens[slot] = ss.n_frames
         finished = first == req.eos_id or req.max_new <= 1
+        self._set_lane(slot, token=first, pos=n, enc_len=ss.n_frames,
+                       eos=req.eos_id, max_new=req.max_new, n_out=1,
+                       active=not finished)
         if final and finished:
             st.done = True
             self._free_slot(slot)
@@ -466,27 +585,6 @@ class ServeEngine:
             self.active[slot] = st
         # mid-stream + finished: lane pauses (stays allocated, resumes
         # at the next anchor)
-
-    def _extend_cross(self, slot: int, k, v, offset: int) -> None:
-        """Write new cross-K/V positions ((L, 1, s_new, Hkv, ·)) into
-        lane ``slot`` of the pool's cross cache at ``offset``."""
-        cross = self.cache["layers"]["cross"]
-
-        def dus(plane, new):
-            return jax.lax.dynamic_update_slice(
-                plane, new.astype(plane.dtype), (0, slot, offset, 0, 0))
-
-        if self.cache_dtype == "q8_0":
-            kt = quantize_q8_0(k, axis=-1)
-            vt = quantize_q8_0(v, axis=-1)
-            new_cross = {"kq": dus(cross["kq"], kt.q),
-                         "ks": dus(cross["ks"], kt.scale),
-                         "vq": dus(cross["vq"], vt.q),
-                         "vs": dus(cross["vs"], vt.scale)}
-        else:
-            new_cross = {"k": dus(cross["k"], k), "v": dus(cross["v"], v)}
-        self.cache = {"layers": {**self.cache["layers"],
-                                 "cross": new_cross}}
 
     def encode_chunks(self, chunks) -> jnp.ndarray:
         """Encode a list of frame-embedding chunks through the engine's
@@ -507,47 +605,64 @@ class ServeEngine:
         return len(self._streams)
 
     # ------------------------------------------------------------------
-    def step(self) -> list[RequestState]:
-        """One batched decode tick over the whole pool."""
+    def step(self, k: Optional[int] = None) -> list[RequestState]:
+        """One fused decode tick over the whole pool: ``k`` (default
+        ``decode_block``) decode steps in a single donated jit, then
+        exactly one host sync — the ``(k, n_slots)`` token block and its
+        emit mask — to run the Python bookkeeping (append to
+        ``RequestState.out``, free finished slots, pause streaming
+        lanes). Token-identical to ``k`` calls of ``step(1)``."""
         if not self.active:
             return []
-        with use_context(self.dispatch_ctx):
-            nxt, self.cache = self._decode(
-                self.params, self.cache, jnp.asarray(self._tokens),
-                jnp.asarray(self._pos), jnp.asarray(self._enc_lens))
-        nxt = np.asarray(nxt)
+        k = self.decode_block if k is None else int(k)
+        if k < 1:   # a 0-length scan would emit nothing and never drain
+            raise ValueError(f"decode block must be >= 1, got {k}")
+        fn = self._decode_fn(k)
+        with use_context(self.dispatch_ctx), _quiet_donation():
+            (tok_blk, emit_blk, self.cache, self._tokens, self._pos,
+             self._lane_active, self._lane_out) = fn(
+                self.params, self.cache, self._tokens, self._pos,
+                self._lane_active, self._lane_out, self._enc_lens,
+                self._lane_eos, self._lane_max)
+        # THE host sync of this tick: one fetch for the whole block
+        tok_blk, emit_blk = jax.device_get((tok_blk, emit_blk))
+        self._host_syncs += 1
         self._ticks += 1
-        self._generated += len(self.active)
+        self._decode_steps += k
+        self._generated += int(emit_blk.sum())
         finished = []
         for slot, st in list(self.active.items()):
-            tok = int(nxt[slot])
-            st.out.append(tok)
-            st.pos += 1
-            self._tokens[slot, 0] = tok
-            self._pos[slot] = st.pos
-            if tok == st.req.eos_id or len(st.out) >= st.req.max_new \
-                    or st.pos >= self.max_len - 1:
-                if slot in self._streams:
-                    # mid-stream hypothesis complete: pause the lane
-                    # (keep the slot and its growing encoder cache);
-                    # stream_finalize re-anchors and decodes the final
-                    # transcript.
-                    self.active.pop(slot)
-                    continue
-                st.done = True
-                self.active.pop(slot)
-                self._free_slot(slot)
-                finished.append(st)
+            for j in range(k):
+                if not emit_blk[j, slot]:
+                    break    # lane froze at step j; no later emits
+                tok = int(tok_blk[j, slot])
+                st.out.append(tok)
+                st.pos += 1
+                # replay of the on-device stop condition, token for token
+                if tok == st.req.eos_id or len(st.out) >= st.req.max_new \
+                        or st.pos >= self.max_len - 1:
+                    if slot in self._streams:
+                        # mid-stream hypothesis complete: pause the lane
+                        # (keep the slot and its growing encoder cache);
+                        # stream_finalize re-anchors and decodes the
+                        # final transcript.
+                        self.active.pop(slot)
+                    else:
+                        st.done = True
+                        self.active.pop(slot)
+                        self._free_slot(slot)
+                        finished.append(st)
+                    break
         return finished
 
     def _free_slot(self, slot: int) -> None:
         """Return a lane to the pool and zero its decode inputs — a
         parked lane then attends exactly one (stale but harmless)
-        position instead of its full dead context."""
+        position instead of its full dead context, and its emit mask
+        stays off."""
         self.free.append(slot)
-        self._tokens[slot, 0] = 0
-        self._pos[slot] = 0
-        self._enc_lens[slot] = 0
+        self._set_lane(slot, token=0, pos=0, enc_len=0, eos=0, max_new=0,
+                       n_out=0, active=False)
 
     @property
     def n_active(self) -> int:
@@ -557,11 +672,12 @@ class ServeEngine:
     def cache_report(self) -> dict:
         """Cache footprint / decode-traffic accounting.
 
-        ``bytes_per_step`` is the full-pool KV stream of one decode tick
+        ``bytes_per_step`` is the full-pool KV stream of one decode step
         (this dense implementation reads every cache position and masks
-        after the dot — exactly the paper's LOAD term). The analytic
-        per-token figure uses ``core.quantize.stored_bytes`` under the
-        paper's dense packing (C3)."""
+        after the dot — exactly the paper's LOAD term; a fused tick
+        streams it ``decode_block`` times). The analytic per-token
+        figure uses ``core.quantize.stored_bytes`` under the paper's
+        dense packing (C3)."""
         kv_bytes, state_bytes = _cache_bytes(self.cache)
         cfg = self.model.cfg
         dt = "q8_0" if self.cache_dtype == "q8_0" else "bf16"
@@ -588,12 +704,15 @@ class ServeEngine:
 
     # ------------------------------------------------------------------
     def reset_serve_stats(self) -> None:
-        """Zero the serve-energy accounting (executed ticks / emitted
-        tokens) so the next ``energy_report()`` prices only work from
-        this point on. Per-call reports on a reused engine
+        """Zero the serve-energy accounting (executed ticks / decode
+        steps / emitted tokens / host syncs) so the next
+        ``energy_report()`` prices only work from this point on.
+        Per-call reports on a reused engine
         (``repro.transcribe(engine=...)``) reset before serving."""
         self._ticks = 0
+        self._decode_steps = 0
         self._generated = 0
+        self._host_syncs = 0
 
     def _param_stats(self) -> tuple[int, int]:
         """(element count, stored bytes) of the served parameters."""
@@ -606,13 +725,16 @@ class ServeEngine:
         engine's platform — the paper's headline metric (Eq. 1), live on
         the serving path.
 
-        The decode phase dominates serving energy, and every decode tick
-        streams the weights plus the whole KV pool through the cache
-        matvec; the model here is the platform roofline over exactly
-        those terms:
+        The decode phase dominates serving energy, and every decode
+        step streams the weights plus the whole KV pool through the
+        cache matvec; the model here is the platform roofline over
+        exactly those terms:
 
-        * memory: ``ticks x (weight_bytes + cache bytes/step)`` at the
-          platform's DRAM/HBM bandwidth,
+        * memory: ``decode_steps x (weight_bytes + cache bytes/step)``
+          at the platform's DRAM/HBM bandwidth — a fused tick executes
+          ``decode_block`` steps, so the stream is priced per *step*,
+          never per host tick (joules/token stays correct when
+          ``_ticks`` advances once per ``decode_block`` tokens),
         * compute: ``2 x N_params`` FLOPs per generated token at the
           platform's ``kernel``-dtype rate,
         * modeled latency = max(memory, compute) (the binding resource),
@@ -635,9 +757,10 @@ class ServeEngine:
         cache = self.cache_report()
         n_elems, weight_bytes = self._param_stats()
         ticks = self._ticks
+        steps = self._decode_steps
         tokens = self._generated
-        cache_bytes = ticks * cache["bytes_per_step"]
-        stream_bytes = ticks * weight_bytes + cache_bytes
+        cache_bytes = steps * cache["bytes_per_step"]
+        stream_bytes = steps * weight_bytes + cache_bytes
         flops = 2.0 * n_elems * tokens
         bw = max(p.memory.main_bw, 1e-9)
         rate = p.peak_flops("q8_0" if kernel == "q8_0" else "f16")
@@ -664,6 +787,9 @@ class ServeEngine:
             "kernel": kernel,
             "cache_dtype": self.cache_dtype,
             "ticks": ticks,
+            "decode_steps": steps,
+            "decode_block": self.decode_block,
+            "host_syncs": self._host_syncs,
             "tokens": tokens,
             "weight_bytes": weight_bytes,
             "cache_bytes_per_step": cache["bytes_per_step"],
@@ -697,14 +823,40 @@ def _cache_bytes(tree) -> tuple[int, int]:
     return 0, sum(int(l.nbytes) for l in jax.tree.leaves(tree))
 
 
-def _scatter_slot(pool: Any, one: Any, slot: int) -> Any:
+def _scatter_slot(pool: Any, one: Any, slot) -> Any:
     """Write a batch-1 cache pytree into lane ``slot`` of the pool.
 
     Every cache leaf is (stacked_layers, B, ...) — transformer segments,
     encdec layers, and tails all stack with jnp.broadcast_to /scan — so
-    the slot axis is axis 1 throughout."""
+    the slot axis is axis 1 throughout. ``slot`` may be a traced scalar
+    (the prefill jit passes it dynamically, so one compile covers every
+    lane)."""
     def scat(p, o):
         assert p.shape[0] == o.shape[0] and o.shape[1] == 1, (p.shape, o.shape)
         return jax.lax.dynamic_update_slice_in_dim(
             p, o.astype(p.dtype), slot, axis=1)
     return jax.tree.map(scat, pool, one)
+
+
+def _extend_cross_cache(cache: dict, k, v, slot, offset, *,
+                        q8: bool) -> dict:
+    """Write new cross-K/V positions ((L, 1, s_new, Hkv, ·)) into lane
+    ``slot`` of the pool's cross cache at ``offset`` (streaming audio:
+    the chunk's planes land after the already-cached positions). Jitted
+    by the engine with the pool donated — an in-place plane write."""
+    cross = cache["layers"]["cross"]
+
+    def dus(plane, new):
+        return jax.lax.dynamic_update_slice(
+            plane, new.astype(plane.dtype), (0, slot, offset, 0, 0))
+
+    if q8:
+        kt = quantize_q8_0(k, axis=-1)
+        vt = quantize_q8_0(v, axis=-1)
+        new_cross = {"kq": dus(cross["kq"], kt.q),
+                     "ks": dus(cross["ks"], kt.scale),
+                     "vq": dus(cross["vq"], vt.q),
+                     "vs": dus(cross["vs"], vt.scale)}
+    else:
+        new_cross = {"k": dus(cross["k"], k), "v": dus(cross["v"], v)}
+    return {"layers": {**cache["layers"], "cross": new_cross}}

@@ -8,17 +8,24 @@ optional prefill/decode interleave ratio. One ``tick()`` =
   1. admit waiting requests while slots are free (each admit = one
      bucketed prefill; streaming requests open a stream and feed their
      first chunk);
-  2. one batched decode step over all active slots;
+  2. one fused decode tick over all active slots — the engine runs
+     ``engine.decode_block`` decode steps on device and returns the
+     whole per-tick token block after a single host sync, so every
+     active lane advances up to ``decode_block`` tokens per tick;
   3. collect finished requests.
 
 Streaming audio (``StreamingAudioRequest``): one chunk is delivered per
 tick — the serving-time model of real-time arrival — so a lane decodes
 *while* its audio is still arriving (partial hypotheses land in
-``RequestState.partials``) and is re-anchored at end of audio for the
+``RequestState.partials``, one per fed chunk, each up to ``decode_block``
+tokens ahead of the last) and is re-anchored at end of audio for the
 final transcript.
 
-Metrics track queue latency, time-to-first-token (in ticks), and slot
-occupancy — the quantities a production scheduler optimizes.
+Metrics track queue latency, time-to-first-token (in ticks), emitted
+tokens, and slot occupancy — the quantities a production scheduler
+optimizes. With ``decode_block > 1`` a tick is a coarser unit: TTFT and
+queue-wait resolve to one block, and ``tokens`` is the per-tick token
+blocks summed.
 """
 
 from __future__ import annotations
@@ -37,6 +44,10 @@ class SchedMetrics:
     admitted: int = 0
     completed: int = 0
     rejected: int = 0           # failed validation; completed as errors
+    tokens: int = 0             # tokens the engine emitted under this
+                                # scheduler (prefill firsts + decode
+                                # blocks) — tokens/tick > n_active when
+                                # decode_block > 1
     occupancy_sum: float = 0.0
     queue_wait_sum: int = 0     # ticks spent waiting, summed over requests
     ttft_sum: int = 0           # ticks from submit to first token
@@ -48,6 +59,10 @@ class SchedMetrics:
     @property
     def mean_ttft(self) -> float:
         return self.ttft_sum / max(self.admitted, 1)
+
+    @property
+    def tokens_per_tick(self) -> float:
+        return self.tokens / max(self.ticks, 1)
 
 
 class BatchScheduler:
@@ -78,6 +93,7 @@ class BatchScheduler:
 
     def tick(self) -> list[RequestState]:
         m = self.metrics
+        gen0 = self.engine._generated
         # 0. deliver one audio chunk per open stream (real-time model);
         # streams whose audio has fully arrived are finalized.
         for slot in list(self._streams):
@@ -127,12 +143,14 @@ class BatchScheduler:
             if st.done and st.req.uid not in self.results:
                 m.completed += 1
                 self.results[req.uid] = st
-        # 2. decode tick
+        # 2. fused decode tick (decode_block tokens per active lane,
+        # one host sync)
         finished = self.engine.step()
         for st in finished:
             m.completed += 1
             self.results[st.req.uid] = st
         m.ticks += 1
+        m.tokens += self.engine._generated - gen0
         m.occupancy_sum += self.engine.n_active / self.engine.n_slots
         return finished
 

@@ -141,8 +141,9 @@ def test_chunked_encode_is_block_diagonal():
 
 def test_cross_attn_kv_matches_prefill_planes():
     """Incremental cross-K/V extension writes the same planes the
-    prompt prefill writes: feed two chunks (the second lands via
-    ``_extend_cross``), then finalize (which re-writes the whole slot
+    prompt prefill writes: feed two chunks (the second lands via the
+    donated ``_extend_cross_cache`` jit), then finalize (which
+    re-writes the whole slot
     from one prefill over the same chunked states) — the extended
     region must already hold the prefill's values."""
     cfg, model, params = _whisper()
