@@ -28,6 +28,7 @@ MODULES = [
     "benchmarks.decode_traffic",
     "benchmarks.decode_throughput",
     "benchmarks.e2e_asr",
+    "benchmarks.serve_load",
 ]
 
 BENCH_JSON = os.environ.get("BENCH_PLATFORMS_JSON", "BENCH_platforms.json")
@@ -41,6 +42,8 @@ def platforms_record(module_checks: dict) -> dict:
     from repro.core.energy import calibrate_imax, platform_pdp_table
     from repro.platforms import get_platform, list_platforms
 
+    from benchmarks.serve_load import serve_load_record
+
     w16, w8 = workloads()
     calib = calibrate_imax(w16, w8)
     rows = platform_pdp_table(w16, w8, calib)
@@ -48,6 +51,7 @@ def platforms_record(module_checks: dict) -> dict:
     dispatch_checks = module_checks.get("benchmarks.dispatch_check", {})
     asr_checks = module_checks.get("benchmarks.e2e_asr", {})
     tp_checks = module_checks.get("benchmarks.decode_throughput", {})
+    sl_checks = module_checks.get("benchmarks.serve_load", {})
     return {
         "schema": 1,
         "platforms": list_platforms(),
@@ -91,6 +95,9 @@ def platforms_record(module_checks: dict) -> dict:
             "one_host_sync_per_tick": bool(tp_checks.get(
                 "exactly one host sync per tick", False)),
         },
+        # async gateway under Poisson load: token parity vs the sync
+        # scheduler, goodput accounting, J/audio-s (benchmarks/serve_load)
+        "serve_load": serve_load_record(sl_checks),
         "dispatch_agreement": bool(dispatch_checks.get(
             "plan and dispatch agree on every kernel", False)),
         "calibration_residuals": calib.residuals,

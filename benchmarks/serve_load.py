@@ -1,0 +1,198 @@
+"""Gateway load benchmark: SLO-aware serving under open-loop Poisson
+arrivals (``repro.gateway``).
+
+One micro-whisper engine (1+1 layers, d=64 — the loop-overhead regime;
+jits compile once and every load point reuses them) serves three load
+points:
+
+* a **parity** point (32 mixed one-shot/streaming requests, shedding
+  off) replayed through the synchronous ``BatchScheduler`` — the
+  gateway must be token-identical per request (blocking check);
+* a small **arrival-rate sweep** (open-loop Poisson, seeded) whose
+  wall-clock serving metrics — p50/p99 TTFT and e2e seconds, goodput,
+  shed counts — are the info record CI tracks in BENCH_platforms.json.
+
+Blocking checks (CI fails loudly):
+* gateway tokens == sync scheduler tokens for every parity request,
+* seeded Poisson workload synthesis is deterministic,
+* goodput accounting is consistent at every load point
+  (completed + shed == offered; in-deadline <= completed;
+  goodput <= throughput),
+* the engine performed exactly one host sync per fused tick across the
+  entire benchmark — the gateway adds zero device round trips.
+
+Wall-clock latency/goodput figures are host-dependent: emitted as
+[info], never asserted.
+
+Run directly (``python -m benchmarks.serve_load``) it also merges a
+``serve_load`` section into ``BENCH_platforms.json`` (path overridable
+via ``SERVE_LOAD_JSON``) so the standalone CI job uploads the same
+artifact shape as the full benchmark driver.
+"""
+
+import dataclasses
+import json
+import os
+import sys
+
+import jax
+import numpy as np
+
+import benchmarks.common  # noqa: F401  (puts src/ on the path)
+from repro.configs import get_config, reduced
+from repro.models.model import build
+from repro.serving.engine import ServeEngine
+
+N_SLOTS = 4
+MAX_LEN = 64
+ENC_LEN = 16
+DECODE_BLOCK = 4
+PLATFORM = "imax3-28nm/32k"
+PARITY_N = 32
+SWEEP_RATES = (50.0, 200.0)
+SWEEP_N = 16
+
+
+def _micro_whisper():
+    cfg = dataclasses.replace(
+        reduced(get_config("whisper-tiny-en")),
+        d_model=64, n_heads=2, n_kv_heads=2, d_ff=128, vocab=256,
+        enc_layers=1, n_layers=1)
+    model = build(cfg)
+    return cfg, model, model.init_values(jax.random.key(0))
+
+
+def _accounting_ok(summary: dict, offered: int) -> bool:
+    return (summary["completed"] + summary["shed_total"] == offered
+            and summary["completed_in_deadline"] <= summary["completed"]
+            and summary["goodput_rps"] <= summary["throughput_rps"] + 1e-9
+            and summary["completed_in_deadline"] ==
+            summary["completed"] - summary["deadline_misses"])
+
+
+def run():
+    from repro.gateway import (LoadSpec, run_load, sync_baseline,
+                               synth_load)
+
+    cfg, model, params = _micro_whisper()
+    engine = ServeEngine(model, params, n_slots=N_SLOTS, max_len=MAX_LEN,
+                         enc_len=ENC_LEN, decode_block=DECODE_BLOCK,
+                         platform=PLATFORM)
+    checks: dict = {}
+    rows = []
+
+    # --- parity point: gateway vs synchronous scheduler, shedding off
+    spec = LoadSpec(rate_rps=100.0, n_requests=PARITY_N, seed=0,
+                    stream_fraction=0.3)
+    descs = synth_load(cfg, spec)
+    baseline = sync_baseline(engine, descs)        # warms every jit too
+    results, summary, _ = run_load(engine, spec, shed_on_submit=False)
+    mismatches = [d.idx for d, r in zip(descs, results)
+                  if not r.ok or list(r.tokens) != baseline[d.idx]]
+    checks[f"gateway token-identical to sync scheduler "
+           f"({PARITY_N} mixed requests)"] = not mismatches
+    checks["parity point sheds nothing"] = \
+        summary["shed_total"] == 0 and summary["completed"] == PARITY_N
+    rows.append(("parity", spec.rate_rps, summary))
+
+    # --- determinism of the seeded workload
+    d2 = synth_load(cfg, spec)
+    checks["seeded Poisson workload is deterministic"] = all(
+        a.arrival_s == b.arrival_s and a.tokens == b.tokens
+        and a.slo is b.slo and len(a.chunks) == len(b.chunks)
+        and all(np.array_equal(x, y)
+                for x, y in zip(a.chunks, b.chunks))
+        for a, b in zip(descs, d2))
+
+    # --- arrival-rate sweep (open loop; sheds allowed)
+    acct_ok = _accounting_ok(summary, PARITY_N)
+    total_audio_s = summary["audio_s"]
+    for rate in SWEEP_RATES:
+        spec = LoadSpec(rate_rps=rate, n_requests=SWEEP_N, seed=1,
+                        stream_fraction=0.25)
+        _, s, _ = run_load(engine, spec)
+        acct_ok = acct_ok and _accounting_ok(s, SWEEP_N)
+        total_audio_s += s["audio_s"]
+        rows.append((f"{rate:g} rps", rate, s))
+    checks["goodput accounting consistent at every load point"] = acct_ok
+    checks["exactly one host sync per fused tick under load"] = \
+        engine._host_syncs == engine._ticks
+
+    # --- info metrics (host-dependent; tracked, not asserted)
+    for name, _, s in rows:
+        checks[f"[{name}] goodput_rps"] = round(s["goodput_rps"], 3)
+        checks[f"[{name}] ttft_s p50/p99"] = (
+            round(s["ttft_s"]["p50"], 4), round(s["ttft_s"]["p99"], 4))
+        checks[f"[{name}] shed"] = s["shed"]
+    er = engine.energy_report("fp16")
+    checks["joules_per_audio_s"] = {
+        PLATFORM: er["pdp_j"] / total_audio_s if total_audio_s else 0.0}
+    checks["audio_s_served"] = round(total_audio_s, 2)
+
+    hdr = (f"{'load point':>12} {'offered':>8} {'done':>5} {'in-SLO':>7} "
+           f"{'shed':>5} {'goodput':>8} {'ttft p50':>9} {'ttft p99':>9} "
+           f"{'e2e p99':>8}")
+    lines = [hdr, "-" * len(hdr)]
+    for name, _, s in rows:
+        lines.append(
+            f"{name:>12} {s['requests']:>8} {s['completed']:>5} "
+            f"{s['completed_in_deadline']:>7} {s['shed_total']:>5} "
+            f"{s['goodput_rps']:>8.2f} {s['ttft_s']['p50']:>9.4f} "
+            f"{s['ttft_s']['p99']:>9.4f} {s['e2e_s']['p99']:>8.4f}")
+    table = (f"gateway serve load: micro whisper (1+1 layers, d=64), "
+             f"{N_SLOTS} slots, decode_block {DECODE_BLOCK}, "
+             f"platform {PLATFORM}\n" + "\n".join(lines))
+    return table, checks
+
+
+def serve_load_record(checks: dict) -> dict:
+    """The BENCH_platforms.json section for this module's checks."""
+    info = {k: v for k, v in checks.items() if not isinstance(v, bool)}
+    return {
+        "gateway_token_parity": bool(checks.get(
+            f"gateway token-identical to sync scheduler "
+            f"({PARITY_N} mixed requests)", False)),
+        "poisson_deterministic": bool(checks.get(
+            "seeded Poisson workload is deterministic", False)),
+        "goodput_accounting": bool(checks.get(
+            "goodput accounting consistent at every load point", False)),
+        "one_host_sync_per_tick": bool(checks.get(
+            "exactly one host sync per fused tick under load", False)),
+        "joules_per_audio_s": checks.get("joules_per_audio_s", {}),
+        "load_points": info,
+    }
+
+
+def main():
+    table, checks = run()
+    print(table)
+    print("\nchecks:")
+    failures = []
+    for k, v in checks.items():
+        if isinstance(v, bool):
+            print(f"  [{'PASS' if v else 'FAIL'}] {k}")
+            if not v:
+                failures.append(k)
+        else:
+            print(f"  [info] {k}: {v}")
+    # merge the serve_load section into the shared benchmark artifact
+    path = os.environ.get("SERVE_LOAD_JSON", "BENCH_platforms.json")
+    try:
+        with open(path) as fh:
+            rec = json.load(fh)
+    except (FileNotFoundError, json.JSONDecodeError):
+        rec = {"schema": 1}
+    rec["serve_load"] = serve_load_record(checks)
+    with open(path, "w") as fh:
+        json.dump(rec, fh, indent=1, sort_keys=True)
+    print(f"\nwrote serve_load section to {path}")
+    if failures:
+        print(f"{len(failures)} SERVE-LOAD CHECK FAILURES:")
+        for f in failures:
+            print("  ", f)
+        sys.exit(1)
+    print("all serve-load checks passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Async serving gateway: SLO-aware continuous batching over
+``ServeEngine`` with earliest-deadline-first admission, load shedding,
+wall-clock observability, and a seeded Poisson load generator."""
+
+from repro.gateway.gateway import Gateway, GatewayResult, StreamSession
+from repro.gateway.loadgen import (AUDIO_S_PER_FRAME, LoadSpec,
+                                   RequestDesc, offered_load,
+                                   poisson_arrivals, run_load,
+                                   sync_baseline, synth_load)
+from repro.gateway.metrics import (GatewayMetrics, RequestRecord,
+                                   percentile)
+from repro.gateway.slo import (BATCH, DEFAULT_CLASSES, INTERACTIVE,
+                               STANDARD, AdmissionQueue, SLOClass)

@@ -1,3 +1,6 @@
-from repro.serving.engine import (AudioRequest, Request, RequestState,
-                                  ServeEngine)
-from repro.serving.scheduler import BatchScheduler
+from repro.serving.engine import (AudioRequest, PendingTick, RejectCode,
+                                  Rejection, RejectionError, Request,
+                                  RequestState, ServeEngine,
+                                  StreamingAudioRequest)
+from repro.serving.scheduler import (BatchScheduler, SchedMetrics,
+                                     SchedulerStuckError)

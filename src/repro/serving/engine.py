@@ -59,6 +59,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import enum
 import functools
 import itertools
 import warnings
@@ -97,6 +98,52 @@ EOS_DEFAULT = 2
 CACHE_DTYPES = ("bf16", "q8_0")
 
 _ENGINE_SEQ = itertools.count()   # unique dispatch-trace tags per engine
+
+
+class RejectCode(enum.Enum):
+    """Machine-readable rejection/shed reasons. The first group is
+    produced by ``ServeEngine.validate`` (the request can never be
+    served by this engine); the second by the gateway's admission and
+    lifecycle paths (``repro.gateway`` — load shedding, deadlines,
+    client-side aborts). One enum so every failed request, wherever it
+    failed, classifies the same way in metrics and tests."""
+
+    # --- engine validation
+    TOO_LONG = "too_long"                        # prompt+max_new vs max_len
+    MISSING_ENC_INPUT = "missing_enc_input"      # enc-dec model, no frames
+    AMBIGUOUS_ENC_INPUT = "ambiguous_enc_input"  # frames AND states given
+    BAD_ENC_SHAPE = "bad_enc_shape"              # misshapen frames/chunk
+    ENC_OVERFLOW = "enc_overflow"                # frames exceed pool enc_len
+    ENC_ON_DECODER_ONLY = "enc_on_decoder_only"  # frames for a text model
+    # --- gateway admission / lifecycle (repro.gateway)
+    QUEUE_FULL = "queue_full"                    # bounded-queue backpressure
+    DEADLINE_UNMEETABLE = "deadline_unmeetable"  # shed at submit (estimate)
+    DEADLINE_MISSED = "deadline_missed"          # shed at admit, pre-prefill
+    CANCELLED = "cancelled"                      # client cancelled mid-flight
+    TIMEOUT = "timeout"                          # client-side timeout_s hit
+
+
+@dataclasses.dataclass(frozen=True)
+class Rejection:
+    """A structured rejection: ``code`` for machines, ``message`` for
+    humans. ``str(rejection)`` is the human message, so callers that
+    only ever stored the string keep working."""
+
+    code: RejectCode
+    message: str
+
+    def __str__(self) -> str:
+        return self.message
+
+
+class RejectionError(ValueError):
+    """``admit``/``open_stream``/``stream_feed`` failure carrying the
+    structured ``Rejection`` (``.rejection``); still a ValueError for
+    existing callers."""
+
+    def __init__(self, rejection: Rejection):
+        super().__init__(rejection.message)
+        self.rejection = rejection
 
 
 @dataclasses.dataclass
@@ -164,9 +211,22 @@ class RequestState:
     out: list                # generated ids
     done: bool = False
     error: Optional[str] = None   # set when rejected/failed, slot == -1
+    error_code: Optional[RejectCode] = None   # machine-readable reason
     # streaming requests: one snapshot of ``out`` per fed audio chunk
     # (the partial hypotheses emitted while audio was still arriving)
     partials: list = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class PendingTick:
+    """A dispatched-but-unfetched fused decode tick (``step_begin``):
+    the device arrays holding the ``(k, n_slots)`` token block and emit
+    mask, still materializing on device until ``step_fetch`` blocks on
+    them."""
+
+    k: int
+    tok_blk: Any
+    emit_blk: Any
 
 
 @dataclasses.dataclass
@@ -378,14 +438,18 @@ class ServeEngine:
         self._lane_active = self._lane_active.at[slot].set(active)
 
     # ------------------------------------------------------------------
-    def validate(self, req: Request) -> Optional[str]:
-        """Admission precheck: an error string (request can never be
-        served by this engine), or None. The scheduler rejects failing
-        requests at submit() instead of dying mid-tick."""
+    def validate(self, req: Request) -> Optional[Rejection]:
+        """Admission precheck: a ``Rejection`` (machine-readable
+        ``code`` + human ``message``; the request can never be served by
+        this engine), or None. The scheduler rejects failing requests at
+        submit() instead of dying mid-tick; the gateway's shed
+        accounting classifies by ``code``."""
+        C = RejectCode
         n = len(req.tokens)
         if n + req.max_new >= self.max_len:
-            return (f"request {req.uid} too long for engine "
-                    f"({n}+{req.max_new} vs {self.max_len})")
+            return Rejection(C.TOO_LONG,
+                             f"request {req.uid} too long for engine "
+                             f"({n}+{req.max_new} vs {self.max_len})")
         d_model = self.model.cfg.d_model
         if self.enc_dec:
             if isinstance(req, StreamingAudioRequest):
@@ -393,37 +457,48 @@ class ServeEngine:
                 for i, c in enumerate(req.chunks):
                     shp = np.shape(c)
                     if len(shp) != 2 or shp[1] != d_model or shp[0] < 1:
-                        return (f"request {req.uid}: chunk {i} must be "
-                                f"(s, {d_model}) with s >= 1, got {shp}")
+                        return Rejection(
+                            C.BAD_ENC_SHAPE,
+                            f"request {req.uid}: chunk {i} must be "
+                            f"(s, {d_model}) with s >= 1, got {shp}")
                     total += shp[0]
                 if total > self.enc_len:
-                    return (f"request {req.uid}: {total} streamed encoder "
-                            f"frames exceed the pool enc_len "
-                            f"{self.enc_len}")
+                    return Rejection(
+                        C.ENC_OVERFLOW,
+                        f"request {req.uid}: {total} streamed encoder "
+                        f"frames exceed the pool enc_len {self.enc_len}")
                 return None
             if req.enc_frames is None and req.enc_states is None:
-                return (f"request {req.uid}: enc-dec model "
-                        f"{self.model.cfg.name} requires enc_frames or "
-                        f"enc_states")
+                return Rejection(
+                    C.MISSING_ENC_INPUT,
+                    f"request {req.uid}: enc-dec model "
+                    f"{self.model.cfg.name} requires enc_frames or "
+                    f"enc_states")
             if req.enc_frames is not None and req.enc_states is not None:
-                return (f"request {req.uid}: pass enc_frames or "
-                        f"enc_states, not both")
+                return Rejection(
+                    C.AMBIGUOUS_ENC_INPUT,
+                    f"request {req.uid}: pass enc_frames or enc_states, "
+                    f"not both")
             enc = req.enc_frames if req.enc_frames is not None \
                 else req.enc_states
             what = "enc_frames" if req.enc_frames is not None \
                 else "enc_states"
             shp = np.shape(enc)
             if len(shp) != 2 or shp[1] != d_model:
-                return (f"request {req.uid}: {what} must be "
-                        f"(S_enc, {d_model}), got {shp}")
+                return Rejection(C.BAD_ENC_SHAPE,
+                                 f"request {req.uid}: {what} must be "
+                                 f"(S_enc, {d_model}), got {shp}")
             if shp[0] > self.enc_len:
-                return (f"request {req.uid}: {shp[0]} encoder "
-                        f"positions exceed the pool enc_len "
-                        f"{self.enc_len}")
+                return Rejection(
+                    C.ENC_OVERFLOW,
+                    f"request {req.uid}: {shp[0]} encoder positions "
+                    f"exceed the pool enc_len {self.enc_len}")
         elif req.enc_frames is not None or req.enc_states is not None \
                 or isinstance(req, StreamingAudioRequest):
-            return (f"request {req.uid}: encoder input on decoder-only "
-                    f"model {self.model.cfg.name}")
+            return Rejection(
+                C.ENC_ON_DECODER_ONLY,
+                f"request {req.uid}: encoder input on decoder-only "
+                f"model {self.model.cfg.name}")
         return None
 
     def admit(self, req: Request) -> Optional[RequestState]:
@@ -438,7 +513,7 @@ class ServeEngine:
             return None
         err = self.validate(req)
         if err is not None:
-            raise ValueError(err)
+            raise RejectionError(err)
         n = len(req.tokens)
         slot = self.free.pop()
         bucket = min(_bucket(n), self.max_len)
@@ -493,7 +568,7 @@ class ServeEngine:
                              f"StreamingAudioRequest")
         err = self.validate(req)
         if err is not None:
-            raise ValueError(err)
+            raise RejectionError(err)
         if not self.free:
             return None
         slot = self.free.pop()
@@ -513,9 +588,10 @@ class ServeEngine:
         fr = jnp.asarray(np.asarray(frames, np.float32))[None]
         s_new = int(fr.shape[1])
         if ss.n_frames + s_new > self.enc_len:
-            raise ValueError(
+            raise RejectionError(Rejection(
+                RejectCode.ENC_OVERFLOW,
                 f"request {st.req.uid}: stream overflows the pool "
-                f"enc_len {self.enc_len} ({ss.n_frames}+{s_new})")
+                f"enc_len {self.enc_len} ({ss.n_frames}+{s_new})"))
         with use_context(self.dispatch_ctx):
             states = self._encode(self.params, fr)
         ss.states.append(states)
@@ -605,15 +681,21 @@ class ServeEngine:
         return len(self._streams)
 
     # ------------------------------------------------------------------
-    def step(self, k: Optional[int] = None) -> list[RequestState]:
-        """One fused decode tick over the whole pool: ``k`` (default
-        ``decode_block``) decode steps in a single donated jit, then
-        exactly one host sync — the ``(k, n_slots)`` token block and its
-        emit mask — to run the Python bookkeeping (append to
-        ``RequestState.out``, free finished slots, pause streaming
-        lanes). Token-identical to ``k`` calls of ``step(1)``."""
+    def step_begin(self, k: Optional[int] = None) -> Optional[PendingTick]:
+        """Dispatch one fused decode tick and return immediately —
+        the device runs the ``k``-step scan while the host keeps
+        working (JAX async dispatch). The engine's cache/lane-state
+        references already point at the tick's (still materializing)
+        outputs; the returned ``PendingTick`` holds the un-fetched
+        token/emit blocks for ``step_fetch``/``step_replay``. Returns
+        None when no lane is active (nothing to dispatch).
+
+        This is the gateway's double-buffering hook: between
+        ``step_begin`` and ``step_fetch`` the host resolves futures,
+        drains streams, and picks the next tick's admissions while the
+        device decodes."""
         if not self.active:
-            return []
+            return None
         k = self.decode_block if k is None else int(k)
         if k < 1:   # a 0-length scan would emit nothing and never drain
             raise ValueError(f"decode block must be >= 1, got {k}")
@@ -624,12 +706,27 @@ class ServeEngine:
                 self.params, self.cache, self._tokens, self._pos,
                 self._lane_active, self._lane_out, self._enc_lens,
                 self._lane_eos, self._lane_max)
-        # THE host sync of this tick: one fetch for the whole block
-        tok_blk, emit_blk = jax.device_get((tok_blk, emit_blk))
+        return PendingTick(k=k, tok_blk=tok_blk, emit_blk=emit_blk)
+
+    def step_fetch(self, pending: PendingTick):
+        """THE host sync of a tick: block until the device finishes and
+        fetch the ``(k, n_slots)`` token block + emit mask in one
+        device_get. Safe to call off-thread (the gateway fetches in an
+        executor so its event loop stays live during the device wait)."""
+        tok_blk, emit_blk = jax.device_get(
+            (pending.tok_blk, pending.emit_blk))
         self._host_syncs += 1
         self._ticks += 1
-        self._decode_steps += k
+        self._decode_steps += pending.k
         self._generated += int(emit_blk.sum())
+        return tok_blk, emit_blk
+
+    def step_replay(self, pending: PendingTick, tok_blk,
+                    emit_blk) -> list[RequestState]:
+        """Host replay of a fetched tick: append emitted tokens to each
+        lane's ``RequestState``, free finished slots, pause streaming
+        lanes — the bookkeeping no jit can do."""
+        k = pending.k
         finished = []
         for slot, st in list(self.active.items()):
             for j in range(k):
@@ -654,6 +751,43 @@ class ServeEngine:
                         finished.append(st)
                     break
         return finished
+
+    def step_end(self, pending: Optional[PendingTick]
+                 ) -> list[RequestState]:
+        """Fetch + replay a dispatched tick (None — from an idle
+        ``step_begin`` — is a no-op)."""
+        if pending is None:
+            return []
+        tok_blk, emit_blk = self.step_fetch(pending)
+        return self.step_replay(pending, tok_blk, emit_blk)
+
+    def step(self, k: Optional[int] = None) -> list[RequestState]:
+        """One fused decode tick over the whole pool: ``k`` (default
+        ``decode_block``) decode steps in a single donated jit, then
+        exactly one host sync — the ``(k, n_slots)`` token block and its
+        emit mask — to run the Python bookkeeping (append to
+        ``RequestState.out``, free finished slots, pause streaming
+        lanes). Token-identical to ``k`` calls of ``step(1)``.
+        Equivalent to ``step_end(step_begin(k))``."""
+        return self.step_end(self.step_begin(k))
+
+    def abort(self, st: RequestState, code: RejectCode = None,
+              message: Optional[str] = None) -> None:
+        """Evict an in-flight request (client cancelled / timed out):
+        close its open stream, deactivate its lane, and zero+free the
+        slot so the next admission reuses it cleanly. Safe on requests
+        that already completed (no-op)."""
+        slot = st.slot
+        if st.done or slot < 0:
+            return
+        self._streams.pop(slot, None)
+        self.active.pop(slot, None)
+        if slot not in self.free:
+            self._free_slot(slot)
+        st.done = True
+        st.error_code = code or RejectCode.CANCELLED
+        st.error = message or \
+            f"request {st.req.uid} {st.error_code.value}"
 
     def _free_slot(self, slot: int) -> None:
         """Return a lane to the pool and zero its decode inputs — a

@@ -21,21 +21,29 @@ tick — the serving-time model of real-time arrival — so a lane decodes
 tokens ahead of the last) and is re-anchored at end of audio for the
 final transcript.
 
-Metrics track queue latency, time-to-first-token (in ticks), emitted
-tokens, and slot occupancy — the quantities a production scheduler
-optimizes. With ``decode_block > 1`` a tick is a coarser unit: TTFT and
-queue-wait resolve to one block, and ``tokens`` is the per-tick token
-blocks summed.
+Metrics track queue latency and time-to-first-token both in ticks and
+in wall-clock seconds (``time.monotonic()`` stamped at submit, admit,
+and first token — the quantities the gateway's SLO logic prices),
+emitted tokens, and slot occupancy. With ``decode_block > 1`` a tick is
+a coarser unit: tick-resolution TTFT and queue-wait resolve to one
+block (the wall-clock figures do not), and ``tokens`` is the per-tick
+token blocks summed.
+
+This scheduler is synchronous and FCFS — the hand-cranked baseline.
+The asyncio front door with SLO classes, earliest-deadline-first
+admission, and load shedding is ``repro.gateway`` (token-identical to
+this loop for the same request set).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Optional
 
-from repro.serving.engine import (Request, RequestState, ServeEngine,
-                                  StreamingAudioRequest)
+from repro.serving.engine import (Request, RequestState, RejectionError,
+                                  ServeEngine, StreamingAudioRequest)
 
 
 @dataclasses.dataclass
@@ -51,6 +59,12 @@ class SchedMetrics:
     occupancy_sum: float = 0.0
     queue_wait_sum: int = 0     # ticks spent waiting, summed over requests
     ttft_sum: int = 0           # ticks from submit to first token
+    # wall-clock (seconds) counterparts — time.monotonic() stamped at
+    # submit, admit (queue popped, pre-prefill), and first token (the
+    # prefill/anchor argmax fetched); tick counts quantize to the block
+    # size, these do not
+    queue_wait_s_sum: float = 0.0
+    ttft_s_sum: float = 0.0
 
     @property
     def mean_occupancy(self) -> float:
@@ -61,15 +75,30 @@ class SchedMetrics:
         return self.ttft_sum / max(self.admitted, 1)
 
     @property
+    def mean_ttft_s(self) -> float:
+        return self.ttft_s_sum / max(self.admitted, 1)
+
+    @property
+    def mean_queue_wait_s(self) -> float:
+        return self.queue_wait_s_sum / max(self.admitted, 1)
+
+    @property
     def tokens_per_tick(self) -> float:
         return self.tokens / max(self.ticks, 1)
+
+
+class SchedulerStuckError(RuntimeError):
+    """``run_until_drained`` exhausted its tick budget with work still
+    queued/active — a stuck load must fail loudly, not return quietly
+    with partial results."""
 
 
 class BatchScheduler:
     def __init__(self, engine: ServeEngine, max_admit_per_tick: int = 2):
         self.engine = engine
         self.max_admit_per_tick = max_admit_per_tick
-        self.queue: deque[tuple[Request, int]] = deque()   # (req, t_submit)
+        # (req, t_submit_tick, t_submit_wall)
+        self.queue: deque[tuple[Request, int, float]] = deque()
         self.metrics = SchedMetrics()
         self.results: dict[int, RequestState] = {}
         # open streams: slot -> (state, pending frame chunks)
@@ -79,16 +108,17 @@ class BatchScheduler:
         """Queue a request. Requests this engine can never serve
         (too long, missing/oversized enc_frames, ...) are rejected here
         — completed immediately as a failed RequestState in ``results``
-        — so one bad request cannot kill the serving loop. Returns the
-        failed state for rejected requests, None when queued."""
+        (``error`` message + machine-readable ``error_code``) — so one
+        bad request cannot kill the serving loop. Returns the failed
+        state for rejected requests, None when queued."""
         err = self.engine.validate(req)
         if err is not None:
             st = RequestState(req=req, slot=-1, pos=0, out=[], done=True,
-                              error=err)
+                              error=str(err), error_code=err.code)
             self.results[req.uid] = st
             self.metrics.rejected += 1
             return st
-        self.queue.append((req, self.metrics.ticks))
+        self.queue.append((req, self.metrics.ticks, time.monotonic()))
         return None
 
     def tick(self) -> list[RequestState]:
@@ -109,7 +139,8 @@ class BatchScheduler:
         admitted = 0
         while (self.queue and self.engine.free
                and admitted < self.max_admit_per_tick):
-            req, t_submit = self.queue.popleft()
+            req, t_submit, t_wall = self.queue.popleft()
+            t_admit = time.monotonic()
             try:
                 if isinstance(req, StreamingAudioRequest):
                     st = self.engine.open_stream(req)
@@ -118,13 +149,16 @@ class BatchScheduler:
             except ValueError as e:
                 # a request submit()'s precheck missed: fail it, keep
                 # the serving loop alive
+                code = e.rejection.code \
+                    if isinstance(e, RejectionError) else None
                 st = RequestState(req=req, slot=-1, pos=0, out=[],
-                                  done=True, error=str(e))
+                                  done=True, error=str(e),
+                                  error_code=code)
                 self.results[req.uid] = st
                 m.rejected += 1
                 continue
             if st is None:      # pool filled since the loop condition
-                self.queue.appendleft((req, t_submit))
+                self.queue.appendleft((req, t_submit, t_wall))
                 break
             if isinstance(req, StreamingAudioRequest):
                 pending = deque(req.chunks)
@@ -139,6 +173,11 @@ class BatchScheduler:
             m.admitted += 1
             m.queue_wait_sum += m.ticks - t_submit
             m.ttft_sum += m.ticks - t_submit   # first token at admit
+            m.queue_wait_s_sum += t_admit - t_wall
+            # the first token exists once the prefill/anchor returned —
+            # for one-shot requests that was admit(), for streams the
+            # first stream_feed
+            m.ttft_s_sum += time.monotonic() - t_wall
             admitted += 1
             if st.done and st.req.uid not in self.results:
                 m.completed += 1
@@ -154,10 +193,27 @@ class BatchScheduler:
         m.occupancy_sum += self.engine.n_active / self.engine.n_slots
         return finished
 
-    def run_until_drained(self, max_ticks: int = 10_000) -> None:
-        while (self.queue or self._streams or self.engine.n_active) and \
-                self.metrics.ticks < max_ticks:
+    def run_until_drained(self, max_ticks: int = 10_000, *,
+                          strict: bool = True) -> bool:
+        """Tick until every queued/streaming/active request completes,
+        running at most ``max_ticks`` ticks *from this call*. A load
+        that fails to drain raises ``SchedulerStuckError`` (default) or,
+        with ``strict=False``, returns False — either way a stuck load
+        is loud, never a silent partial result. Returns True when
+        drained."""
+        budget = max_ticks
+        while (self.queue or self._streams or self.engine.n_active) \
+                and budget > 0:
             self.tick()
+            budget -= 1
+        if not self.drained:
+            if strict:
+                raise SchedulerStuckError(
+                    f"scheduler not drained after {max_ticks} ticks: "
+                    f"{len(self.queue)} queued, {len(self._streams)} "
+                    f"open streams, {self.engine.n_active} active lanes")
+            return False
+        return True
 
     @property
     def drained(self) -> bool:

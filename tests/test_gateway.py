@@ -1,0 +1,261 @@
+"""Async gateway: SLO admission, shedding, lifecycle edge cases, and
+token parity with the synchronous scheduler.
+
+One module-scoped micro-whisper engine serves every test (jits compile
+once; per-lane cache isolation means engine reuse cannot leak tokens
+between tests — each test drains the pool). Tests drive asyncio via
+``asyncio.run`` inside plain functions (no plugin dependency).
+"""
+
+import asyncio
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.gateway import (INTERACTIVE, STANDARD, AdmissionQueue, Gateway,
+                           LoadSpec, SLOClass, poisson_arrivals, run_load,
+                           sync_baseline, synth_load)
+from repro.models.model import build
+from repro.serving.engine import (AudioRequest, RejectCode, Request,
+                                  ServeEngine)
+from repro.serving.scheduler import BatchScheduler, SchedulerStuckError
+
+MAX_LEN = 64
+ENC_LEN = 16
+
+
+@pytest.fixture(scope="module")
+def rig():
+    cfg = dataclasses.replace(
+        reduced(get_config("whisper-tiny-en")),
+        d_model=64, n_heads=2, n_kv_heads=2, d_ff=128, vocab=256,
+        enc_layers=1, n_layers=1)
+    model = build(cfg)
+    params = model.init_values(jax.random.key(0))
+    engine = ServeEngine(model, params, n_slots=4, max_len=MAX_LEN,
+                         enc_len=ENC_LEN, decode_block=4)
+    return cfg, engine
+
+
+def _frames(s, d_model=64, seed=7):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((s, d_model)).astype(np.float32) * 0.02
+
+
+# ---------------------------------------------------------------- parity
+def test_gateway_parity_32_concurrent(rig):
+    """>= 32 concurrent mixed one-shot/streaming requests through the
+    async gateway are token-identical to the synchronous FCFS
+    BatchScheduler, with exactly one host sync per fused tick."""
+    cfg, engine = rig
+    spec = LoadSpec(rate_rps=500.0, n_requests=32, seed=0,
+                    stream_fraction=0.3)
+    descs = synth_load(cfg, spec)
+    baseline = sync_baseline(engine, descs)
+    assert engine.n_active == 0
+    results, summary, _ = run_load(engine, spec, shed_on_submit=False)
+    assert all(r.ok for r in results), \
+        [(r.uid, r.code, r.error) for r in results if not r.ok]
+    for d, r in zip(descs, results):
+        assert list(r.tokens) == baseline[d.idx], f"desc {d.idx}"
+    assert summary["completed"] == 32 and summary["shed_total"] == 0
+    assert engine._host_syncs == engine._ticks
+    assert engine.n_active == 0 and len(engine.free) == engine.n_slots
+
+
+# ----------------------------------------------------- lifecycle edges
+def test_cancel_mid_stream_frees_slot_and_reanchors(rig):
+    """Cancelling a streaming session mid-flight frees its lane, and a
+    subsequent request on the same engine still matches the clean
+    reference (no state leaks from the aborted lane)."""
+    cfg, engine = rig
+    fr = _frames(8)
+    # clean reference for the follow-up request
+    st_ref = engine.admit(AudioRequest(uid=900, tokens=[1, 5], max_new=6,
+                                       eos_id=-1, enc_frames=fr))
+    while engine.n_active:
+        engine.step()
+    ref = list(st_ref.out)
+
+    async def go():
+        async with Gateway(engine, shed_on_submit=False) as gw:
+            sess = await gw.open_session(tokens=[1], max_new=30,
+                                         slo=INTERACTIVE)
+            await sess.feed(_frames(4, seed=1))
+            for _ in range(50):       # let the lane actually decode
+                await asyncio.sleep(0.01)
+                if sess.partials:
+                    break
+            assert sess.partials, "stream never anchored"
+            r = await sess.cancel()
+            assert not r.ok and r.code is RejectCode.CANCELLED
+            # the freed lane serves the follow-up token-identically
+            r2 = await gw.submit_audio(frames=fr, tokens=[1, 5],
+                                       max_new=6, slo=STANDARD)
+            assert r2.ok and list(r2.tokens) == ref
+        assert engine.n_active == 0
+        assert len(engine.free) == engine.n_slots
+
+    asyncio.run(go())
+
+
+def test_client_timeout_mid_flight_frees_slot(rig):
+    cfg, engine = rig
+
+    async def go():
+        async with Gateway(engine, shed_on_submit=False) as gw:
+            r = await gw.submit_audio(frames=_frames(8), tokens=[1],
+                                      max_new=40, slo=STANDARD,
+                                      timeout_s=1e-3)
+            assert not r.ok and r.code is RejectCode.TIMEOUT
+        assert engine.n_active == 0
+        assert len(engine.free) == engine.n_slots
+
+    asyncio.run(go())
+
+
+def test_deadline_miss_sheds_before_prefill(rig):
+    """A request whose deadline passes while queued is shed at pop time
+    — before any prefill compute is spent on it."""
+    cfg, engine = rig
+    tight = SLOClass("tight", priority=0, deadline_s=1e-6)
+
+    async def go():
+        async with Gateway(engine, shed_on_submit=False) as gw:
+            r = await gw.submit_audio(frames=_frames(8), tokens=[1],
+                                      max_new=4, slo=tight)
+            assert not r.ok and r.code is RejectCode.DEADLINE_MISSED
+            assert r.record.admit_t is None      # never prefilled
+        assert engine.n_active == 0
+
+    asyncio.run(go())
+
+
+def test_queue_full_backpressure_sheds(rig):
+    """Bounded admission queue: with admissions frozen, the request
+    past the limit is shed QUEUE_FULL instead of growing a backlog."""
+    cfg, engine = rig
+
+    async def go():
+        # max_admit_per_tick=0 freezes admission: queue fills exactly
+        gw = Gateway(engine, queue_limit=2, max_admit_per_tick=0,
+                     shed_on_submit=False)
+        await gw.start()
+        try:
+            t1 = asyncio.create_task(gw.submit_audio(
+                frames=_frames(4), tokens=[1], max_new=2, slo=STANDARD,
+                timeout_s=0.5))
+            t2 = asyncio.create_task(gw.submit_audio(
+                frames=_frames(4), tokens=[1], max_new=2, slo=STANDARD,
+                timeout_s=0.5))
+            await asyncio.sleep(0.05)            # both queued
+            assert gw.n_queued == 2
+            r3 = await gw.submit_audio(frames=_frames(4), tokens=[1],
+                                       max_new=2, slo=STANDARD)
+            assert not r3.ok and r3.code is RejectCode.QUEUE_FULL
+            r1, r2 = await t1, await t2          # time out queued
+            assert {r1.code, r2.code} == {RejectCode.TIMEOUT}
+        finally:
+            await gw.close(drain=False)
+
+    asyncio.run(go())
+
+
+def test_bad_chunk_sheds_session(rig):
+    cfg, engine = rig
+
+    async def go():
+        async with Gateway(engine, shed_on_submit=False) as gw:
+            sess = await gw.open_session(tokens=[1], max_new=4)
+            await sess.feed(_frames(4))
+            await sess.feed(np.zeros((3, 5), np.float32))   # wrong d_model
+            r = await sess.finalize()
+            assert not r.ok and r.code is RejectCode.BAD_ENC_SHAPE
+            # overflow path: a fresh session streaming past enc_len
+            s2 = await gw.open_session(tokens=[1], max_new=4)
+            await s2.feed(_frames(ENC_LEN))
+            await s2.feed(_frames(4))
+            r2 = await s2.finalize()
+            assert not r2.ok and r2.code is RejectCode.ENC_OVERFLOW
+        assert engine.n_active == 0
+
+    asyncio.run(go())
+
+
+# ------------------------------------------------------- load generator
+def test_poisson_loadgen_deterministic(rig):
+    cfg, _ = rig
+    a = poisson_arrivals(50.0, 64, seed=3)
+    b = poisson_arrivals(50.0, 64, seed=3)
+    c = poisson_arrivals(50.0, 64, seed=4)
+    assert np.array_equal(a, b) and not np.array_equal(a, c)
+    assert np.all(np.diff(a) > 0) and a.shape == (64,)
+    spec = LoadSpec(rate_rps=100.0, n_requests=12, seed=5)
+    d1, d2 = synth_load(cfg, spec), synth_load(cfg, spec)
+    for x, y in zip(d1, d2):
+        assert x.arrival_s == y.arrival_s and x.tokens == y.tokens
+        assert x.kind == y.kind and x.slo is y.slo
+        assert all(np.array_equal(p, q)
+                   for p, q in zip(x.chunks, y.chunks))
+
+
+# ------------------------------------------------------ admission queue
+def test_admission_queue_edf_within_priority():
+    @dataclasses.dataclass
+    class T:
+        slo: SLOClass
+        deadline_t: float
+        cancelled: bool = False
+
+    hi = SLOClass("hi", 0, 1.0)
+    lo = SLOClass("lo", 1, 1.0)
+    q = AdmissionQueue(limit=4)
+    late_hi = T(hi, 9.0)
+    early_lo = T(lo, 1.0)
+    early_hi = T(hi, 2.0)
+    assert q.push(late_hi) and q.push(early_lo) and q.push(early_hi)
+    cancelled = T(hi, 0.5, cancelled=True)
+    assert q.push(cancelled)
+    assert not q.push(T(lo, 3.0))          # full -> backpressure
+    q.cancelled_dropped()
+    # priority class strict; EDF within class; cancelled skipped
+    assert q.pop() is early_hi
+    assert q.pop() is late_hi
+    assert q.pop() is early_lo
+    assert q.pop() is None and len(q) == 0
+
+
+# ------------------------------------------------ reject codes / drain
+def test_validate_reject_codes(rig):
+    cfg, engine = rig
+    r = engine.validate(Request(uid=0, tokens=[1] * MAX_LEN, max_new=4,
+                                eos_id=-1))
+    assert r is not None and r.code is RejectCode.TOO_LONG
+    r = engine.validate(Request(uid=1, tokens=[1], max_new=4, eos_id=-1))
+    assert r is not None and r.code is RejectCode.MISSING_ENC_INPUT
+    r = engine.validate(AudioRequest(uid=2, tokens=[1], max_new=4,
+                                     eos_id=-1,
+                                     enc_frames=_frames(ENC_LEN + 1)))
+    assert r is not None and r.code is RejectCode.ENC_OVERFLOW
+    assert engine.validate(AudioRequest(uid=3, tokens=[1], max_new=4,
+                                        eos_id=-1,
+                                        enc_frames=_frames(4))) is None
+    # scheduler surfaces the machine-readable code on rejected results
+    sched = BatchScheduler(engine)
+    st = sched.submit(Request(uid=950, tokens=[1], max_new=4, eos_id=-1))
+    assert st.done and st.error_code is RejectCode.MISSING_ENC_INPUT
+
+
+def test_run_until_drained_raises_when_stuck(rig):
+    cfg, engine = rig
+    sched = BatchScheduler(engine)
+    sched.submit(AudioRequest(uid=960, tokens=[1], max_new=6, eos_id=-1,
+                              enc_frames=_frames(4)))
+    with pytest.raises(SchedulerStuckError, match="not drained"):
+        sched.run_until_drained(max_ticks=0)
+    assert sched.run_until_drained(max_ticks=0, strict=False) is False
+    assert sched.run_until_drained() is True
+    assert sched.drained
