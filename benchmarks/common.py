@@ -5,8 +5,7 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core.workload import (WHISPER_TINY, WHISPER_BASE, WHISPER_SMALL,
-                                 whisper_workload)   # noqa: E402
+from repro.core.workload import WHISPER_TINY, whisper_workload  # noqa: E402
 
 
 def fmt_table(headers, rows, title=""):

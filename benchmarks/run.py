@@ -47,6 +47,17 @@ def platforms_record(module_checks: dict) -> dict:
     w16, w8 = workloads()
     calib = calibrate_imax(w16, w8)
     rows = platform_pdp_table(w16, w8, calib)
+    # static hot-path invariants (repro.staticcheck): per-function
+    # donation / sync-free / dtype-plane verdicts — the cheap static
+    # slice; the full gate (recompile + footprint) is the CI
+    # `staticcheck` job. Kept non-fatal so a checker crash still
+    # leaves a benchmark record (with ok=False) behind.
+    try:
+        from repro.staticcheck import bench_record
+        staticcheck_rec = bench_record()
+    except Exception as e:
+        traceback.print_exc()
+        staticcheck_rec = {"ok": False, "error": repr(e)}
     imax8 = get_platform("imax3-28nm").paper_observable("pdp_j", "q8_0")
     dispatch_checks = module_checks.get("benchmarks.dispatch_check", {})
     asr_checks = module_checks.get("benchmarks.e2e_asr", {})
@@ -98,6 +109,8 @@ def platforms_record(module_checks: dict) -> dict:
         # async gateway under Poisson load: token parity vs the sync
         # scheduler, goodput accounting, J/audio-s (benchmarks/serve_load)
         "serve_load": serve_load_record(sl_checks),
+        # hot-path invariant verdicts (repro.staticcheck)
+        "staticcheck": staticcheck_rec,
         "dispatch_agreement": bool(dispatch_checks.get(
             "plan and dispatch agree on every kernel", False)),
         "calibration_residuals": calib.residuals,

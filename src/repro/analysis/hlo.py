@@ -29,7 +29,6 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from collections import defaultdict
 from typing import Optional
 
 _DTYPE_BYTES = {
@@ -258,7 +257,6 @@ class HloAnalyzer:
         scan charges 36× the full stacked parameter array."""
         out: dict[int, int] = {}
         instrs = self.comps.get(comp, [])
-        by_name = {i.name: i for i in instrs}
         params = {}
         for ins in instrs:
             if ins.opcode == "parameter":
@@ -588,6 +586,24 @@ class HloAnalyzer:
 
 def analyze_hlo(text: str) -> HloCost:
     return HloAnalyzer(text).analyze()
+
+
+def analyze_jit(fn, *args, **kwargs) -> HloCost:
+    """Lower + compile ``fn`` for ``args`` and run the while-aware
+    analyzer on the scheduled HLO XLA actually emits.
+
+    This is the measured side of the ROADMAP's "measured HLO cost model"
+    item: callers (``repro.staticcheck``'s footprint cross-check, the
+    dispatch/autotuning layers) hand it a callable + representative
+    arguments and get the per-opcode flops/bytes feature vector for the
+    compiled program, loop trip counts included. ``fn`` may already be
+    jit-wrapped (anything with ``.lower``); plain callables are wrapped
+    here. Args may be concrete arrays or ``jax.ShapeDtypeStruct``s.
+    """
+    import jax
+
+    jfn = fn if hasattr(fn, "lower") else jax.jit(fn)
+    return analyze_hlo(jfn.lower(*args, **kwargs).compile().as_text())
 
 
 # Back-compat helpers -------------------------------------------------------

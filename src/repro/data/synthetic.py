@@ -19,7 +19,6 @@ final position masked (ignore_id = -1).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import numpy as np
 

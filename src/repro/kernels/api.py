@@ -295,6 +295,7 @@ def _register_builtin_ops() -> None:
     from repro.kernels.flash_attention.ref import attention_ref
     from repro.kernels.q8_attention.ops import q8_decode_attention
     from repro.kernels.q8_attention.ref import q8_decode_attention_ref
+    from repro.kernels.q8_attention.xla import q8_decode_attention_xla
     from repro.kernels.q8_matmul.ops import q8_matmul, q8_matmul_xla
     from repro.kernels.q8_matmul.ref import q8_matmul_ref
     from repro.kernels.slstm_scan.ops import slstm_scan
@@ -380,9 +381,12 @@ def _register_builtin_ops() -> None:
     register(KernelOp(
         name="flash_attention",
         doc="GQA flash attention over (B,S,H,D).",
+        # count = 2 * B * H: QK^T and AV (equal 2*m*n*k flops) over every
+        # batch*query-head plane — one KernelSpec per dispatched call.
         spec=lambda q, k, v, **kw: KernelSpec(
             "flash_attention", m=q.shape[1], n=k.shape[1], k=q.shape[-1],
-            dtype="f16", tag="attn_qk"),
+            dtype="f16", count=2 * q.shape[0] * q.shape[2],
+            tag="attn_qk"),
         backends={
             "pallas": _flash_pallas,
             "xla": _flash_xla,
@@ -391,16 +395,23 @@ def _register_builtin_ops() -> None:
     ))
 
     # ---- q8_decode_attention: decode matvec over the Q8_0 KV cache ----
+    # count = 2 * BH: the QK^T and AV contractions (same 2*m*n*k flops
+    # each) across every batch*head lane in the flattened plane.
+    # The "xla" host backend dequantizes into bf16 (never f32 planes) —
+    # the ref oracle's full-plane f32 dequant is for parity tests only.
     register(KernelOp(
         name="q8_decode_attention",
         doc="Decode attention reading the Q8_0-quantized KV cache.",
         spec=lambda q, kq, ks, vq, vs, length, **kw: KernelSpec(
             "q8_decode_attention", m=q.shape[1], n=kq.shape[1],
-            k=q.shape[-1], dtype="q8_0", tag="attn_qk"),
+            k=q.shape[-1], dtype="q8_0", count=2 * q.shape[0],
+            tag="attn_qk"),
         backends={
             "pallas": lambda ctx, q, kq, ks, vq, vs, length, bk=128:
                 q8_decode_attention(q, kq, ks, vq, vs, length, bk=bk,
                                     interpret=ctx.interpret),
+            "xla": lambda ctx, q, kq, ks, vq, vs, length, bk=128:
+                q8_decode_attention_xla(q, kq, ks, vq, vs, length),
             "ref": lambda ctx, q, kq, ks, vq, vs, length, bk=128:
                 q8_decode_attention_ref(q, kq, ks, vq, vs, length),
         },
@@ -410,9 +421,12 @@ def _register_builtin_ops() -> None:
     register(KernelOp(
         name="slstm_scan",
         doc="Chunked sLSTM scan, state resident in VMEM.",
+        # count = 4 * T: four gate recurrence matmuls (B*H, hd) @ (hd, hd)
+        # per scanned time step.
         spec=lambda wx, r_all, state0, **kw: KernelSpec(
             "slstm_scan", m=wx.shape[2] * wx.shape[3], n=wx.shape[-1],
-            k=wx.shape[-1], dtype="f32", tag="ssm"),
+            k=wx.shape[-1], dtype="f32", count=4 * wx.shape[0],
+            tag="ssm"),
         backends={
             "pallas": lambda ctx, wx, r_all, state0, t_chunk=64:
                 slstm_scan(wx, r_all, state0, t_chunk=t_chunk,

@@ -36,7 +36,6 @@ def _q8_attn_kernel(len_ref, q_ref, kq_ref, ks_ref, vq_ref, vs_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    d = q_ref.shape[-1]
     q = q_ref[0].astype(jnp.float32)                     # (1, D)
 
     def dequant(qref, sref):

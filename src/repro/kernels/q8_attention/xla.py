@@ -1,0 +1,46 @@
+"""XLA host backend: Q8_0 decode attention without f32 plane
+materialization.
+
+The ref oracle dequantizes whole cache planes to f32 — 4 bytes/elem
+through HBM, defeating the Q8_0 cache-stream saving on any host-routed
+platform. Here the int8 codes are widened to bf16 (codes are integers
+in [-127, 127], exact in bf16's 8-bit mantissa) and the per-block
+scales are folded in *after* the f32-accumulated contraction, which is
+algebraically identical to dequantize-then-dot (the scale is constant
+within each QBLOCK slice of the contraction). The widest materialized
+plane is therefore 2 bytes/elem, and ``repro.staticcheck``'s SC-DTYPE
+pass verifies no f32 plane convert exists in the lowered program.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import QBLOCK
+
+
+def q8_decode_attention_xla(q, kq, ks, vq, vs, length) -> jax.Array:
+    """q: (BH, 1, D); int8 code planes + (BH, S, D//QBLOCK) scales;
+    attend positions [0, length). Same contract as the ref oracle."""
+    bh, _, d = q.shape
+    s_len = kq.shape[1]
+    nb = d // QBLOCK
+    qb = q.astype(jnp.bfloat16).reshape(bh, 1, nb, QBLOCK)
+    k8 = kq.astype(jnp.bfloat16).reshape(bh, s_len, nb, QBLOCK)
+    v8 = vq.astype(jnp.bfloat16).reshape(bh, s_len, nb, QBLOCK)
+    # per-block partial dots, f32 accumulation; scales fold in afterward
+    s = jnp.einsum("bqnd,bknd->bqkn", qb, k8,
+                   preferred_element_type=jnp.float32)
+    s = (s * ks.astype(jnp.float32)[:, None, :, :]).sum(-1) * (d ** -0.5)
+    lens = jnp.broadcast_to(
+        jnp.asarray(length, jnp.int32).reshape(-1), (bh,))
+    mask = jnp.arange(s_len)[None, None, :] < lens[:, None, None]
+    s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    # out_d = sum_k w_k * code_kd * scale_k,blk: fold the scale into the
+    # f32 weights (per (k, block)), contract against bf16 codes
+    wv = w[:, :, :, None] * vs.astype(jnp.float32)[:, None, :, :]
+    out = jnp.einsum("bqkn,bknd->bqnd", wv.astype(jnp.bfloat16), v8,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(bh, 1, d).astype(q.dtype)

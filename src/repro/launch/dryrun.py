@@ -28,7 +28,6 @@ import traceback
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.analysis.roofline import model_flops, roofline_from_compiled
 from repro.configs import get_config, list_archs

@@ -25,7 +25,6 @@ def main():
     args = ap.parse_args()
 
     from repro.analysis.hlo import HloAnalyzer
-    from repro.launch import dryrun
 
     # reuse dryrun's cell builder but keep the compiled text
     import repro.launch.dryrun as dr
@@ -53,7 +52,7 @@ def main():
           "(per device) ==")
     for b, op, shape, name in an.top_instructions(args.top):
         print(f"  {b / 1e9:9.3f} GB  {op:20s} {shape:34.34s} {name[:90]}")
-    print(f"\n== top collectives by effective payload ==")
+    print("\n== top collectives by effective payload ==")
     for b, op, shape, name in an.top_collectives(15):
         print(f"  {b / 1e9:9.3f} GB  {op:20s} {shape:34.34s} {name[:90]}")
 

@@ -14,7 +14,6 @@ Usage::
 
 import argparse
 import os
-import sys
 
 
 def main(argv=None):
@@ -47,7 +46,7 @@ def main(argv=None):
     from repro.data.synthetic import SyntheticDataset
     from repro.models.model import build
     from repro.optim.adamw import AdamWConfig
-    from repro.parallel.sharding import rules_for, tree_shardings
+    from repro.parallel.sharding import rules_for
     from repro.train.loop import LoopConfig, TrainLoop
     from repro.train import step as step_mod
 
@@ -72,8 +71,6 @@ def main(argv=None):
         state_sh = step_mod.state_shardings(model, mesh, rules)
         state = jax.device_put(state, state_sh)
         from jax.sharding import NamedSharding, PartitionSpec as P
-        bsh = NamedSharding(mesh, P(("pod", "data") if "pod" in mesh.shape
-                                    else "data"))
 
         def put_batch(b):
             return {k: jax.device_put(v, NamedSharding(

@@ -11,7 +11,6 @@ fallback is decided by the rules (sharding.py).
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

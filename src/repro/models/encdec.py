@@ -25,7 +25,7 @@ from repro.models import attention as attn_mod
 from repro.models.layers import (KeyGen, Param, embed, init_embedding,
                                  init_layernorm, init_mlp, layernorm,
                                  logits_head, mlp, mm, ninit, rmsnorm,
-                                 sinusoidal_positions, split_params,
+                                 sinusoidal_positions,
                                  stack_axes)
 from repro.parallel.sharding import constrain
 
@@ -234,7 +234,6 @@ def decode_tokens(params: dict, cfg: ArchConfig, tokens: jax.Array,
 
 def init_encdec_cache(cfg: ArchConfig, batch: int, max_len: int,
                       enc_len: int, dtype=jnp.bfloat16) -> dict:
-    one = {"self": {"kv": None}, "cross": {"kv": None}}  # structure doc
     self_kv = attn_mod.init_kv_cache(cfg, batch, max_len, dtype)
     cross_kv = attn_mod.init_kv_cache(cfg, batch, enc_len, dtype)
     layer = {"self": self_kv, "cross": cross_kv}

@@ -74,7 +74,6 @@ def _ssd_chunked(xh, dt, a_log_dt, B, C, h0, chunk: int = CHUNK):
       h0: (B, H, hd, N) initial state
     Returns (y: (B,S,H,hd), h_final)."""
     b, s, h, hd = xh.shape
-    n = B.shape[-1]
     chunk = min(chunk, s)
     pad = (-s) % chunk
     if pad:

@@ -10,8 +10,7 @@ matching the architecture; its KV caches remain per-occurrence.
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +23,7 @@ from repro.models import ssm as ssm_mod
 from repro.models import xlstm as xlstm_mod
 from repro.models.layers import (KeyGen, Param, init_embedding, init_mlp,
                                  init_rmsnorm, embed, logits_head, mlp,
-                                 rmsnorm, split_params, stack_axes)
+                                 rmsnorm, stack_axes)
 from repro.parallel.sharding import constrain
 
 

@@ -1,0 +1,19 @@
+"""repro.staticcheck — static verification of the serving hot path.
+
+Traces/lowers the prefill jit, the fused decode tick, the streaming
+cross-cache extension and the frontend GEMMs, then verifies structural
+invariants from the jaxpr and lowered HLO: donation/aliasing, the
+one-host-sync-per-tick budget, q8_0/bf16 dtype-plane integrity,
+recompile stability, and the registry's analytic kernel footprints
+against the measured HLO cost model.
+
+CLI: ``python -m repro.staticcheck [--json [PATH]] [--only IDS]``.
+Intentional exceptions live in ``staticcheck.toml`` at the repo root.
+"""
+
+from repro.staticcheck.config import StaticcheckConfig
+from repro.staticcheck.report import Finding, Report
+from repro.staticcheck.run import ALL_CHECKS, bench_record, run_all
+
+__all__ = ["ALL_CHECKS", "Finding", "Report", "StaticcheckConfig",
+           "bench_record", "run_all"]

@@ -1,0 +1,61 @@
+"""``python -m repro.staticcheck`` — run the hot-path invariant checks.
+
+Exit status is 0 iff every finding passes (or carries a reviewed
+waiver); on failure the offending check IDs are named on the last line
+and in the process exit. ``--json`` writes the machine-readable report
+(CI uploads it as an artifact next to ``BENCH_platforms.json``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.staticcheck.config import StaticcheckConfig
+from repro.staticcheck.run import ALL_CHECKS, run_all
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.staticcheck",
+        description="Static hot-path invariant checker.")
+    ap.add_argument("--json", nargs="?", const="-", default=None,
+                    metavar="PATH",
+                    help="emit the JSON report to PATH ('-' = stdout)")
+    ap.add_argument("--only", default=None, metavar="IDS",
+                    help="comma-separated check IDs "
+                         f"(default: all of {','.join(ALL_CHECKS)})")
+    ap.add_argument("--config", default=None, metavar="PATH",
+                    help="staticcheck.toml path (default: repo root)")
+    ap.add_argument("--verbose", action="store_true",
+                    help="list passing findings too")
+    ap.add_argument("--list", action="store_true",
+                    help="list check IDs and exit")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for c in ALL_CHECKS:
+            print(c)
+        return 0
+
+    only = set(args.only.split(",")) if args.only else None
+    config = StaticcheckConfig.load(args.config)
+    report = run_all(config=config, only=only)
+
+    if args.json == "-":
+        print(report.to_json())
+    else:
+        print(report.human(verbose=args.verbose))
+        if args.json:
+            with open(args.json, "w") as fh:
+                fh.write(report.to_json())
+            print(f"wrote {args.json}")
+    if not report.ok:
+        print(f"FAILED CHECKS: {', '.join(report.failed_checks())}",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,36 @@
+"""SC-DON — donation/aliasing: every buffer a hot-path jit donates must
+come back as an XLA input/output alias, i.e. an in-place update rather
+than a defensive copy.
+
+Evidence: per-parameter ``tf.aliasing_output`` attributes in the
+lowered StableHLO (jit resolves ``donate_argnums`` into
+``input_output_aliases`` at lowering time, before XLA ever runs, so
+this is a fully static fact). A donated pool missing its alias means
+the engine would silently allocate + copy the whole KV pool every tick.
+"""
+
+from __future__ import annotations
+
+from repro.staticcheck.harness import HotProgram
+from repro.staticcheck.jaxpr_utils import alias_count, arg_aliases
+from repro.staticcheck.report import Finding
+
+CHECK = "SC-DON"
+
+
+def check_donation(programs: list[HotProgram]) -> list[Finding]:
+    out = []
+    for prog in programs:
+        if prog.donated_leaves == 0:
+            continue
+        n = alias_count(prog.stablehlo)
+        ok = n >= prog.donated_leaves
+        aliases = arg_aliases(prog.stablehlo)
+        out.append(Finding(
+            check=CHECK, subject=prog.name, ok=ok,
+            detail=(f"{n}/{prog.donated_leaves} donated buffers aliased "
+                    f"in-place"
+                    + ("" if ok else " — donated pool would be copied")),
+            data={"aliased": n, "donated": prog.donated_leaves,
+                  "arg_to_output": aliases}))
+    return out

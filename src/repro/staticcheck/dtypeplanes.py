@@ -1,0 +1,85 @@
+"""SC-DTYPE — dtype-plane integrity: the q8_0 / bf16 cache pools must
+never be materialized in f32 inside a hot-path program.
+
+The paper's cache-stream ratio (q8_0 at 0.5312x the bf16 bytes) only
+holds if reads dequantize into the compute dtype at the point of use —
+a ``convert_element_type`` to f32 over a whole pool plane means the
+program streams 4-byte planes through HBM regardless of what the pool
+stores. The check walks every jaxpr equation (scan bodies included) and
+flags converts that are
+
+* from a storage dtype (int8 / bf16 / f16) to float32, and
+* plane-sized: the input spans at least ``n_slots * min(seq) *
+  head_dim`` elements and carries a pool sequence dim (``max_len`` or
+  ``enc_len``) — i.e. it is a cache plane (possibly flattened), not a
+  per-token activation.
+
+Per-token activation upcasts (argmax logits, softmax accumulators —
+all orders of magnitude below plane size) pass untouched.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+from repro.staticcheck.harness import HotProgram
+from repro.staticcheck.jaxpr_utils import iter_eqns
+from repro.staticcheck.report import Finding
+
+CHECK = "SC-DTYPE"
+
+_STORAGE_DTYPES = {jnp.dtype(jnp.int8), jnp.dtype(jnp.bfloat16),
+                   jnp.dtype(jnp.float16)}
+
+
+def _plane_upcasts(prog: HotProgram) -> list[dict]:
+    n_slots, max_len, enc_len, head_dim = prog.plane_dims
+    min_elems = n_slots * min(max_len, enc_len) * head_dim
+    seq_dims = {max_len, enc_len}
+    hits = []
+    for eqn, depth in iter_eqns(prog.jaxpr):
+        if eqn.primitive.name != "convert_element_type":
+            continue
+        aval = eqn.invars[0].aval
+        new_dtype = jnp.dtype(eqn.params["new_dtype"])
+        if new_dtype != jnp.dtype(jnp.float32):
+            continue
+        if jnp.dtype(aval.dtype) not in _STORAGE_DTYPES:
+            continue
+        shape = tuple(aval.shape)
+        if math.prod(shape) < min_elems or not seq_dims & set(shape):
+            continue
+        hits.append({"from": str(aval.dtype), "shape": list(shape),
+                     "depth": depth})
+    return hits
+
+
+def check_dtype_planes(programs: list[HotProgram]) -> list[Finding]:
+    """One finding per distinct (program, source dtype, shape) upcast —
+    narrow enough for a ``staticcheck.toml`` waiver to cover exactly one
+    materialization site without masking future leaks — plus one ok
+    finding for each clean program."""
+    out = []
+    for prog in programs:
+        if not prog.plane_dims or not prog.cache_dtypes:
+            continue
+        groups: dict[str, list[dict]] = {}
+        for h in _plane_upcasts(prog):
+            key = f"{h['from']}{tuple(h['shape'])}"
+            groups.setdefault(key, []).append(h)
+        if not groups:
+            out.append(Finding(
+                check=CHECK, subject=prog.name, ok=True,
+                detail="no plane-sized f32 upcast",
+                data={"cache_dtypes": list(prog.cache_dtypes)}))
+            continue
+        for key, hits in sorted(groups.items()):
+            out.append(Finding(
+                check=CHECK, subject=f"{prog.name}:{key}", ok=False,
+                detail=(f"{len(hits)} plane-sized f32 upcast(s) of "
+                        f"{key} — the pool would stream 4-byte planes"),
+                data={"upcasts": hits,
+                      "cache_dtypes": list(prog.cache_dtypes)}))
+    return out

@@ -1,0 +1,144 @@
+"""SC-FOOT / SC-REG — the kernel registry's analytic footprints,
+cross-checked against what XLA actually emits.
+
+For every registered op, a representative call is built, its
+``KernelSpec`` taken from the registry's own spec builder, and the op's
+host backend compiled; the while-aware HLO cost model
+(``analysis.hlo.analyze_jit``) then measures the program's flops and
+HBM bytes. The measured/analytic ratios must sit inside the tolerance
+bands in ``staticcheck.toml`` — a spec that drifts from the code it
+describes (stale ``count``, wrong contraction dims) corrupts every
+downstream energy/PDP figure, which is exactly the ROADMAP's "measured
+HLO cost model" concern.
+
+SC-REG additionally requires each op to be host-servable: at least one
+backend in its ``host_order`` chain must be registered, so a
+pallas-less platform can always execute the op.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.hlo import analyze_jit
+from repro.staticcheck.config import StaticcheckConfig
+from repro.staticcheck.report import Finding
+
+CHECK_FOOT = "SC-FOOT"
+CHECK_REG = "SC-REG"
+
+# Analytic stream model per spec: stationary operand (weights / cached
+# plane) in the storage dtype, activations in the 2-byte compute dtype,
+# f32 accumulator out — the LMM traffic convention the energy
+# accounting uses.
+_ELEM_BYTES = {"f16": 2.0, "bf16": 2.0, "f32": 4.0,
+               "q8_0": 1.0 + 2.0 / 32.0}
+
+
+def spec_stream_bytes(spec) -> float:
+    eb = _ELEM_BYTES.get(spec.dtype, 4.0)
+    stationary = spec.n * spec.k * eb
+    moving = spec.m * spec.k * 2.0
+    out = spec.m * spec.n * 4.0
+    return spec.count * (stationary + moving + out)
+
+
+def representative_calls() -> dict[str, tuple[tuple, dict]]:
+    """(args, kwargs) per builtin op: small shapes in each op's real
+    serving layout (GQA planes, q8 pools, scanned recurrences)."""
+    from repro.core.quantize import quantize_q8_0
+
+    key = jax.random.key(0)
+    x8 = jax.random.normal(key, (8, 256), jnp.float32)
+    w8 = quantize_q8_0(jax.random.normal(key, (256, 128)), axis=0)
+    xf = jax.random.normal(key, (8, 128), jnp.bfloat16)
+    wf = jax.random.normal(key, (128, 128), jnp.bfloat16)
+    q = jax.random.normal(key, (2, 64, 4, 32), jnp.bfloat16)
+    kv = jax.random.normal(key, (2, 64, 2, 32), jnp.bfloat16)
+    dq = jax.random.normal(key, (8, 1, 32), jnp.float32)
+    kq = jax.random.randint(key, (8, 64, 32), -127, 127, jnp.int8)
+    ks = jnp.full((8, 64, 1), 0.02, jnp.float16)
+    length = jnp.full((8,), 48, jnp.int32)
+    wx = jax.random.normal(key, (16, 4, 2, 2, 16), jnp.float32)
+    r = jax.random.normal(key, (4, 2, 16, 16), jnp.float32) * 0.1
+    s0 = jnp.zeros((4, 2, 2, 16), jnp.float32)
+    return {
+        "q8_matmul": ((x8, w8), {}),
+        "fp16_matmul": ((xf, wf), {}),
+        "flash_attention": ((q, kv, kv), {"causal": True}),
+        "q8_decode_attention": ((dq, kq, ks, kq, ks, length), {}),
+        "slstm_scan": ((wx, r, s0), {}),
+    }
+
+
+def _host_backend(op) -> Optional[str]:
+    for b in op.host_order:
+        if b in op.backends:
+            return b
+    return None
+
+
+def check_registry(op_names: Optional[list[str]] = None) -> list[Finding]:
+    from repro.kernels import registry
+
+    out = []
+    for name in (op_names or registry.list_ops()):
+        op = registry.get_op(name)
+        host = _host_backend(op)
+        ok = host is not None
+        out.append(Finding(
+            check=CHECK_REG, subject=name, ok=ok,
+            detail=(f"host-servable via '{host}' backend" if ok else
+                    f"no host backend: host_order={op.host_order}, "
+                    f"registered={sorted(op.backends)}"),
+            data={"backends": sorted(op.backends),
+                  "host_backend": host}))
+    return out
+
+
+def check_footprint(config: StaticcheckConfig,
+                    op_names: Optional[list[str]] = None,
+                    reps: Optional[dict] = None) -> list[Finding]:
+    from repro.kernels import registry
+    from repro.kernels.api import current_context
+
+    reps = reps if reps is not None else representative_calls()
+    ctx = current_context()
+    out = []
+    for name in (op_names or registry.list_ops()):
+        if name not in reps:
+            continue
+        op = registry.get_op(name)
+        backend = _host_backend(op)
+        if backend is None:
+            continue  # SC-REG reports this
+        args, kwargs = reps[name]
+        spec = op.spec(*args, **kwargs)
+        fn = op.backends[backend]
+        measured = analyze_jit(lambda *a: fn(ctx, *a, **kwargs), *args)
+        a_flops = float(spec.flops)
+        a_bytes = spec_stream_bytes(spec)
+        rf = measured.flops / a_flops if a_flops else math.inf
+        rb = measured.bytes / a_bytes if a_bytes else math.inf
+        f_lo, f_hi = config.ratio_band(name, "flops_ratio")
+        b_lo, b_hi = config.ratio_band(name, "bytes_ratio")
+        ok = f_lo <= rf <= f_hi and b_lo <= rb <= b_hi
+        out.append(Finding(
+            check=CHECK_FOOT, subject=name, ok=ok,
+            detail=(f"[{backend}] measured/analytic flops {rf:.2f}x "
+                    f"(band [{f_lo}, {f_hi}]), bytes {rb:.2f}x "
+                    f"(band [{b_lo}, {b_hi}])"),
+            data={"backend": backend, "flops_ratio": rf,
+                  "bytes_ratio": rb,
+                  "analytic": {"flops": a_flops, "bytes": a_bytes,
+                               "spec": {"m": spec.m, "n": spec.n,
+                                        "k": spec.k,
+                                        "count": spec.count,
+                                        "dtype": spec.dtype}},
+                  "measured": {"flops": measured.flops,
+                               "bytes": measured.bytes}}))
+    return out

@@ -1,0 +1,138 @@
+"""Build and trace the serving hot path for static verification.
+
+The harness instantiates the same reduced whisper-tiny-en engine the
+dynamic tests use (``tests/test_decode_fused.py``) and *traces* — never
+executes — the four hot-path programs:
+
+* ``prefill``            — bucketed prompt prefill jit (pool donated)
+* ``decode_block``       — the fused multi-token decode tick (cache +
+                           lane state donated)
+* ``extend_cross_cache`` — streaming cross-K/V pool extension (pool
+                           donated)
+* ``frontend_gemm``      — the audio frontend's projection GEMM path
+
+Tracing with ``jitted.trace(*args)`` gives the jaxpr (complete with
+scan bodies) and, via ``.lower()``, the StableHLO text where donation
+appears as ``tf.aliasing_output`` parameter attributes. Nothing runs on
+device and no donated buffer is consumed, so one engine serves every
+check.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.models import build
+from repro.serving.engine import ServeEngine
+
+# Mirror tests/test_decode_fused.py's harness exactly: same model, same
+# pool geometry, so static verdicts and dynamic assertions cover the
+# same programs.
+N_SLOTS, MAX_LEN, ENC_LEN = 4, 64, 16
+DECODE_BLOCK, BUCKET, ENC_S = 2, 32, 8
+
+
+@dataclasses.dataclass
+class HotProgram:
+    """One traced hot-path program plus the static facts checks need."""
+
+    name: str
+    jaxpr: Any                 # ClosedJaxpr, scan/while bodies included
+    stablehlo: str             # lowered text with donation attributes
+    donated_leaves: int        # buffers jit was told to donate
+    cache_dtypes: tuple = ()   # storage dtypes of the donated pool
+    plane_dims: tuple = ()     # (n_slots, max_len, enc_len, head_dim)
+
+
+def build_engine(cache_dtype: str = "q8_0",
+                 arch: str = "whisper-tiny-en") -> ServeEngine:
+    cfg = reduced(get_config(arch))
+    model = build(cfg)
+    params = model.init_values(jax.random.key(0))
+    return ServeEngine(model, params, n_slots=N_SLOTS, max_len=MAX_LEN,
+                       enc_len=ENC_LEN, cache_dtype=cache_dtype,
+                       decode_block=DECODE_BLOCK)
+
+
+def _donated_leaves(args: tuple, argnums: tuple) -> int:
+    return len(jax.tree.leaves(tuple(args[i] for i in argnums)))
+
+
+def _trace(name: str, jitted, args: tuple, donate: tuple,
+           eng: Optional[ServeEngine] = None) -> HotProgram:
+    traced = jitted.trace(*args)
+    cache_dtypes = ()
+    plane_dims = ()
+    if eng is not None:
+        cache_dtypes = tuple(sorted({str(x.dtype) for x in
+                                     jax.tree.leaves(eng.cache)}))
+        plane_dims = (eng.n_slots, eng.max_len, eng.enc_len,
+                      eng.model.cfg.head_dim)
+    return HotProgram(name=name, jaxpr=traced.jaxpr,
+                      stablehlo=traced.lower().as_text(),
+                      donated_leaves=_donated_leaves(args, donate),
+                      cache_dtypes=cache_dtypes, plane_dims=plane_dims)
+
+
+def program_from_fn(name: str, fn, *args, donate: tuple = (),
+                    eng: Optional[ServeEngine] = None) -> HotProgram:
+    """Trace an arbitrary callable as a HotProgram — the hook the
+    seeded-violation test fixtures use."""
+    jitted = fn if hasattr(fn, "trace") else jax.jit(fn)
+    return _trace(name, jitted, args, donate, eng)
+
+
+def hot_programs(eng: ServeEngine,
+                 frontend: bool = True) -> list[HotProgram]:
+    """Trace the serving hot path of one engine. Program names carry
+    the cache dtype (``decode_block[q8_0]``) so the two pool layouts
+    report separately."""
+    tag = f"[{eng.cache_dtype}]"
+    cfg = eng.model.cfg
+    programs = []
+
+    # --- fused decode tick (the per-tick program) ---
+    dec = eng._decode_fn(DECODE_BLOCK)
+    dec_args = (eng.params, eng.cache, eng._tokens, eng._pos,
+                eng._lane_active, eng._lane_out, eng._enc_lens,
+                eng._lane_eos, eng._lane_max)
+    programs.append(_trace(f"decode_block{tag}", dec, dec_args,
+                           donate=(1, 2, 3, 4, 5), eng=eng))
+
+    # --- bucketed prefill (audio-frame input path) ---
+    pre = eng._prefill_fn(BUCKET, ENC_S)
+    toks = jax.ShapeDtypeStruct((1, BUCKET), jnp.int32)
+    frames = jax.ShapeDtypeStruct((1, ENC_S, cfg.d_model), jnp.float32)
+    programs.append(_trace(f"prefill{tag}", pre,
+                           (eng.params, eng.cache, toks, 4, 0, frames),
+                           donate=(1,), eng=eng))
+
+    # --- streaming cross-K/V pool extension ---
+    if eng.enc_dec:
+        s_new = 4
+        states = jax.ShapeDtypeStruct((1, s_new, cfg.d_model),
+                                      jnp.float32)
+        k_sds, v_sds = jax.eval_shape(eng._cross_kv, eng.params, states)
+        programs.append(_trace(f"extend_cross_cache{tag}", eng._extend,
+                               (eng.cache, k_sds, v_sds, 0, 0),
+                               donate=(0,), eng=eng))
+
+    # --- audio frontend projection GEMM ---
+    if frontend:
+        from repro.audio.features import FrontendConfig, mel_to_frames
+        fcfg = FrontendConfig()
+        d_model = cfg.d_model
+
+        def frontend_fn(logmel):
+            return mel_to_frames(logmel, d_model, fcfg)
+
+        mel = jax.ShapeDtypeStruct((4 * fcfg.stride, fcfg.n_mels),
+                                   jnp.float32)
+        programs.append(program_from_fn("frontend_gemm", frontend_fn,
+                                        mel))
+    return programs

@@ -1,0 +1,63 @@
+"""Shared jaxpr / StableHLO inspection helpers.
+
+The checks reason over two static artifacts per hot-path program:
+
+* the **jaxpr** (``jitted.trace(*args).jaxpr``) — a complete primitive
+  graph including every scan/while/cond body, which is where dtype
+  converts and callback primitives are visible; and
+* the **StableHLO text** (``traced.lower().as_text()``) — where jit
+  donation shows up as per-parameter ``tf.aliasing_output`` attributes
+  (XLA's ``input_output_aliases``), the same marker the dynamic tests
+  in ``tests/test_decode_fused.py`` assert on.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Iterator
+
+_ALIAS_ATTR = "tf.aliasing_output"
+# %argN ... tf.aliasing_output = M : i32 — nothing between an argument
+# and its attribute dict contains a '%', so [^%]* cannot cross into the
+# next parameter.
+_ALIAS_RE = re.compile(r"%arg(\d+):[^%]*?tf\.aliasing_output\s*=\s*(\d+)")
+
+
+def iter_eqns(jaxpr: Any, depth: int = 0) -> Iterator[tuple[Any, int]]:
+    """Yield ``(eqn, depth)`` for every equation in ``jaxpr`` and every
+    nested sub-jaxpr (scan/while/cond bodies, inner pjit calls)."""
+    inner = getattr(jaxpr, "jaxpr", jaxpr)  # ClosedJaxpr -> Jaxpr
+    for eqn in inner.eqns:
+        yield eqn, depth
+        for sub in sub_jaxprs(eqn):
+            yield from iter_eqns(sub, depth + 1)
+
+
+def sub_jaxprs(eqn: Any) -> list[Any]:
+    """Jaxprs nested in one equation's params (any primitive)."""
+    out = []
+    for v in eqn.params.values():
+        for x in (v if isinstance(v, (list, tuple)) else [v]):
+            if hasattr(x, "eqns") or hasattr(x, "jaxpr"):
+                out.append(x)
+    return out
+
+
+def alias_count(stablehlo_text: str) -> int:
+    """Number of entry parameters carrying a ``tf.aliasing_output``
+    attribute — i.e. donated buffers XLA will update in place."""
+    return stablehlo_text.count(_ALIAS_ATTR)
+
+
+def arg_aliases(stablehlo_text: str) -> dict[int, int]:
+    """{entry arg index -> aliased output index} from the StableHLO
+    main signature."""
+    return {int(m.group(1)): int(m.group(2))
+            for m in _ALIAS_RE.finditer(stablehlo_text)}
+
+
+def eqn_dtypes(eqn: Any) -> tuple[Any, Any, tuple]:
+    """(input dtype, output dtype, input shape) of a unary equation —
+    the slice ``convert_element_type`` checks need."""
+    aval = eqn.invars[0].aval
+    return aval.dtype, eqn.outvars[0].aval.dtype, tuple(aval.shape)

@@ -1,0 +1,88 @@
+"""SC-RECOMP — recompile stability: the serving jit caches must be
+keyed so that steady-state traffic never retraces.
+
+Three facts are verified on a live reduced engine:
+
+* the fused decode jit compiles exactly once and is hit by every
+  subsequent same-shape tick (``_cache_size() == 1`` after two calls);
+* the prefill cache is keyed ``(bucket, enc_s, from_states)``: asking
+  for a key twice returns the same function object, a new key adds
+  exactly one entry, and two same-shape prefill calls share one
+  executable;
+* the per-block decode cache (``_decode_fns``) is keyed by block size
+  the same way.
+
+A violation here means a tick or admission path retraces per call —
+the silent 100x serving regression this check exists to make loud.
+"""
+
+from __future__ import annotations
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+
+from repro.staticcheck.harness import BUCKET, DECODE_BLOCK, ENC_S
+from repro.staticcheck.report import Finding
+
+CHECK = "SC-RECOMP"
+
+
+def _copy(tree):
+    return jax.tree.map(jnp.array, tree)
+
+
+def _decode_args(eng):
+    return (eng.params, _copy(eng.cache), jnp.array(eng._tokens),
+            jnp.array(eng._pos), jnp.array(eng._lane_active),
+            jnp.array(eng._lane_out), eng._enc_lens, eng._lane_eos,
+            eng._lane_max)
+
+
+def check_recompile(eng) -> list[Finding]:
+    out = []
+    with warnings.catch_warnings():
+        # CPU has no donation support: jit warns per compile; the
+        # engine's own paths silence it the same way.
+        warnings.simplefilter("ignore")
+
+        # --- fused decode tick ---
+        fn = eng._decode_fn(DECODE_BLOCK)
+        same = fn is eng._decode_fn(DECODE_BLOCK)
+        jax.block_until_ready(fn(*_decode_args(eng)))
+        jax.block_until_ready(fn(*_decode_args(eng)))
+        n = fn._cache_size()
+        ok = same and n == 1
+        out.append(Finding(
+            check=CHECK, subject=f"decode_block[{eng.cache_dtype}]",
+            ok=ok,
+            detail=(f"2 ticks -> {n} compile(s); keyed lookup "
+                    f"{'stable' if same else 'UNSTABLE'}"),
+            data={"compiles": n, "keyed_lookup_stable": same}))
+
+        # --- prefill bucket grid ---
+        d_model = eng.model.cfg.d_model
+        n_keys0 = len(eng._prefill_fns)
+        pre = eng._prefill_fn(BUCKET, ENC_S)
+        same = pre is eng._prefill_fn(BUCKET, ENC_S)
+        grew = len(eng._prefill_fns) - n_keys0
+        toks = jnp.zeros((1, BUCKET), jnp.int32)
+        frames = jnp.zeros((1, ENC_S, d_model), jnp.float32)
+        jax.block_until_ready(
+            pre(eng.params, _copy(eng.cache), toks, 4, 0, frames))
+        jax.block_until_ready(
+            pre(eng.params, _copy(eng.cache), toks, 5, 1, frames))
+        n = pre._cache_size()
+        # a second bucket is a new key — exactly one
+        eng._prefill_fn(BUCKET // 2, ENC_S)
+        grew2 = len(eng._prefill_fns) - n_keys0 - grew
+        ok = same and n == 1 and grew <= 1 and grew2 == 1
+        out.append(Finding(
+            check=CHECK, subject=f"prefill[{eng.cache_dtype}]", ok=ok,
+            detail=(f"2 same-bucket admits -> {n} compile(s); "
+                    f"+{grew2} cache key for a new bucket"),
+            data={"compiles": n, "keyed_lookup_stable": same,
+                  "new_keys_same_bucket": grew,
+                  "new_keys_new_bucket": grew2}))
+    return out

@@ -1,0 +1,103 @@
+"""Orchestration: build the hot-path harness once, run every check,
+apply waivers, return one ``Report``.
+
+Check inventory (IDs are stable — docs, waivers, CI and the JSON
+report all key on them):
+
+==========  ==============================================================
+SC-DON      every donated hot-path buffer is aliased in-place (no copy)
+SC-SYNC     no hidden host transfer inside a compiled hot-path program
+SC-AST      source scan: host-sync calls outside the whitelisted inventory
+SC-DTYPE    no plane-sized f32 upcast of q8_0/bf16 cache pools
+SC-RECOMP   jit caches stable across ticks / admissions / bucket grid
+SC-FOOT     registry analytic flops/bytes match the compiled HLO cost
+SC-REG      every kernel op is host-servable (backend chain complete)
+==========  ==============================================================
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.staticcheck.config import StaticcheckConfig, repo_root
+from repro.staticcheck.donation import check_donation
+from repro.staticcheck.dtypeplanes import check_dtype_planes
+from repro.staticcheck.footprint import check_footprint, check_registry
+from repro.staticcheck.recompile import check_recompile
+from repro.staticcheck.report import Finding, Report
+from repro.staticcheck.syncpoints import check_ast_syncs, \
+    check_program_sync
+
+ALL_CHECKS = ("SC-DON", "SC-SYNC", "SC-AST", "SC-DTYPE", "SC-RECOMP",
+              "SC-FOOT", "SC-REG")
+# checks that need traced hot-path programs / a live engine
+_PROGRAM_CHECKS = {"SC-DON", "SC-SYNC", "SC-DTYPE"}
+
+
+def apply_waivers(findings: list[Finding],
+                  config: StaticcheckConfig) -> list[Finding]:
+    for f in findings:
+        if f.ok:
+            continue
+        w = config.waiver_for(f.check, f.subject)
+        if w is not None:
+            f.waived = True
+            f.waiver_reason = w.reason
+    return findings
+
+
+def run_all(config: Optional[StaticcheckConfig] = None,
+            only: Optional[set] = None,
+            cache_dtypes: tuple = ("q8_0", "bf16"),
+            root: Optional[str] = None) -> Report:
+    """Run the selected checks (default: all) and return the Report.
+    ``only`` is a set of check IDs; unknown IDs raise."""
+    config = config or StaticcheckConfig.load()
+    selected = set(only) if only else set(ALL_CHECKS)
+    unknown = selected - set(ALL_CHECKS)
+    if unknown:
+        raise ValueError(f"unknown check IDs: {sorted(unknown)} "
+                         f"(known: {list(ALL_CHECKS)})")
+    root = root or repo_root()
+    findings: list[Finding] = []
+
+    engines = []
+    if selected & (_PROGRAM_CHECKS | {"SC-RECOMP"}):
+        from repro.staticcheck.harness import build_engine, hot_programs
+        engines = [build_engine(cd) for cd in cache_dtypes]
+
+    if selected & _PROGRAM_CHECKS:
+        programs = []
+        for i, eng in enumerate(engines):
+            # one frontend trace is enough — it has no cache planes
+            programs.extend(hot_programs(eng, frontend=(i == 0)))
+        if "SC-DON" in selected:
+            findings.extend(check_donation(programs))
+        if "SC-SYNC" in selected:
+            findings.extend(check_program_sync(programs))
+        if "SC-DTYPE" in selected:
+            findings.extend(check_dtype_planes(programs))
+    if "SC-AST" in selected:
+        findings.extend(check_ast_syncs(root))
+    if "SC-RECOMP" in selected:
+        for eng in engines:
+            findings.extend(check_recompile(eng))
+    if "SC-FOOT" in selected:
+        findings.extend(check_footprint(config))
+    if "SC-REG" in selected:
+        findings.extend(check_registry())
+
+    apply_waivers(findings, config)
+    return Report(findings)
+
+
+def bench_record() -> dict:
+    """The invariant slice ``BENCH_platforms.json`` carries: the cheap
+    static checks (no engine execution, no footprint compiles) plus the
+    per-function verdict map."""
+    rep = run_all(only={"SC-DON", "SC-SYNC", "SC-AST", "SC-DTYPE",
+                        "SC-REG"})
+    d = rep.to_dict()
+    return {"ok": d["ok"], "checks": d["checks"],
+            "failed_checks": d["failed_checks"],
+            "functions": d["functions"]}

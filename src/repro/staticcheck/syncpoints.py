@@ -1,0 +1,157 @@
+"""SC-SYNC / SC-AST — the sync-point budget.
+
+The serving loop's contract (PR 5/6) is *exactly one* host sync per
+fused decode tick: the single ``jax.device_get`` in
+``ServeEngine.step_fetch``. Two static passes keep that true:
+
+* **SC-SYNC** — the compiled per-tick programs must contain no hidden
+  host transfer: no callback primitives in any jaxpr (scan/while bodies
+  included) and no host callback custom-calls / infeed / outfeed in the
+  lowered text. Anything that round-trips to Python mid-program would
+  serialize the device pipeline.
+
+* **SC-AST** — a source-level scan of ``serving/``, ``gateway/`` and
+  ``models/`` for host-sync-inducing calls: ``float(x)``,
+  ``np.asarray``/``np.array``, ``.block_until_ready()``,
+  ``jax.device_get``. Every hit must either be in the built-in sync
+  inventory (the one per-tick fetch) or carry a reviewed waiver in
+  ``staticcheck.toml``.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+
+from repro.staticcheck.harness import HotProgram
+from repro.staticcheck.jaxpr_utils import iter_eqns
+from repro.staticcheck.report import Finding
+
+CHECK_PROGRAM = "SC-SYNC"
+CHECK_AST = "SC-AST"
+
+# Primitives that re-enter Python / the host from inside a traced
+# program (jax names across versions; matched by exact name or a
+# "callback" substring).
+_SYNC_PRIMITIVES = {"infeed", "outfeed", "io_callback", "pure_callback",
+                    "callback", "debug_callback", "python_callback"}
+# Lowered-text markers of the same (host callbacks lower to
+# custom_call @xla_python_*_callback; infeed/outfeed lower to their ops)
+_SYNC_TEXT = ("callback", "stablehlo.infeed", "stablehlo.outfeed")
+
+# The whitelisted sync inventory: sites that ARE the sync budget. Each
+# entry is (path suffix, qualname, call).
+SYNC_INVENTORY = [
+    ("serving/engine.py", "ServeEngine.step_fetch", "jax.device_get"),
+]
+
+SCAN_DIRS = ("src/repro/serving", "src/repro/gateway", "src/repro/models")
+
+
+def check_program_sync(programs: list[HotProgram]) -> list[Finding]:
+    out = []
+    for prog in programs:
+        hits = []
+        for eqn, depth in iter_eqns(prog.jaxpr):
+            name = eqn.primitive.name
+            if name in _SYNC_PRIMITIVES or "callback" in name:
+                hits.append(f"{name} (depth {depth})")
+        for marker in _SYNC_TEXT:
+            if marker == "callback":
+                if "custom_call" in prog.stablehlo and \
+                        "callback" in prog.stablehlo:
+                    hits.append("custom_call callback in lowered text")
+            elif marker in prog.stablehlo:
+                hits.append(marker)
+        ok = not hits
+        out.append(Finding(
+            check=CHECK_PROGRAM, subject=prog.name, ok=ok,
+            detail=("no host transfer inside the compiled program"
+                    if ok else "hidden host transfer: "
+                    + "; ".join(sorted(set(hits)))),
+            data={"hits": sorted(set(hits))}))
+    return out
+
+
+# ---------------------------------------------------------------- AST pass
+
+class _SyncCallScanner(ast.NodeVisitor):
+    def __init__(self):
+        self.stack: list[str] = []
+        self.hits: list[tuple[int, str, str]] = []  # (line, qualname, call)
+
+    def _qual(self) -> str:
+        return ".".join(self.stack) or "<module>"
+
+    def visit_ClassDef(self, node):
+        self.stack.append(node.name)
+        self.generic_visit(node)
+        self.stack.pop()
+
+    def visit_FunctionDef(self, node):
+        self.stack.append(node.name)
+        self.generic_visit(node)
+        self.stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Call(self, node):
+        call = _classify_call(node.func)
+        if call is not None:
+            self.hits.append((node.lineno, self._qual(), call))
+        self.generic_visit(node)
+
+
+def _classify_call(func: ast.expr):
+    if isinstance(func, ast.Name) and func.id == "float":
+        return "float"
+    if isinstance(func, ast.Attribute):
+        if func.attr == "block_until_ready":
+            return ".block_until_ready"
+        if isinstance(func.value, ast.Name):
+            base = func.value.id
+            if base in ("np", "numpy") and func.attr in ("asarray",
+                                                         "array"):
+                return f"np.{func.attr}"
+            if base == "jax" and func.attr == "device_get":
+                return "jax.device_get"
+    return None
+
+
+def scan_source(path: str, src: str, relpath: str = "") -> list[Finding]:
+    """Scan one module's source for host-sync-inducing calls. Inventory
+    sites report ok; everything else is a violation until waived."""
+    rel = relpath or path
+    tree = ast.parse(src, filename=path)
+    scanner = _SyncCallScanner()
+    scanner.visit(tree)
+    out = []
+    for line, qual, call in scanner.hits:
+        inventoried = any(
+            rel.endswith(suffix) and qual == q and call == c
+            for suffix, q, c in SYNC_INVENTORY)
+        subject = f"{rel}:{qual}:{call}"
+        out.append(Finding(
+            check=CHECK_AST, subject=subject, ok=inventoried,
+            detail=(f"line {line}: {call}() "
+                    + ("— whitelisted sync inventory" if inventoried
+                       else "outside the sync inventory")),
+            data={"line": line, "call": call}))
+    return out
+
+
+def check_ast_syncs(root: str) -> list[Finding]:
+    out = []
+    for d in SCAN_DIRS:
+        full = os.path.join(root, d)
+        if not os.path.isdir(full):
+            continue
+        for dirpath, _dirs, files in os.walk(full):
+            for fname in sorted(files):
+                if not fname.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, fname)
+                rel = os.path.relpath(path, root)
+                with open(path, "r") as fh:
+                    out.extend(scan_source(path, fh.read(), rel))
+    return out

@@ -26,7 +26,6 @@ import signal
 import time
 from typing import Any, Callable, Optional
 
-import jax
 import numpy as np
 
 from repro.checkpoint.store import CheckpointManager

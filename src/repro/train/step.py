@@ -17,9 +17,7 @@ error-feedback compressed all-reduce (parallel.collectives) inside a
 
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,10 +25,10 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs import ArchConfig
 from repro.kernels.api import grad_safe_context, use_context
-from repro.models.model import Model, input_specs, SHAPES
+from repro.models.model import Model, input_specs
 from repro.optim import adamw
 from repro.parallel.sharding import (enforce_divisibility, logical_context,
-                                     rules_for, spec_for, tree_shardings)
+                                     spec_for, tree_shardings)
 
 TrainState = dict  # {"params": tree, "opt": {m, v, step}}
 

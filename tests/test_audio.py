@@ -16,7 +16,7 @@ from repro.audio.transcribe import transcribe
 from repro.configs import get_config, reduced
 from repro.models import encdec
 from repro.models.model import build
-from repro.serving.engine import (AudioRequest, Request, ServeEngine,
+from repro.serving.engine import (AudioRequest, ServeEngine,
                                   StreamingAudioRequest)
 from repro.serving.scheduler import BatchScheduler
 

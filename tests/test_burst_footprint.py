@@ -6,9 +6,8 @@ pytest.importorskip("hypothesis", reason="property tests need hypothesis "
                     "(pip install -e .[test])")
 from hypothesis import given, settings, strategies as st
 
-from repro.core.burst import (burst_cost, offload_rate, optimal_burst,
-                              split_burst)
-from repro.core.footprint import (LMM_LIMITS, block_vmem_bytes, coverage_cdf,
+from repro.core.burst import offload_rate, optimal_burst, split_burst
+from repro.core.footprint import (block_vmem_bytes, coverage_cdf,
                                   kernel_footprint, select_blocks)
 from repro.core.workload import (WHISPER_TINY, WHISPER_BASE, WHISPER_SMALL,
                                  k_length_histogram, whisper_workload)

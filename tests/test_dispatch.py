@@ -9,7 +9,7 @@ import pytest
 from repro.core.offload import offload_decision, plan_offload
 from repro.core.quantize import quantize_q8_0, quantize_tree
 from repro.core.workload import WHISPER_TINY, whisper_workload
-from repro.kernels import api, registry
+from repro.kernels import registry
 from repro.kernels.api import (DispatchContext, decide, dispatch,
                                dispatch_counters, dispatch_trace,
                                reset_dispatch_log, use_context)
@@ -228,7 +228,6 @@ def test_mm_q8_backend_sweep(backend):
     from repro.models.layers import mm
     x, wq = _q8_operands(m=5, k=96, n=64)    # ragged M + C2 residual K
     got = mm(x, wq, jnp.float32)
-    want = None
     with use_context(_force(backend)):
         got_b = mm(x, wq, jnp.float32)
     np.testing.assert_allclose(np.asarray(got_b), np.asarray(got),

@@ -2,7 +2,6 @@
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.analysis.hlo import analyze_hlo, _shape_bytes, _shape_dims
@@ -81,7 +80,8 @@ def test_gather_bytes_sparse():
 
 
 def test_collectives_detected_in_subprocess():
-    import subprocess, sys
+    import subprocess
+    import sys
     code = """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"

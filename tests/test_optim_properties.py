@@ -2,7 +2,6 @@
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis", reason="property tests need hypothesis "
@@ -37,8 +36,6 @@ def test_update_moves_against_gradient(seed, lr):
 @given(st.floats(0.1, 10.0))
 def test_clip_bounds_effective_norm(scale):
     """With clip_norm=1, the applied gradient has norm <= 1 (+eps)."""
-    cfg = AdamWConfig(lr=1.0, warmup_steps=0, clip_norm=1.0,
-                      weight_decay=0.0)
     p = _params(0)
     g = jax.tree.map(lambda x: x * scale, p)
     gnorm = float(global_norm(g))

@@ -85,7 +85,7 @@ def test_interleaved_admission_does_not_corrupt():
     """A request admitted mid-decode of others produces the same tokens
     as one decoded alone — the cache-isolation property."""
     cfg, model, params, eng = _engine()
-    st0 = eng.admit(Request(uid=0, tokens=[5, 6, 7], max_new=6, eos_id=-2))
+    eng.admit(Request(uid=0, tokens=[5, 6, 7], max_new=6, eos_id=-2))
     eng.step()
     eng.step()
     st1 = eng.admit(Request(uid=1, tokens=[8, 9, 10, 11], max_new=4,
@@ -103,7 +103,7 @@ def test_interleaved_admission_does_not_corrupt():
 
 def test_eos_stops_early():
     cfg, model, params, eng = _engine()
-    st = eng.admit(Request(uid=0, tokens=[5, 6, 7], max_new=50, eos_id=-2))
+    eng.admit(Request(uid=0, tokens=[5, 6, 7], max_new=50, eos_id=-2))
     want = _greedy_reference(model, params, [5, 6, 7], 3)
     eos = want[1]
     st2 = eng.admit(Request(uid=1, tokens=[5, 6, 7], max_new=50, eos_id=eos))

@@ -64,10 +64,6 @@ def test_spec_for_drops_duplicate_axis():
 
 
 def test_enforce_divisibility_drops_uneven():
-    import jax
-    import jax.numpy as jnp
-    from jax.sharding import NamedSharding
-    from repro.parallel.sharding import enforce_divisibility
     # real (single-device) mesh of size 1 divides everything; use a fake
     # spec check instead via the pure helper on a 4-device forced mesh
     code = """

@@ -1,0 +1,259 @@
+"""repro.staticcheck: the clean tree passes every invariant, and each
+seeded violation class (un-donated pool, hidden host callback, f32 leak
+in a q8 plane path, backend-less kernel op, footprint drift) is caught
+under its check ID. Static verdicts for prefill / fused decode /
+cross-cache-extend must agree with the dynamic assertions in
+``tests/test_decode_fused.py``."""
+
+import json
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import registry
+from repro.kernels.registry import KernelOp
+from repro.core.workload import KernelSpec
+from repro.staticcheck import StaticcheckConfig, run_all
+from repro.staticcheck.config import Waiver, _pattern_match
+from repro.staticcheck.donation import check_donation
+from repro.staticcheck.dtypeplanes import check_dtype_planes
+from repro.staticcheck.footprint import check_footprint, check_registry
+from repro.staticcheck.harness import HotProgram
+from repro.staticcheck.report import Report
+from repro.staticcheck.run import apply_waivers
+from repro.staticcheck.syncpoints import check_program_sync, scan_source
+
+PLANE_DIMS = (4, 64, 16, 32)   # harness pool: n_slots, max_len, enc_len, dh
+
+
+def _prog(name, fn, *args, donate=(), plane_dims=(), cache_dtypes=()):
+    jitted = fn if hasattr(fn, "trace") else jax.jit(fn)
+    traced = jitted.trace(*args)
+    leaves = len(jax.tree.leaves(tuple(args[i] for i in donate)))
+    return HotProgram(name=name, jaxpr=traced.jaxpr,
+                      stablehlo=traced.lower().as_text(),
+                      donated_leaves=leaves, cache_dtypes=cache_dtypes,
+                      plane_dims=plane_dims)
+
+
+# ------------------------------------------------------------- clean tree
+
+@pytest.fixture(scope="module")
+def clean_report() -> Report:
+    return run_all()
+
+
+def test_clean_tree_passes(clean_report):
+    assert clean_report.ok, clean_report.human()
+    assert clean_report.failed_checks() == []
+
+
+def test_verdicts_match_dynamic_decode_tests(clean_report):
+    """The static verdicts must assert exactly what the dynamic tests
+    in test_decode_fused.py / test_serving.py observe at runtime:
+    donated+aliased pools, one-sync ticks, intact dtype planes for
+    prefill, the fused decode tick, and the cross-cache extension."""
+    funcs = clean_report.function_verdicts()
+    for dt in ("q8_0", "bf16"):
+        for fn in ("prefill", "decode_block", "extend_cross_cache"):
+            v = funcs[f"{fn}[{dt}]"]
+            assert v["donation"] is True, (fn, dt, v)
+            assert v["sync_free"] is True, (fn, dt, v)
+            assert v["dtype_planes"] is True, (fn, dt, v)
+    assert funcs["frontend_gemm"]["sync_free"] is True
+
+
+def test_waivers_are_exercised(clean_report):
+    """Every waiver in staticcheck.toml matches at least one finding —
+    a dead waiver is a stale exception that must be pruned."""
+    cfg = StaticcheckConfig.load()
+    assert cfg.waivers, "expected reviewed waivers in staticcheck.toml"
+    subjects = [(f.check, f.subject) for f in clean_report.findings]
+    for w in cfg.waivers:
+        assert any(w.matches(c, s) for c, s in subjects), \
+            f"dead waiver: {w}"
+
+
+# ------------------------------------------------- seeded violations
+
+def test_seeded_undonated_pool_fails_sc_don():
+    pool = {"k": jnp.zeros((4, 64, 2, 32), jnp.bfloat16),
+            "v": jnp.zeros((4, 64, 2, 32), jnp.bfloat16)}
+    # jit WITHOUT donate_argnums: the pool comes back as a copy
+    bad = _prog("bad_prefill",
+                jax.jit(lambda p, x: jax.tree.map(lambda a: a + x, p)),
+                pool, jnp.bfloat16(1.0), donate=(0,))
+    findings = check_donation([bad])
+    assert [f.check for f in findings] == ["SC-DON"]
+    assert not findings[0].ok
+    assert findings[0].data["aliased"] == 0
+
+
+def test_seeded_hidden_callback_fails_sc_sync():
+    from jax.experimental import io_callback
+
+    def tick(x):
+        # a hidden device->host round trip inside the per-tick program
+        y = io_callback(lambda v: v, jax.ShapeDtypeStruct(x.shape,
+                                                          x.dtype), x)
+        return y * 2
+
+    bad = _prog("bad_tick", tick, jnp.ones((4,), jnp.float32))
+    (f,) = check_program_sync([bad])
+    assert f.check == "SC-SYNC" and not f.ok
+    assert "callback" in f.detail
+
+
+def test_seeded_device_get_in_tick_fails_sc_ast():
+    src = textwrap.dedent("""
+        import jax
+
+        class Engine:
+            def tick(self, x):
+                t = jax.device_get(x)
+                return float(t)
+    """)
+    findings = scan_source("fake.py", src, "src/repro/serving/fake.py")
+    bad = {(f.data["call"], f.ok) for f in findings}
+    assert ("jax.device_get", False) in bad
+    assert ("float", False) in bad
+
+
+def test_inventoried_sync_site_passes_sc_ast():
+    src = textwrap.dedent("""
+        import jax
+
+        class ServeEngine:
+            def step_fetch(self, pending):
+                return jax.device_get(pending)
+    """)
+    findings = scan_source("engine.py", src, "src/repro/serving/engine.py")
+    (f,) = findings
+    assert f.ok and "inventory" in f.detail
+
+
+def test_seeded_f32_plane_leak_fails_sc_dtype():
+    plane = jnp.zeros((16, 64, 32), jnp.int8)   # flattened q8 pool plane
+    bad = _prog("bad_q8_read", lambda p: p.astype(jnp.float32).sum(),
+                plane, plane_dims=PLANE_DIMS, cache_dtypes=("int8",))
+    (f,) = check_dtype_planes([bad])
+    assert f.check == "SC-DTYPE" and not f.ok
+    assert "int8" in f.subject
+
+
+def test_small_activation_upcast_passes_sc_dtype():
+    x = jnp.zeros((4, 32), jnp.bfloat16)   # per-token activation
+    good = _prog("activation", lambda a: a.astype(jnp.float32) * 2, x,
+                 plane_dims=PLANE_DIMS, cache_dtypes=("bfloat16",))
+    (f,) = check_dtype_planes([good])
+    assert f.ok
+
+
+def test_seeded_backendless_op_fails_sc_reg():
+    op = KernelOp(
+        name="test_pallas_only",
+        spec=lambda x: KernelSpec("test_pallas_only", m=1, n=1, k=1,
+                                  dtype="f32"),
+        backends={"pallas": lambda ctx, x: x})
+    registry.register(op)
+    try:
+        (f,) = check_registry(["test_pallas_only"])
+        assert f.check == "SC-REG" and not f.ok
+        assert "no host backend" in f.detail
+    finally:
+        registry._REGISTRY.pop("test_pallas_only")
+
+
+def test_seeded_footprint_drift_fails_sc_foot():
+    # spec claims 500x the flops the backend executes: outside any band
+    op = KernelOp(
+        name="test_bloated_gemm",
+        spec=lambda x, w: KernelSpec(
+            "test_bloated_gemm", m=x.shape[0], n=w.shape[1],
+            k=x.shape[1], dtype="f32", count=500),
+        backends={"xla": lambda ctx, x, w: x @ w})
+    registry.register(op)
+    try:
+        x = jnp.ones((8, 64), jnp.float32)
+        w = jnp.ones((64, 32), jnp.float32)
+        (f,) = check_footprint(StaticcheckConfig(),
+                               op_names=["test_bloated_gemm"],
+                               reps={"test_bloated_gemm": ((x, w), {})})
+        assert f.check == "SC-FOOT" and not f.ok
+        assert f.data["flops_ratio"] < 0.01
+    finally:
+        registry._REGISTRY.pop("test_bloated_gemm")
+
+
+def test_waiver_turns_violation_into_pass():
+    pool = {"k": jnp.zeros((8, 8), jnp.float32)}
+    bad = _prog("waived_prog",
+                jax.jit(lambda p: jax.tree.map(lambda a: a + 1, p)),
+                pool, donate=(0,))
+    findings = check_donation([bad])
+    assert not findings[0].ok
+    cfg = StaticcheckConfig(waivers=[
+        Waiver("SC-DON", "waived_prog", "seeded-violation test")])
+    rep = Report(apply_waivers(findings, cfg))
+    assert rep.ok
+    assert rep.findings[0].waived
+    assert rep.findings[0].waiver_reason == "seeded-violation test"
+
+
+def test_pattern_match_is_literal_with_star():
+    assert _pattern_match("prefill[q8_0]:bfloat16*", "prefill[q8_0]:bfloat16(2, 1, 64, 2, 32)")
+    assert not _pattern_match("prefill[q8_0]:*", "prefill[x]:foo")
+    assert not _pattern_match("a.b", "axb")
+
+
+# ------------------------------------------------------------------ CLI
+
+def test_cli_fast_checks_json_roundtrip():
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.staticcheck",
+         "--only", "SC-AST,SC-REG", "--json", "-"],
+        capture_output=True, text=True)
+    assert out.returncode == 0, out.stderr
+    doc = json.loads(out.stdout)
+    assert doc["ok"] is True
+    assert doc["checks"]["SC-AST"] is True
+    assert doc["checks"]["SC-REG"] is True
+
+
+def test_cli_rejects_unknown_check_id():
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.staticcheck", "--only", "SC-NOPE"],
+        capture_output=True, text=True)
+    assert out.returncode != 0
+
+
+# --------------------------------------------- xla q8 backend numerics
+
+def test_q8_decode_attention_xla_close_to_ref():
+    """The bf16-dequant xla backend (what host serving now routes) stays
+    within the Q8 error envelope of the f32 ref oracle."""
+    from repro.core.quantize import quantize_q8_0
+    from repro.kernels.q8_attention.ref import q8_decode_attention_ref
+    from repro.kernels.q8_attention.xla import q8_decode_attention_xla
+
+    key = jax.random.key(3)
+    bh, s, d = 4, 64, 32
+    q = jax.random.normal(jax.random.fold_in(key, 0), (bh, 1, d),
+                          jnp.bfloat16)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (bh, s, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (bh, s, d))
+    kt, vt = quantize_q8_0(k, axis=-1), quantize_q8_0(v, axis=-1)
+    lens = jnp.asarray([5, 33, 64, 1], jnp.int32)
+    got = q8_decode_attention_xla(q, kt.q, kt.scale, vt.q, vt.scale,
+                                  lens)
+    want = q8_decode_attention_ref(q, kt.q, kt.scale, vt.q, vt.scale,
+                                   lens)
+    assert got.dtype == q.dtype
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=0.06, atol=0.06)
