@@ -8,6 +8,15 @@ through a ``cache_dtype="q8_0"`` pool must cut that stream to
 ``kernels.q8_attention.ops.cache_traffic_ratio()`` ≈ 0.53x of bf16
 (int8 planes + one f16 scale per 32-element block), while routing the
 cache matvec through the dispatched ``q8_decode_attention`` op.
+
+The paged section serves the same workload through a ``paged=True``
+engine (``repro.paging``): per-lane cache bytes are then the lane's
+*mapped pages* — actual request extents, not ``n_slots x max_len``
+pool padding — so ``bytes_per_step`` (and the energy model's decode
+LOAD term) prices resident bytes. The mid-serve snapshot records pages
+in use, fragmentation (allocated-but-unfilled page tail fraction), and
+the copy-on-write prefix-share hit rate for the shared anchor prompt +
+repeated audio.
 """
 
 import time
@@ -26,28 +35,51 @@ from repro.serving.scheduler import BatchScheduler
 N_REQUESTS = 8
 MAX_NEW = 8
 ENC_FRAMES = 12
+PAGE_SIZE = 8
+# the Whisper-style anchor prompt every request starts with — one full
+# page, so paged lanes with the same audio physically share it (COW)
+ANCHOR = [11, 12, 13, 14, 15, 16, 17, 18]
 
 
-def _serve(model, params, cfg, cache_dtype: str) -> dict:
+def _workload(cfg):
+    """(tokens, frames) per request: shared anchor prefix + distinct
+    tails; two distinct audio contents repeated across requests so the
+    paged engine's prefix store sees cross-KV (and anchor-page) hits."""
+    rng = np.random.default_rng(0)
+    audio = [rng.standard_normal(
+        (ENC_FRAMES, cfg.d_model)).astype(np.float32) * 0.5
+        for _ in range(2)]
+    reqs = []
+    for uid in range(N_REQUESTS):
+        n_tail = int(rng.integers(2, 12))
+        toks = ANCHOR + rng.integers(3, cfg.vocab, n_tail).tolist()
+        reqs.append((toks, audio[uid % 2]))
+    return reqs
+
+
+def _serve(model, params, cfg, cache_dtype: str,
+           paged: bool = False) -> dict:
     reset_dispatch_log()
     engine = ServeEngine(model, params, n_slots=4, max_len=64,
-                         enc_len=16, cache_dtype=cache_dtype)
+                         enc_len=16, cache_dtype=cache_dtype,
+                         paged=paged, page_size=PAGE_SIZE)
     sched = BatchScheduler(engine)
-    rng = np.random.default_rng(0)
-    for uid in range(N_REQUESTS):
-        n = int(rng.integers(4, 24))
-        frames = rng.standard_normal(
-            (ENC_FRAMES, cfg.d_model)).astype(np.float32) * 0.5
-        sched.submit(AudioRequest(
-            uid=uid, tokens=rng.integers(3, cfg.vocab, n).tolist(),
-            max_new=MAX_NEW, eos_id=-1, enc_frames=frames))
+    for uid, (toks, frames) in enumerate(_workload(cfg)):
+        sched.submit(AudioRequest(uid=uid, tokens=toks, max_new=MAX_NEW,
+                                  eos_id=-1, enc_frames=frames))
     t0 = time.monotonic()
+    # a few hand ticks first: the mid-serve cache snapshot must see
+    # resident lanes (after the drain every page is back on the free
+    # list and bytes_per_step would read 0)
+    for _ in range(2):
+        sched.tick()
+    mid = engine.cache_report()
     sched.run_until_drained()
     dt = time.monotonic() - t0
     rep = engine.dispatch_report()
     toks = sum(len(st.out) for st in sched.results.values())
     return {
-        "cache": rep["cache"],
+        "cache": mid,
         "counters": rep["counters"],
         "ticks": sched.metrics.ticks,
         "tokens": toks,
@@ -62,29 +94,52 @@ def run():
     params = model.init_values(jax.random.key(0))
 
     res = {dt: _serve(model, params, cfg, dt) for dt in ("bf16", "q8_0")}
+    paged = _serve(model, params, cfg, "bf16", paged=True)
     rb, rq = res["bf16"]["cache"], res["q8_0"]["cache"]
     ratio = rq["bytes_per_step"] / rb["bytes_per_step"]
     q8_calls = sum(n for (op, _, _), n in res["q8_0"]["counters"].items()
                    if op == "q8_decode_attention")
     agree = sum(a == b for a, b in zip(res["bf16"]["out"].values(),
                                        res["q8_0"]["out"].values()))
+    paged_calls = sum(n for (op, _, _), n in paged["counters"].items()
+                      if op == "paged_decode_attention")
+    paged_agree = sum(a == b for a, b in zip(res["bf16"]["out"].values(),
+                                             paged["out"].values()))
+    pg = paged["cache"]["paging"]
+    paged_ratio = (paged["cache"]["bytes_per_step"]
+                   / rb["bytes_per_step"])
 
     lines = [
         "decode cache traffic: whisper-tiny.en (reduced), "
         f"{N_REQUESTS} audio requests x {MAX_NEW} new tokens",
-        f"{'cache':8s} {'KV bytes/step':>14s} {'KV B/tok':>9s} "
+        f"{'cache':10s} {'KV bytes/step':>14s} {'KV B/tok':>9s} "
         f"{'ticks':>6s} {'tok/s':>8s}",
     ]
     for dt in ("bf16", "q8_0"):
         c = res[dt]["cache"]
         lines.append(
-            f"{dt:8s} {c['bytes_per_step']:14d} "
+            f"{dt:10s} {c['bytes_per_step']:14d} "
             f"{c['self_kv_bytes_per_token']:9d} "
             f"{res[dt]['ticks']:6d} {res[dt]['tok_per_s']:8.1f}")
+    c = paged["cache"]
+    lines.append(
+        f"{'bf16/paged':10s} {c['bytes_per_step']:14d} "
+        f"{c['self_kv_bytes_per_token']:9d} "
+        f"{paged['ticks']:6d} {paged['tok_per_s']:8.1f}")
     lines.append(f"q8_0 / bf16 cache bytes/step: {ratio:.4f}x "
                  f"(paper C1 LOAD: {cache_traffic_ratio():.4f}x)")
+    lines.append(f"paged / slot cache bytes/step: {paged_ratio:.4f}x "
+                 f"(resident pages only, mid-serve)")
     lines.append(f"greedy outputs identical for {agree}/{N_REQUESTS} "
                  "requests (Q8 rounding can flip near-ties)")
+    lines.append(
+        f"paging: self {pg['self']['pages_in_use']}/"
+        f"{pg['self']['n_pages'] - 1} pages "
+        f"({pg['self']['fragmentation']:.1%} frag), cross "
+        f"{pg['cross']['pages_in_use']}/{pg['cross']['n_pages'] - 1} "
+        f"({pg['cross']['fragmentation']:.1%} frag), prefix hit rate "
+        f"self {pg['prefix']['self']['hit_rate']:.2f} / cross "
+        f"{pg['prefix']['cross']['hit_rate']:.2f}")
 
     checks = {
         "q8 cache stream ~0.53x of bf16":
@@ -95,6 +150,26 @@ def run():
             and len(res["q8_0"]["out"]) == N_REQUESTS,
         "q8/bf16 greedy agreement": f"{agree}/{N_REQUESTS}",
         "q8 tok/s": f"{res['q8_0']['tok_per_s']:.1f}",
+        # ---- paged pool (repro.paging) -------------------------------
+        "paged tokens identical to slot pool":
+            paged_agree == N_REQUESTS,
+        "paged decode routes paged_decode_attention": paged_calls > 0,
+        "paged bytes/step prices resident pages only":
+            0 < paged["cache"]["bytes_per_step"]
+            < rb["bytes_per_step"],
+        "paged prefix sharing observed":
+            pg["prefix"]["self"]["hits"] > 0
+            and pg["prefix"]["cross"]["hits"] > 0,
+        "paged_bytes_per_step_ratio": f"{paged_ratio:.4f}",
+        "paging": {
+            "self_pages_in_use": pg["self"]["pages_in_use"],
+            "cross_pages_in_use": pg["cross"]["pages_in_use"],
+            "self_fragmentation": round(pg["self"]["fragmentation"], 4),
+            "cross_fragmentation": round(pg["cross"]["fragmentation"], 4),
+            "prefix_hit_rate_self": pg["prefix"]["self"]["hit_rate"],
+            "prefix_hit_rate_cross": pg["prefix"]["cross"]["hit_rate"],
+            "resident_kv_bytes": pg["resident_kv_bytes"],
+        },
     }
     return "\n".join(lines), checks
 

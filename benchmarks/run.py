@@ -63,6 +63,7 @@ def platforms_record(module_checks: dict) -> dict:
     asr_checks = module_checks.get("benchmarks.e2e_asr", {})
     tp_checks = module_checks.get("benchmarks.decode_throughput", {})
     sl_checks = module_checks.get("benchmarks.serve_load", {})
+    dt_checks = module_checks.get("benchmarks.decode_traffic", {})
     return {
         "schema": 1,
         "platforms": list_platforms(),
@@ -109,6 +110,18 @@ def platforms_record(module_checks: dict) -> dict:
         # async gateway under Poisson load: token parity vs the sync
         # scheduler, goodput accounting, J/audio-s (benchmarks/serve_load)
         "serve_load": serve_load_record(sl_checks),
+        # paged KV/cross-KV pool (repro.paging): mid-serve occupancy,
+        # fragmentation, COW prefix-share hit rates, and the resident-
+        # bytes decode stream vs the padded slot pool
+        # (benchmarks/decode_traffic + benchmarks/serve_load capacity)
+        "paging": {
+            **dt_checks.get("paging", {}),
+            "tokens_match_slot_pool": bool(dt_checks.get(
+                "paged tokens identical to slot pool", False)),
+            "bytes_per_step_ratio_vs_slot": dt_checks.get(
+                "paged_bytes_per_step_ratio"),
+            "capacity": sl_checks.get("paged_capacity", {}),
+        },
         # hot-path invariant verdicts (repro.staticcheck)
         "staticcheck": staticcheck_rec,
         "dispatch_agreement": bool(dispatch_checks.get(

@@ -41,7 +41,7 @@ import numpy as np
 import benchmarks.common  # noqa: F401  (puts src/ on the path)
 from repro.configs import get_config, reduced
 from repro.models.model import build
-from repro.serving.engine import ServeEngine
+from repro.serving.engine import AudioRequest, ServeEngine
 
 N_SLOTS = 4
 MAX_LEN = 64
@@ -68,6 +68,78 @@ def _accounting_ok(summary: dict, offered: int) -> bool:
             and summary["goodput_rps"] <= summary["throughput_rps"] + 1e-9
             and summary["completed_in_deadline"] ==
             summary["completed"] - summary["deadline_misses"])
+
+
+def _capacity_point(model, params, cfg) -> tuple[dict, dict]:
+    """Fixed-pool-bytes capacity: the slot pool's ``N_SLOTS x MAX_LEN``
+    self / ``N_SLOTS x ENC_LEN`` cross token-slots, re-spent as a paged
+    pool (same usable pages, page size 8) across 4x the lanes. Every
+    request is a short Whisper-style job — one shared anchor-prompt
+    page, identical audio, small decode budget — so paged lanes hold
+    ~2 self pages instead of a ``MAX_LEN`` slot, and the anchor page is
+    stored once (COW prefix sharing), refcounted by every lane.
+
+    Returns (blocking checks, info record)."""
+    p = 8
+    lanes = 4 * N_SLOTS
+    rng = np.random.default_rng(7)
+    frames = rng.standard_normal((p, cfg.d_model)).astype(np.float32) * 0.5
+    anchor = list(range(3, 3 + p))     # one full (shareable) prompt page
+
+    def reqs():
+        return [AudioRequest(uid=i, tokens=list(anchor), max_new=4,
+                             eos_id=-2, enc_frames=frames)
+                for i in range(lanes)]
+
+    slot_eng = ServeEngine(model, params, n_slots=N_SLOTS,
+                           max_len=MAX_LEN, enc_len=ENC_LEN)
+    slot_sts = [slot_eng.admit(r) for r in reqs()]
+    slot_resident = sum(1 for s in slot_sts if s is not None)
+
+    paged_eng = ServeEngine(
+        model, params, n_slots=lanes, max_len=MAX_LEN, enc_len=ENC_LEN,
+        paged=True, page_size=p,
+        # usable pages == the slot pool's token capacity, exactly
+        n_pages=N_SLOTS * (MAX_LEN // p) + 1,
+        n_cross_pages=N_SLOTS * (ENC_LEN // p) + 1)
+    paged_sts = [paged_eng.admit(r) for r in reqs()]
+    paged_resident = sum(1 for s in paged_sts if s is not None)
+
+    first_pages = {paged_eng.pages.lanes[s.slot].self_pages[0]
+                   for s in paged_sts if s is not None}
+    one_copy = len(first_pages) == 1
+    refcount = (paged_eng.pages.self_pool.refcount(first_pages.pop())
+                if one_copy else 0)
+
+    while slot_eng.n_active:
+        slot_eng.step()
+    while paged_eng.n_active:
+        paged_eng.step()
+    slot_done = [s.out for s in slot_sts if s is not None]
+    paged_done = [s.out for s in paged_sts if s is not None]
+
+    checks = {
+        "paged pool holds >= 4x resident lanes at the slot pool's "
+        "byte budget":
+            slot_resident > 0
+            and paged_resident >= 4 * slot_resident,
+        "anchor prefix pages physically shared "
+        "(one copy, refcount == lanes)":
+            one_copy and refcount == paged_resident,
+        "capacity-point tokens identical across pool layouts":
+            bool(slot_done)
+            and all(o == slot_done[0] for o in slot_done + paged_done),
+    }
+    info = {
+        "slot_resident_lanes": slot_resident,
+        "paged_resident_lanes": paged_resident,
+        "lane_multiplier": (paged_resident / slot_resident
+                            if slot_resident else 0.0),
+        "slot_goodput_requests": len(slot_done),
+        "paged_goodput_requests": len(paged_done),
+        "anchor_page_refcount": refcount,
+    }
+    return checks, info
 
 
 def run():
@@ -129,6 +201,11 @@ def run():
         PLATFORM: er["pdp_j"] / total_audio_s if total_audio_s else 0.0}
     checks["audio_s_served"] = round(total_audio_s, 2)
 
+    # --- paged-pool capacity at the slot pool's byte budget
+    cap_checks, cap_info = _capacity_point(model, params, cfg)
+    checks.update(cap_checks)
+    checks["paged_capacity"] = cap_info
+
     hdr = (f"{'load point':>12} {'offered':>8} {'done':>5} {'in-SLO':>7} "
            f"{'shed':>5} {'goodput':>8} {'ttft p50':>9} {'ttft p99':>9} "
            f"{'e2e p99':>8}")
@@ -139,6 +216,12 @@ def run():
             f"{s['completed_in_deadline']:>7} {s['shed_total']:>5} "
             f"{s['goodput_rps']:>8.2f} {s['ttft_s']['p50']:>9.4f} "
             f"{s['ttft_s']['p99']:>9.4f} {s['e2e_s']['p99']:>8.4f}")
+    lines.append(
+        f"paged capacity @ slot-pool bytes: "
+        f"{cap_info['paged_resident_lanes']} resident lanes vs "
+        f"{cap_info['slot_resident_lanes']} "
+        f"({cap_info['lane_multiplier']:.0f}x), anchor page refcount "
+        f"{cap_info['anchor_page_refcount']}")
     table = (f"gateway serve load: micro whisper (1+1 layers, d=64), "
              f"{N_SLOTS} slots, decode_block {DECODE_BLOCK}, "
              f"platform {PLATFORM}\n" + "\n".join(lines))
@@ -158,6 +241,13 @@ def serve_load_record(checks: dict) -> dict:
             "goodput accounting consistent at every load point", False)),
         "one_host_sync_per_tick": bool(checks.get(
             "exactly one host sync per fused tick under load", False)),
+        "paged_capacity_4x": bool(checks.get(
+            "paged pool holds >= 4x resident lanes at the slot pool's "
+            "byte budget", False)),
+        "paged_prefix_shared": bool(checks.get(
+            "anchor prefix pages physically shared "
+            "(one copy, refcount == lanes)", False)),
+        "paged_capacity": checks.get("paged_capacity", {}),
         "joules_per_audio_s": checks.get("joules_per_audio_s", {}),
         "load_points": info,
     }

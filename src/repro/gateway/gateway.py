@@ -47,7 +47,8 @@ from typing import Optional, Sequence
 import numpy as np
 
 from repro.gateway.metrics import GatewayMetrics, RequestRecord
-from repro.gateway.slo import INTERACTIVE, STANDARD, AdmissionQueue, SLOClass
+from repro.gateway.slo import (BATCH, INTERACTIVE, STANDARD,
+                               AdmissionQueue, SLOClass)
 from repro.serving.engine import (AudioRequest, RejectCode,
                                   RejectionError, Request, RequestState,
                                   ServeEngine, StreamingAudioRequest)
@@ -131,12 +132,21 @@ class Gateway:
     def __init__(self, engine: ServeEngine, *, queue_limit: int = 64,
                  max_admit_per_tick: int = 2,
                  shed_on_submit: bool = True,
-                 idle_wait_s: float = 0.02):
+                 idle_wait_s: float = 0.02,
+                 page_shed_headroom: float = 0.1,
+                 shed_batch_priority: int = BATCH.priority):
         self.engine = engine
         self.queue = AdmissionQueue(queue_limit)
         self.max_admit_per_tick = max_admit_per_tick
         self.shed_on_submit = shed_on_submit
         self.idle_wait_s = idle_wait_s
+        # paged engines: when the tighter page pool's free fraction
+        # drops below this, queued work at/below ``shed_batch_priority``
+        # (BATCH by default) is shed with POOL_EXHAUSTED so interactive
+        # admissions keep finding pages. Slot engines report headroom
+        # 1.0, so the path never fires there.
+        self.page_shed_headroom = page_shed_headroom
+        self.shed_batch_priority = shed_batch_priority
         self.metrics = GatewayMetrics()
         self._uid = itertools.count()
         self._running: dict[int, _Ticket] = {}     # uid -> admitted ticket
@@ -419,6 +429,15 @@ class Gateway:
         passed (**before** any prefill is spent on them). Selected
         tickets prefill at the next tick boundary."""
         now = self._now()
+        headroom = self.engine.page_headroom()
+        if headroom < self.page_shed_headroom and len(self.queue):
+            # page pool nearly dry: shed batch-class backlog first, so
+            # the pages that do drain go to interactive work
+            for t in self.queue.shed_class(self.shed_batch_priority):
+                self._shed(t, RejectCode.POOL_EXHAUSTED,
+                           f"request {t.uid}: page pool low (headroom "
+                           f"{headroom:.2f} < {self.page_shed_headroom}"
+                           f") — {t.slo.name}-class work shed")
         budget = min(self.max_admit_per_tick,
                      len(self.engine.free)) - len(self._selected)
         while budget > 0:

@@ -100,6 +100,29 @@ class AdmissionQueue:
         self._live = 0
         return None
 
+    def shed_class(self, min_priority: int) -> list:
+        """Remove and return every live ticket at or below service tier
+        ``min_priority`` (higher value = lower priority; BATCH is 2).
+
+        The load-shed hook: when the engine's page pool runs low, the
+        gateway drops queued batch-class work first so interactive
+        admissions keep finding pages. Cancelled tickets are discarded
+        (they were already resolved, and sweeping them here settles the
+        lazy-removal debt); the heap is rebuilt from the survivors."""
+        keep, shed = [], []
+        for entry in self._heap:
+            ticket = entry[-1]
+            if getattr(ticket, "cancelled", False):
+                continue
+            if ticket.slo.priority >= min_priority:
+                shed.append(ticket)
+            else:
+                keep.append(entry)
+        heapq.heapify(keep)
+        self._heap = keep
+        self._live = len(keep)
+        return shed
+
     def peek(self):
         """The ticket ``pop`` would return, without removing it."""
         while self._heap:

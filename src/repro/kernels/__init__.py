@@ -11,6 +11,8 @@ which applies the paper's ACCEL/HOST control law per call.
 from repro.kernels.q8_matmul.ops import q8_matmul, q8_matmul_xla
 from repro.kernels.fp16_matmul.ops import fp16_matmul, offload_info
 from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.paged_attention.xla import (gather_pages,
+                                               paged_decode_attention_xla)
 from repro.kernels.q8_attention.ops import (cache_traffic_ratio,
                                             q8_decode_attention, quantize_kv)
 from repro.kernels.slstm_scan.ops import slstm_scan
@@ -22,7 +24,8 @@ from repro.kernels.api import (DispatchContext, dispatch, dispatch_counters,
 __all__ = [
     "DispatchContext", "KernelOp", "cache_traffic_ratio", "current_context",
     "dispatch", "dispatch_counters", "dispatch_trace", "fp16_matmul",
-    "flash_attention", "get_op", "list_ops", "offload_info", "q8_matmul",
-    "q8_matmul_xla", "q8_decode_attention", "quantize_kv", "register",
+    "flash_attention", "gather_pages", "get_op", "list_ops", "offload_info",
+    "paged_decode_attention_xla", "q8_matmul", "q8_matmul_xla",
+    "q8_decode_attention", "quantize_kv", "register",
     "reset_dispatch_log", "slstm_scan", "use_context",
 ]

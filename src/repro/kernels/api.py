@@ -293,6 +293,8 @@ def _register_builtin_ops() -> None:
     from repro.kernels.fp16_matmul.ref import fp16_matmul_ref
     from repro.kernels.flash_attention.ops import flash_attention
     from repro.kernels.flash_attention.ref import attention_ref
+    from repro.kernels.paged_attention.ref import paged_decode_attention_ref
+    from repro.kernels.paged_attention.xla import paged_decode_attention_xla
     from repro.kernels.q8_attention.ops import q8_decode_attention
     from repro.kernels.q8_attention.ref import q8_decode_attention_ref
     from repro.kernels.q8_attention.xla import q8_decode_attention_xla
@@ -414,6 +416,32 @@ def _register_builtin_ops() -> None:
                 q8_decode_attention_xla(q, kq, ks, vq, vs, length),
             "ref": lambda ctx, q, kq, ks, vq, vs, length, bk=128:
                 q8_decode_attention_ref(q, kq, ks, vq, vs, length),
+        },
+    ))
+
+    # ---- paged_decode_attention: decode matvec over a paged KV pool ----
+    # Planes live in a shared (n_pages, P, Hkv, ·) pool; ``table``
+    # (B, n_lp) reassembles each lane's logical sequence by gather, so
+    # n = n_lp * P plays the role the slot pool's max_len/enc_len played.
+    # ``kc``/``vc`` are arrays (bf16 cache) or {"q", "s"} dicts (q8_0).
+    # count = 2 * B * H as in the slot-pool decode ops; the page-table
+    # gather roughly doubles the K/V byte stream (pool read + gathered
+    # copy), which stays inside the SC-FOOT bytes band.
+    register(KernelOp(
+        name="paged_decode_attention",
+        doc="Decode attention gathered over per-lane page tables.",
+        spec=lambda q, kc, vc, table, lens, **kw: KernelSpec(
+            "paged_decode_attention", m=q.shape[1],
+            n=table.shape[1] * (kc["q"] if isinstance(kc, dict)
+                                else kc).shape[1],
+            k=q.shape[-1],
+            dtype="q8_0" if isinstance(kc, dict) else "bf16",
+            count=2 * q.shape[0] * q.shape[2], tag="attn_qk"),
+        backends={
+            "xla": lambda ctx, q, kc, vc, table, lens:
+                paged_decode_attention_xla(q, kc, vc, table, lens),
+            "ref": lambda ctx, q, kc, vc, table, lens:
+                paged_decode_attention_ref(q, kc, vc, table, lens),
         },
     ))
 

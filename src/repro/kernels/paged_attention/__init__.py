@@ -1,0 +1,9 @@
+from repro.kernels.paged_attention.ref import paged_decode_attention_ref
+from repro.kernels.paged_attention.xla import (gather_pages,
+                                               paged_decode_attention_xla)
+
+__all__ = sorted([
+    "gather_pages",
+    "paged_decode_attention_ref",
+    "paged_decode_attention_xla",
+])

@@ -1,0 +1,47 @@
+"""Pure-jnp oracle: f32 dense attention over gathered page-table planes.
+
+Parity anchor for the paged op — dequantizes/upcasts the gathered
+per-lane planes to f32 and runs the textbook masked softmax chain.
+Never routed on the hot path (``host_order`` prefers the xla binding);
+exists for backend cross-checks and forced-``ref`` runs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import QBLOCK
+from repro.kernels.paged_attention.xla import _repeat_heads, gather_pages
+
+NEG_INF = -1e30
+
+
+def _dequant(codes: jax.Array, scale: jax.Array) -> jax.Array:
+    return (codes.astype(jnp.float32)
+            * jnp.repeat(scale.astype(jnp.float32), QBLOCK, axis=-1))
+
+
+def paged_decode_attention_ref(q, kc, vc, table, lens) -> jax.Array:
+    """Same contract as ``paged_decode_attention_xla``."""
+    b, _, h, d = q.shape
+    if isinstance(kc, dict):
+        k = _dequant(gather_pages(kc["q"], table),
+                     gather_pages(kc["s"], table))
+        v = _dequant(gather_pages(vc["q"], table),
+                     gather_pages(vc["s"], table))
+    else:
+        k = gather_pages(kc, table).astype(jnp.float32)
+        v = gather_pages(vc, table).astype(jnp.float32)
+    k = _repeat_heads(k, h)
+    v = _repeat_heads(v, h)
+    s_len = k.shape[1]
+    s_ = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k,
+                    preferred_element_type=jnp.float32) * (d ** -0.5)
+    mask = (jnp.arange(s_len)[None, :]
+            < jnp.asarray(lens, jnp.int32)[:, None])
+    s_ = jnp.where(mask[:, None, None, :], s_, NEG_INF)
+    w = jax.nn.softmax(s_, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)

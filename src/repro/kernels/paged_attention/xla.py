@@ -1,0 +1,73 @@
+"""XLA host backend: decode attention gathered over per-lane page tables.
+
+The cache planes live in a shared page pool ``(n_pages, P, Hkv, ·)``;
+lane ``b``'s logical sequence is reassembled by one ``jnp.take`` over
+its page-table row — ``table[b]`` lists physical pages in logical order,
+so the gathered ``(B, n_lp * P, Hkv, ·)`` planes have exactly the layout
+of the slot engine's per-lane cache rows. Everything after the gather
+mirrors the dense decode chain in ``models.attention`` operation for
+operation (bf16 operands, f32-accumulated einsums, -1e30 masking), so a
+paged lane is bit-identical to its slot-pool reference whenever the
+gathered values match — which the paging parity tests assert.
+
+Q8_0 planes gather the int8 codes + f16 scales the same way and then
+reuse ``q8_decode_attention_xla`` verbatim (codes widened to bf16,
+scales folded after the f32 accumulation), so the paged q8 path inherits
+the slot path's math exactly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import flags
+from repro.kernels.q8_attention.xla import q8_decode_attention_xla
+
+NEG_INF = -1e30
+
+
+def gather_pages(plane: jax.Array, table: jax.Array) -> jax.Array:
+    """plane (n_pages, P, Hkv, ·) + table (B, n_lp) int32 ->
+    (B, n_lp * P, Hkv, ·) per-lane logical planes."""
+    b, n_lp = table.shape
+    g = jnp.take(plane, table, axis=0)          # (B, n_lp, P, Hkv, ·)
+    return g.reshape(b, n_lp * plane.shape[1], *plane.shape[2:])
+
+
+def _repeat_heads(k: jax.Array, n_heads: int) -> jax.Array:
+    hk = k.shape[2]
+    if hk == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // hk, axis=2)
+
+
+def paged_decode_attention_xla(q, kc, vc, table, lens) -> jax.Array:
+    """q: (B, 1, H, D); kc/vc: pool planes — arrays (bf16 cache) or
+    ``{"q": int8, "s": f16}`` dicts (q8_0); table: (B, n_lp) int32;
+    lens: (B,) int32, lane b attends logical positions [0, lens[b]).
+    Returns (B, 1, H, D) in q's dtype."""
+    b, _, h, d = q.shape
+    if isinstance(kc, dict):                    # Q8_0 planes
+        def flat(plane):
+            g = _repeat_heads(gather_pages(plane, table), h)
+            return g.transpose(0, 2, 1, 3).reshape(b * h, g.shape[1], -1)
+        qf = q.transpose(0, 2, 1, 3).reshape(b * h, 1, d)
+        lens_f = jnp.repeat(jnp.asarray(lens, jnp.int32), h)
+        out = q8_decode_attention_xla(qf, flat(kc["q"]), flat(kc["s"]),
+                                      flat(vc["q"]), flat(vc["s"]), lens_f)
+        return out.reshape(b, h, 1, d).transpose(0, 2, 1, 3)
+
+    k = _repeat_heads(gather_pages(kc, table), h)
+    v = _repeat_heads(gather_pages(vc, table), h)
+    s_len = k.shape[1]
+    ddt = jnp.float32 if flags.BASELINE else jnp.bfloat16
+    s_ = jnp.einsum("bqhd,bkhd->bhqk", q.astype(ddt), k.astype(ddt),
+                    preferred_element_type=jnp.float32) * (d ** -0.5)
+    mask = (jnp.arange(s_len)[None, :]
+            < jnp.asarray(lens, jnp.int32)[:, None])
+    s_ = jnp.where(mask[:, None, None, :], s_, NEG_INF)
+    w = jax.nn.softmax(s_, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w.astype(ddt), v.astype(ddt),
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)

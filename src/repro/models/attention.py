@@ -160,7 +160,8 @@ def attention(p: dict, x: jax.Array, cfg: ArchConfig, *,
               positions: Optional[jax.Array] = None,
               use_rope: bool = True,
               layer_idx=None,
-              kv_lens=None):
+              kv_lens=None,
+              page_table=None):
     """Returns (y, new_cache). Modes:
       train   — full-sequence, no cache
       prefill — full-sequence, fills and returns cache
@@ -185,6 +186,16 @@ def attention(p: dict, x: jax.Array, cfg: ArchConfig, *,
     quantizes the new token in place and reads the cache through
     ``dispatch("q8_decode_attention", ...)`` — the paper's Q8_0 LOAD
     saving applied to the decode-cache stream (~0.53x bf16 bytes).
+
+    ``page_table`` (decode, stacked only): the cache planes are a shared
+    page *pool* ``(L, n_pages, P, Hkv, ·)`` instead of per-lane rows;
+    ``page_table`` (B, n_lp) int32 maps lane b's logical page i to a
+    physical pool page (``repro.paging``). The new token is scattered at
+    ``(layer_idx, table[b, pos//P], pos % P)`` and the matvec runs
+    through ``dispatch("paged_decode_attention", ...)`` — a gather over
+    the table followed by the exact dense decode chain, so paged output
+    is bit-identical to the slot pool's whenever the page content
+    matches.
     """
     b, s, _ = x.shape
     h = cfg.n_heads
@@ -230,11 +241,43 @@ def attention(p: dict, x: jax.Array, cfg: ArchConfig, *,
         raise NotImplementedError(
             "q8_0 KV-cache decode requires the stacked cache path "
             "(REPRO_BASELINE=1 serves bf16 caches only)")
+    if page_table is not None and (not stacked or softcap is not None
+                                   or window is not None):
+        raise NotImplementedError(
+            "paged KV-cache decode requires the stacked cache path and "
+            "plain softmax attention (no softcap / sliding window)")
     if x_kv is None:
         q, k_new, v_new = _project_qkv(p, x, cfg)
         if use_rope:
             q = rope(q, pos_b[:, None], cfg.rope_theta)
             k_new = rope(k_new, pos_b[:, None], cfg.rope_theta)
+        if page_table is not None:
+            # paged pool: scatter the one new token per lane at
+            # (layer_idx, table[b, pos // P], pos % P). Parked lanes'
+            # table rows all point at the scratch page (0), so their
+            # writes can never corrupt an allocated page.
+            psz = (cache["kq"] if q8 else cache["k"]).shape[2]
+            phys = jnp.take_along_axis(
+                page_table, (pos_b // psz)[:, None], axis=1)[:, 0]
+            offs = pos_b % psz
+
+            def updp(c, new):
+                return c.at[layer_idx, phys, offs].set(
+                    new[:, 0].astype(c.dtype))
+            if q8:
+                kt = quantize_q8_0(k_new, axis=-1)
+                vt = quantize_q8_0(v_new, axis=-1)
+                new_cache = {"kq": updp(cache["kq"], kt.q),
+                             "ks": updp(cache["ks"], kt.scale),
+                             "vq": updp(cache["vq"], vt.q),
+                             "vs": updp(cache["vs"], vt.scale)}
+            else:
+                new_cache = {"k": updp(cache["k"], k_new),
+                             "v": updp(cache["v"], v_new)}
+            out = _paged_cache_attention(q, new_cache, layer_idx,
+                                         page_table, pos_b + 1)
+            y = mm_out(out.astype(x.dtype), p["wo"])
+            return constrain(y, "batch", None, "embed"), new_cache
         if stacked:
             # token-sized in-place write into the (L,B,S,Hkv,D) stack
             def upd5(c, new):
@@ -298,6 +341,17 @@ def attention(p: dict, x: jax.Array, cfg: ArchConfig, *,
         if "q_norm" in p:
             q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
         new_cache = cache
+        if page_table is not None:
+            # read-only paged cross block; lane b attends its gathered
+            # logical positions [0, kv_lens[b])
+            psz = (cache["kq"] if q8 else cache["k"]).shape[2]
+            kv_len = page_table.shape[1] * psz
+            lens = (jnp.asarray(kv_lens, jnp.int32) if kv_lens is not None
+                    else jnp.full((b,), kv_len, jnp.int32))
+            out = _paged_cache_attention(q, cache, layer_idx, page_table,
+                                         lens)
+            y = mm_out(out.astype(x.dtype), p["wo"])
+            return constrain(y, "batch", None, "embed"), new_cache
         if q8:  # read-only Q8_0 planes; per-lane encoder lengths
             kv_len = cache["kq"].shape[2]
             lens = (jnp.asarray(kv_lens, jnp.int32) if kv_lens is not None
@@ -387,6 +441,34 @@ def _q8_cache_attention(q: jax.Array, planes: dict, layer_idx,
                    flat(planes["ks"]), flat(planes["vq"]),
                    flat(planes["vs"]), lens_f)
     return out.reshape(b, h, 1, d).transpose(0, 2, 1, 3)
+
+
+def _paged_cache_attention(q: jax.Array, planes: dict, layer_idx,
+                           table: jax.Array, lens) -> jax.Array:
+    """Decode matvec over one layer of a stacked paged pool.
+
+    q: (B, 1, H, D); ``planes``: ``{k, v}`` or ``{kq, ks, vq, vs}``, each
+    ``(L, n_pages, P, Hkv, ·)``; ``table``: (B, n_lp) int32 page table;
+    lane b attends gathered logical positions [0, lens[b]). Returns
+    (B, 1, H, D)."""
+    def lay(c):
+        return jax.lax.dynamic_index_in_dim(c, layer_idx, 0,
+                                            keepdims=False)
+    if is_q8_cache(planes):
+        kc = {"q": lay(planes["kq"]), "s": lay(planes["ks"])}
+        vc = {"q": lay(planes["vq"]), "s": lay(planes["vs"])}
+    else:
+        kc, vc = lay(planes["k"]), lay(planes["v"])
+    return dispatch("paged_decode_attention", q, kc, vc, table,
+                    jnp.asarray(lens, jnp.int32))
+
+
+def init_paged_kv_cache(cfg: ArchConfig, n_pages: int, page_size: int,
+                        dtype=jnp.bfloat16) -> dict:
+    """Page-pool KV planes ``(n_pages, P, Hkv, Dh)`` — same plane dict
+    layout as ``init_kv_cache`` with (batch, max_len) replaced by the
+    pool's (n_pages, page_size). Page 0 is the reserved scratch page."""
+    return init_kv_cache(cfg, n_pages, page_size, dtype)
 
 
 def _write_prefill_cache(cache: Optional[dict], k: jax.Array, v: jax.Array):

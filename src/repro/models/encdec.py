@@ -137,12 +137,15 @@ def cross_attn_kv(params: dict, cfg: ArchConfig, states: jax.Array):
 def decode_tokens(params: dict, cfg: ArchConfig, tokens: jax.Array,
                   enc_out: Optional[jax.Array] = None, *,
                   mode: str = "train", cache=None, pos=None,
-                  enc_lens=None):
+                  enc_lens=None, pages=None):
     """Decoder pass. train/prefill: tokens (B, S) with enc_out given.
     decode: tokens (B, 1), cache holds self KV + cross KV. ``enc_lens``
     (decode, optional): (B,) valid encoder lengths — serving pads cached
     encoder K/V to the pool's enc_len, so cross-attention must mask the
-    padded tail per lane."""
+    padded tail per lane. ``pages`` (decode, optional):
+    ``{"self": (B, n_lp), "cross": (B, n_lp_c)}`` int32 page tables —
+    the cache planes are then shared page pools (``repro.paging``) and
+    each attention reads/writes through its lane's table row."""
     b, s = tokens.shape
     x = embed(params["embed"], tokens)
     if mode == "decode":
@@ -171,7 +174,8 @@ def decode_tokens(params: dict, cfg: ArchConfig, tokens: jax.Array,
         a, self_c = attn_mod.attention(
             lp["self_attn"], h, cfg, kind="global", mode=mode,
             cache=None if lc is None else lc["self"], pos=pos,
-            use_rope=False, layer_idx=layer_idx)
+            use_rope=False, layer_idx=layer_idx,
+            page_table=None if pages is None else pages["self"])
         x = x + a
         h = layernorm(lp["ln_x"], x)
         if mode == "decode":
@@ -179,7 +183,8 @@ def decode_tokens(params: dict, cfg: ArchConfig, tokens: jax.Array,
                 lp["cross_attn"], h, cfg, kind="bidir", mode=mode,
                 cache=lc["cross"], pos=pos, use_rope=False,
                 x_kv=h,  # x_kv flags the cross path; cached K/V are used
-                layer_idx=layer_idx, kv_lens=enc_lens)
+                layer_idx=layer_idx, kv_lens=enc_lens,
+                page_table=None if pages is None else pages["cross"])
         else:
             c, cross_c = attn_mod.attention(
                 lp["cross_attn"], h, cfg, kind="bidir", mode=mode,
@@ -236,6 +241,21 @@ def init_encdec_cache(cfg: ArchConfig, batch: int, max_len: int,
                       enc_len: int, dtype=jnp.bfloat16) -> dict:
     self_kv = attn_mod.init_kv_cache(cfg, batch, max_len, dtype)
     cross_kv = attn_mod.init_kv_cache(cfg, batch, enc_len, dtype)
+    layer = {"self": self_kv, "cross": cross_kv}
+    return {"layers": jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape), layer)}
+
+
+def init_paged_encdec_cache(cfg: ArchConfig, n_pages: int,
+                            n_cross_pages: int, page_size: int,
+                            dtype=jnp.bfloat16) -> dict:
+    """Paged pool variant of ``init_encdec_cache``: the per-lane
+    (batch, seq) leading dims become shared (n_pages, P) pools indexed
+    through per-lane page tables (``repro.paging``). The pytree layout
+    is unchanged, so the stacked decode scan carries it as-is."""
+    self_kv = attn_mod.init_paged_kv_cache(cfg, n_pages, page_size, dtype)
+    cross_kv = attn_mod.init_paged_kv_cache(cfg, n_cross_pages, page_size,
+                                            dtype)
     layer = {"self": self_kv, "cross": cross_kv}
     return {"layers": jax.tree.map(
         lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape), layer)}

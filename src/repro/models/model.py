@@ -62,20 +62,23 @@ class Model:
 
     # ---- forward ----------------------------------------------------------
     def forward(self, values, batch: dict, *, mode: str = "train",
-                cache=None, pos=None):
+                cache=None, pos=None, pages=None):
         """Returns (logits, new_cache). ``batch`` keys by family:
         tokens (all); enc_frames (audio) or enc_states (audio:
         precomputed encoder output, e.g. streaming chunked encode —
         skips the encoder); img_embed (vlm, train/prefill); enc_lens
         (audio decode, optional: per-lane valid encoder lengths for
-        cross-attention over padded cached encoder states)."""
+        cross-attention over padded cached encoder states). ``pages``
+        (enc-dec decode, optional): per-lane page tables when ``cache``
+        is a paged pool (``repro.paging``)."""
         cfg = self.cfg
         if cfg.enc_dec:
             if mode == "decode":
                 return encdec_mod.decode_tokens(values, cfg, batch["tokens"],
                                                 mode="decode", cache=cache,
                                                 pos=pos,
-                                                enc_lens=batch.get("enc_lens"))
+                                                enc_lens=batch.get("enc_lens"),
+                                                pages=pages)
             enc_out = batch.get("enc_states")
             if enc_out is None:
                 enc_out = encdec_mod.encode(values, cfg, batch["enc_frames"])
@@ -103,6 +106,18 @@ class Model:
             return encdec_mod.init_encdec_cache(self.cfg, batch, max_len,
                                                 enc_len, dtype)
         return tf_mod.init_decoder_cache(self.cfg, batch, max_len, dtype)
+
+    def init_paged_cache(self, n_pages: int, n_cross_pages: int,
+                         page_size: int, dtype=jnp.bfloat16):
+        """Paged-pool cache (enc-dec only): shared ``(n_pages, P)`` self
+        and cross planes indexed through per-lane page tables
+        (``repro.paging``). Same ``dtype`` contract as ``init_cache``."""
+        if not self.cfg.enc_dec:
+            raise ValueError(
+                f"{self.cfg.name}: paged KV cache requires an enc-dec "
+                f"model (the serving engine's paged mode)")
+        return encdec_mod.init_paged_encdec_cache(
+            self.cfg, n_pages, n_cross_pages, page_size, dtype)
 
     def cache_specs(self, batch: int, max_len: int, enc_len: int = 1500):
         return jax.eval_shape(

@@ -1,0 +1,31 @@
+"""Paged KV/cross-KV cache subsystem (host-side bookkeeping).
+
+A page pool turns the serving engine's capacity limit from
+``n_slots x max_len`` *padding* into actual token bytes: each lane maps
+logical cache positions to fixed-size physical pages through a per-lane
+page table, pages are allocated from a refcounted free list, and
+identical prompt prefixes (Whisper's ``<sot><lang><task>`` anchor)
+share physical pages copy-on-write across lanes.
+
+Everything in this package is host-side Python over plain lists and
+device int32 page tables; the device-side read/write paths live in
+``repro.models.attention`` (gather over page tables) and the
+``paged_decode_attention`` kernel op.
+"""
+
+from repro.paging.allocator import PageAllocError, PagePool
+from repro.paging.manager import LanePages, PagedKV
+from repro.paging.prefix import PrefixEntry, PrefixStore
+from repro.paging.table import PageTable, SCRATCH_PAGE, pages_needed
+
+__all__ = sorted([
+    "LanePages",
+    "PageAllocError",
+    "PagePool",
+    "PageTable",
+    "PagedKV",
+    "PrefixEntry",
+    "PrefixStore",
+    "SCRATCH_PAGE",
+    "pages_needed",
+])

@@ -1,0 +1,108 @@
+"""Per-lane page tables: logical cache position -> (page, offset).
+
+The device-visible table is a dense ``(n_slots, max_len // P)`` int32
+array; row ``b`` maps lane ``b``'s logical page ``i`` to a physical page
+id in the pool's plane arrays. Logical position ``t`` lives at
+``(table[b, t // P], t % P)``. Cleared rows point every entry at the
+scratch page (0), so a freed lane's in-flight device writes can never
+corrupt a page that has been handed to another lane.
+
+The host keeps a plain nested-list mirror and re-materializes the device
+array only when rows change (``device()`` is cached between mutations);
+decode ticks that allocate nothing reuse the same device array, so the
+steady-state decode loop uploads no tables.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+SCRATCH_PAGE = 0
+
+
+def pages_needed(n_tokens: int, page_size: int) -> int:
+    """ceil(n_tokens / page_size)."""
+    return -(-n_tokens // page_size)
+
+
+class PageTable:
+    """Host mirror + device int32 array of per-lane page mappings."""
+
+    def __init__(self, n_slots: int, max_len: int, page_size: int):
+        if max_len % page_size:
+            raise ValueError(
+                f"max_len {max_len} not a multiple of page_size {page_size}")
+        self.n_slots = n_slots
+        self.page_size = page_size
+        self.n_logical = max_len // page_size
+        self._rows = [[SCRATCH_PAGE] * self.n_logical
+                      for _ in range(n_slots)]
+        self._device = None
+        self._version = 0
+
+    # ---- mutation ---------------------------------------------------------
+    def set_row(self, slot: int, pages: list[int]) -> None:
+        """Map lane ``slot``'s logical pages [0, len(pages)) to ``pages``;
+        the tail keeps pointing at scratch."""
+        if len(pages) > self.n_logical:
+            raise ValueError(
+                f"{len(pages)} pages > {self.n_logical} logical slots")
+        row = [SCRATCH_PAGE] * self.n_logical
+        row[:len(pages)] = pages
+        self._rows[slot] = row
+        self._dirty()
+
+    def set_entry(self, slot: int, logical: int, page: int) -> None:
+        self._rows[slot][logical] = page
+        self._dirty()
+
+    def extend_row(self, slot: int, start_logical: int,
+                   pages: list[int]) -> None:
+        """Map logical pages [start_logical, start_logical+len) in place."""
+        row = self._rows[slot]
+        for i, pg in enumerate(pages):
+            row[start_logical + i] = pg
+        self._dirty()
+
+    def clear_row(self, slot: int) -> None:
+        self._rows[slot] = [SCRATCH_PAGE] * self.n_logical
+        self._dirty()
+
+    def _dirty(self) -> None:
+        self._device = None
+        self._version += 1
+
+    # ---- queries ----------------------------------------------------------
+    def row(self, slot: int) -> list[int]:
+        return list(self._rows[slot])
+
+    def entry(self, slot: int, logical: int) -> int:
+        return self._rows[slot][logical]
+
+    def lookup(self, slot: int, position: int) -> tuple[int, int]:
+        """Logical position -> (physical page, offset within page)."""
+        return (self._rows[slot][position // self.page_size],
+                position % self.page_size)
+
+    @property
+    def version(self) -> int:
+        """Bumped on every row mutation (see ``adopt``)."""
+        return self._version
+
+    def device(self) -> jnp.ndarray:
+        """The (n_slots, n_logical) int32 device table (cached until the
+        next mutation)."""
+        if self._device is None:
+            flat = [pg for row in self._rows for pg in row]
+            self._device = jnp.asarray(flat, jnp.int32).reshape(
+                self.n_slots, self.n_logical)
+        return self._device
+
+    def adopt(self, dev, version: int) -> None:
+        """Re-install the device array a donated jit returned unchanged:
+        donation invalidated the input buffer ``device()`` handed out, so
+        the caller passes back the aliased output. Skipped when any row
+        mutated since ``version`` was read (the cached array was already
+        discarded and will be rebuilt from the mutated rows)."""
+        if self._version == version:
+            self._device = dev

@@ -61,6 +61,7 @@ import contextlib
 import dataclasses
 import enum
 import functools
+import hashlib
 import itertools
 import warnings
 from typing import Any, Optional
@@ -77,6 +78,7 @@ from repro.kernels.q8_attention.ops import cache_traffic_ratio
 from repro.models import encdec as encdec_mod
 from repro.models.attention import quantize_kv_cache
 from repro.models.model import Model
+from repro.paging import PageAllocError, PagedKV
 from repro.platforms import Platform, get_platform
 
 
@@ -115,6 +117,9 @@ class RejectCode(enum.Enum):
     BAD_ENC_SHAPE = "bad_enc_shape"              # misshapen frames/chunk
     ENC_OVERFLOW = "enc_overflow"                # frames exceed pool enc_len
     ENC_ON_DECODER_ONLY = "enc_on_decoder_only"  # frames for a text model
+    POOL_EXHAUSTED = "pool_exhausted"            # paged KV pool out of pages
+    #   (validate: the request's page demand exceeds the whole pool —
+    #    permanent; gateway: load-shed because free pages ran low)
     # --- gateway admission / lifecycle (repro.gateway)
     QUEUE_FULL = "queue_full"                    # bounded-queue backpressure
     DEADLINE_UNMEETABLE = "deadline_unmeetable"  # shed at submit (estimate)
@@ -250,7 +255,10 @@ class ServeEngine:
                  cache_dtype: str = "bf16",
                  decode_block: int = 1,
                  platform: Optional[Any] = None,
-                 dispatch_ctx: Optional[DispatchContext] = None):
+                 dispatch_ctx: Optional[DispatchContext] = None,
+                 paged: bool = False, page_size: int = 8,
+                 n_pages: Optional[int] = None,
+                 n_cross_pages: Optional[int] = None):
         """``platform``: a registered hardware target (name or
         ``repro.platforms.Platform``). Supplies the default dispatch
         context (``DispatchContext.for_platform``) and enables
@@ -269,7 +277,19 @@ class ServeEngine:
         ``decode_block``: decode steps fused per ``step()`` tick (one
         host sync per tick regardless of the block size). A mutable
         knob — ``engine.decode_block = 16`` retunes a live engine; one
-        compile per distinct block size."""
+        compile per distinct block size.
+
+        ``paged=True`` (enc-dec only): the per-lane slot pool becomes a
+        shared page pool (``repro.paging``) — ``n_pages`` self-KV and
+        ``n_cross_pages`` cross-KV pages of ``page_size`` tokens (page 0
+        is reserved scratch; defaults size the pools to the slot pool's
+        byte budget), with per-lane page tables carried through the
+        donated decode jit. Lanes hold ``ceil((n+max_new)/P)`` self and
+        ``ceil(enc_s/P)`` cross pages — actual request bytes, not
+        ``max_len``/``enc_len`` padding — and identical anchor-prompt /
+        audio prefixes share pages copy-on-write. Decode output is
+        token-identical to the slot pool (same projections, same masked
+        softmax over the gathered pages)."""
         if cache_dtype not in CACHE_DTYPES:
             raise ValueError(f"cache_dtype {cache_dtype!r}: expected one "
                              f"of {CACHE_DTYPES}")
@@ -305,7 +325,35 @@ class ServeEngine:
         self.cache_dtype = cache_dtype
         self.decode_block = int(decode_block)
         cdt = "q8_0" if cache_dtype == "q8_0" else jnp.bfloat16
-        self.cache = model.init_cache(n_slots, max_len, enc_len, dtype=cdt)
+        self.paged = bool(paged)
+        self.page_size = int(page_size)
+        self.pages: Optional[PagedKV] = None
+        if self.paged:
+            if not self.enc_dec:
+                raise ValueError(
+                    f"paged=True requires an enc-dec model; {cfg.name} "
+                    f"is decoder-only")
+            if flags.BASELINE:
+                raise ValueError("paged=True needs the stacked decode "
+                                 "path (unset REPRO_BASELINE)")
+            if max_len % self.page_size or enc_len % self.page_size:
+                raise ValueError(
+                    f"max_len ({max_len}) and enc_len ({enc_len}) must "
+                    f"be multiples of page_size ({self.page_size})")
+            # defaults match the slot pool's byte budget (+1 scratch)
+            if n_pages is None:
+                n_pages = n_slots * (max_len // self.page_size) + 1
+            if n_cross_pages is None:
+                n_cross_pages = n_slots * (enc_len // self.page_size) + 1
+            self.pages = PagedKV(
+                n_slots=n_slots, max_len=max_len, enc_len=enc_len,
+                page_size=self.page_size, n_pages=n_pages,
+                n_cross_pages=n_cross_pages)
+            self.cache = model.init_paged_cache(
+                n_pages, n_cross_pages, self.page_size, dtype=cdt)
+        else:
+            self.cache = model.init_cache(n_slots, max_len, enc_len,
+                                          dtype=cdt)
         self.free = list(range(n_slots))
         self.active: dict[int, RequestState] = {}   # slot -> state
         # --- device-resident decode state (never re-uploaded per tick):
@@ -334,8 +382,10 @@ class ServeEngine:
                 lambda params, states: encdec_mod.cross_attn_kv(
                     params, cfg_, states))
             self._extend = jax.jit(
-                functools.partial(_extend_cross_cache,
-                                  q8=cache_dtype == "q8_0"),
+                functools.partial(
+                    _extend_paged_cross_cache if self.paged
+                    else _extend_cross_cache,
+                    q8=cache_dtype == "q8_0"),
                 donate_argnums=(0,))
         # serving-energy accounting (energy_report)
         self._ticks = 0         # executed fused decode ticks (host syncs)
@@ -351,8 +401,45 @@ class ServeEngine:
         copied every step. Finished lanes (EOS / max_new / max_len) are
         frozen on device: their token/pos stop advancing and their
         emits are masked, which makes the fused tick token-identical to
-        ``k`` sequential single steps."""
+        ``k`` sequential single steps.
+
+        Paged engines take the per-lane page tables as an extra donated
+        argument; the tick never remaps pages, so the tables pass
+        through unchanged (aliased outputs) and the engine re-adopts
+        them after the donation invalidated the inputs."""
         model, enc_dec, max_len = self.model, self.enc_dec, self.max_len
+
+        if self.paged:
+            @functools.partial(jax.jit,
+                               donate_argnums=(1, 2, 3, 4, 5, 6))
+            def paged_decode_block(params, cache, tables, tokens, pos,
+                                   active, n_out, enc_lens, eos, max_new):
+                def one(carry, _):
+                    cache, tokens, pos, active, n_out = carry
+                    batch = {"tokens": tokens, "enc_lens": enc_lens}
+                    logits, cache = model.forward(
+                        params, batch, mode="decode", cache=cache,
+                        pos=pos, pages=tables)
+                    nxt = jnp.argmax(logits[:, -1],
+                                     axis=-1).astype(jnp.int32)
+                    emit = active
+                    tokens = jnp.where(active[:, None], nxt[:, None],
+                                       tokens)
+                    pos = jnp.where(active, pos + 1, pos)
+                    n_out = jnp.where(active, n_out + 1, n_out)
+                    stop = (nxt == eos) | (n_out >= max_new) \
+                        | (pos >= max_len - 1)
+                    active = active & ~stop
+                    return (cache, tokens, pos, active, n_out), (nxt, emit)
+
+                carry = (cache, tokens, pos, active, n_out)
+                carry, (tok_blk, emit_blk) = jax.lax.scan(
+                    one, carry, None, length=k)
+                cache, tokens, pos, active, n_out = carry
+                return (tok_blk, emit_blk, cache, tables, tokens, pos,
+                        active, n_out)
+
+            return paged_decode_block
 
         @functools.partial(jax.jit, donate_argnums=(1, 2, 3, 4, 5))
         def decode_block(params, cache, tokens, pos, active, n_out,
@@ -399,12 +486,40 @@ class ServeEngine:
         an in-place lane write) and returns ``(first, pool)`` where
         ``first`` is the argmax of the last prompt position — computed
         on device so admission fetches one scalar, not the full
-        ``[1, bucket, vocab]`` logits."""
+        ``[1, bucket, vocab]`` logits.
+
+        Paged engines replace the ``slot`` index with two physical-page
+        vectors (one per pool): the dense batch-1 cache is reshaped into
+        page rows and scattered at the lane's pages — unmapped logical
+        pages point at the scratch page, which absorbs the padding."""
         key = (bucket, enc_s, from_states)
         if key not in self._prefill_fns:
             model, max_len, enc_len = self.model, self.max_len, self.enc_len
             q8 = self.cache_dtype == "q8_0"
             enc_key = "enc_states" if from_states else "enc_frames"
+            page_size = self.page_size
+
+            if self.paged:
+                @functools.partial(jax.jit, donate_argnums=(1,))
+                def paged_prefill(params, pool, tokens, n, pv_self,
+                                  pv_cross, enc=None):
+                    cache = model.init_cache(1, max_len, enc_len)
+                    batch = {"tokens": tokens}
+                    if enc is not None:
+                        batch[enc_key] = enc
+                    logits, cache = model.forward(
+                        params, batch, mode="prefill", cache=cache)
+                    if q8:
+                        cache = quantize_kv_cache(cache)
+                    pool = _scatter_pages(pool, cache, pv_self, pv_cross,
+                                          page_size)
+                    first = jnp.argmax(
+                        jnp.take(logits[0], n - 1,
+                                 axis=0)).astype(jnp.int32)
+                    return first, pool
+
+                self._prefill_fns[key] = paged_prefill
+                return paged_prefill
 
             @functools.partial(jax.jit, donate_argnums=(1,))
             def prefill(params, pool, tokens, n, slot, enc=None):
@@ -467,6 +582,12 @@ class ServeEngine:
                         C.ENC_OVERFLOW,
                         f"request {req.uid}: {total} streamed encoder "
                         f"frames exceed the pool enc_len {self.enc_len}")
+                if self.paged and not self.pages.fits(n, req.max_new,
+                                                      total):
+                    return Rejection(
+                        C.POOL_EXHAUSTED,
+                        f"request {req.uid}: page demand exceeds the "
+                        f"whole pool (can never be admitted)")
                 return None
             if req.enc_frames is None and req.enc_states is None:
                 return Rejection(
@@ -493,6 +614,11 @@ class ServeEngine:
                     C.ENC_OVERFLOW,
                     f"request {req.uid}: {shp[0]} encoder positions "
                     f"exceed the pool enc_len {self.enc_len}")
+            if self.paged and not self.pages.fits(n, req.max_new, shp[0]):
+                return Rejection(
+                    C.POOL_EXHAUSTED,
+                    f"request {req.uid}: page demand exceeds the whole "
+                    f"pool (can never be admitted)")
         elif req.enc_frames is not None or req.enc_states is not None \
                 or isinstance(req, StreamingAudioRequest):
             return Rejection(
@@ -520,23 +646,53 @@ class ServeEngine:
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :n] = req.tokens
         enc_s = None
+        # resolve the encoder input host-side first: the paged path
+        # needs enc_s (and the content digest) before any page moves
+        states = frames = None
+        if self.enc_dec and req.enc_states is not None:
+            # precomputed encoder states (chunked/streaming encode):
+            # prefill skips the encoder pass entirely.
+            states = jnp.asarray(req.enc_states)[None]
+            enc_s = int(states.shape[1])
+        elif self.enc_dec:
+            # encode at the exact frame count: the encoder attends
+            # bidirectionally, so bucket padding would corrupt every
+            # frame state (one compile per distinct enc_s).
+            frames = jnp.asarray(np.asarray(req.enc_frames),
+                                 jnp.float32)[None]
+            enc_s = int(frames.shape[1])
+        pv_self = pv_cross = None
+        if self.paged:
+            from_states = req.enc_states is not None
+            digest = _enc_digest(
+                req.enc_states if from_states else req.enc_frames,
+                "states" if from_states else "frames")
+            try:
+                self.pages.admit_lane(slot, req.tokens, digest,
+                                      max_new=req.max_new, enc_s=enc_s)
+            except PageAllocError:
+                # transient: pages drain as lanes finish — same retry
+                # contract as a full slot pool (scheduler re-queues)
+                self.free.append(slot)
+                return None
+            pv_self = jnp.asarray(self.pages.self_table.row(slot),
+                                  jnp.int32)
+            pv_cross = jnp.asarray(self.pages.cross_table.row(slot),
+                                   jnp.int32)
         with use_context(self.dispatch_ctx), _quiet_donation():
-            if self.enc_dec and req.enc_states is not None:
-                # precomputed encoder states (chunked/streaming encode):
-                # prefill skips the encoder pass entirely.
-                states = jnp.asarray(req.enc_states)[None]
-                enc_s = int(states.shape[1])
+            if self.paged:
+                fn = self._prefill_fn(bucket, enc_s,
+                                      from_states=states is not None)
+                first, self.cache = fn(
+                    self.params, self.cache, jnp.asarray(toks), n,
+                    pv_self, pv_cross,
+                    states if states is not None else frames)
+            elif states is not None:
                 first, self.cache = self._prefill_fn(
                     bucket, enc_s, from_states=True)(
                         self.params, self.cache, jnp.asarray(toks), n,
                         slot, states)
             elif self.enc_dec:
-                # encode at the exact frame count: the encoder attends
-                # bidirectionally, so bucket padding would corrupt every
-                # frame state (one compile per distinct enc_s).
-                frames = jnp.asarray(np.asarray(req.enc_frames),
-                                     jnp.float32)[None]
-                enc_s = int(frames.shape[1])
                 first, self.cache = self._prefill_fn(bucket, enc_s)(
                     self.params, self.cache, jnp.asarray(toks), n, slot,
                     frames)
@@ -572,6 +728,11 @@ class ServeEngine:
         if not self.free:
             return None
         slot = self.free.pop()
+        if self.paged:
+            # register the lane with empty page sets — cross pages are
+            # allocated per chunk in stream_feed, self pages at the
+            # first anchor (when the prompt+budget extent is known)
+            self.pages.admit_stream_lane(slot)
         st = RequestState(req=req, slot=slot, pos=0, out=[])
         self._streams[slot] = _StreamState(states=[])
         return st
@@ -596,6 +757,18 @@ class ServeEngine:
             states = self._encode(self.params, fr)
         ss.states.append(states)
         first_feed = not ss.anchored
+        if self.paged:
+            # grow the lane's cross pages to cover the new chunk before
+            # anything writes it (the first feed's pages are written by
+            # the anchor prefill, later feeds by the extend jit)
+            try:
+                phys, off = self.pages.extend_cross(slot, ss.n_frames,
+                                                    s_new)
+            except PageAllocError as e:
+                raise RejectionError(Rejection(
+                    RejectCode.POOL_EXHAUSTED,
+                    f"request {st.req.uid}: cross-KV page pool "
+                    f"exhausted mid-stream ({e})"))
         if not first_feed:
             # incremental extension: project the new states through each
             # decoder layer's cross K/V and write them after the
@@ -603,8 +776,13 @@ class ServeEngine:
             # pool buffer is donated — an in-place plane write).
             with use_context(self.dispatch_ctx), _quiet_donation():
                 k, v = self._cross_kv(self.params, states)
-                self.cache = self._extend(self.cache, k, v, slot,
-                                          ss.n_frames)
+                if self.paged:
+                    self.cache = self._extend(
+                        self.cache, k, v, jnp.asarray(phys, jnp.int32),
+                        jnp.asarray(off, jnp.int32))
+                else:
+                    self.cache = self._extend(self.cache, k, v, slot,
+                                              ss.n_frames)
         ss.n_frames += s_new
         if first_feed:
             self._anchor(st, ss, final=False)
@@ -640,11 +818,33 @@ class ServeEngine:
         bucket = min(_bucket(n), self.max_len)
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :n] = req.tokens
-        with use_context(self.dispatch_ctx), _quiet_donation():
-            first, self.cache = self._prefill_fn(
-                bucket, int(states.shape[1]), from_states=True)(
-                    self.params, self.cache, jnp.asarray(toks), n, slot,
-                    states)
+        if self.paged:
+            lane = self.pages.lanes[slot]
+            if not lane.self_pages:
+                # first anchor: allocate the lane's full self-KV extent
+                # (prompt + decode budget) so no tick ever allocates
+                try:
+                    self.pages.alloc_self(slot, n, req.max_new)
+                except PageAllocError as e:
+                    raise RejectionError(Rejection(
+                        RejectCode.POOL_EXHAUSTED,
+                        f"request {req.uid}: self-KV page pool "
+                        f"exhausted at anchor ({e})"))
+            pv_self = jnp.asarray(self.pages.self_table.row(slot),
+                                  jnp.int32)
+            pv_cross = jnp.asarray(self.pages.cross_table.row(slot),
+                                   jnp.int32)
+            with use_context(self.dispatch_ctx), _quiet_donation():
+                first, self.cache = self._prefill_fn(
+                    bucket, int(states.shape[1]), from_states=True)(
+                        self.params, self.cache, jnp.asarray(toks), n,
+                        pv_self, pv_cross, states)
+        else:
+            with use_context(self.dispatch_ctx), _quiet_donation():
+                first, self.cache = self._prefill_fn(
+                    bucket, int(states.shape[1]), from_states=True)(
+                        self.params, self.cache, jnp.asarray(toks), n,
+                        slot, states)
         first = int(first)   # scalar fetch, as in admit()
         self._generated += 1
         ss.anchored = True
@@ -701,11 +901,28 @@ class ServeEngine:
             raise ValueError(f"decode block must be >= 1, got {k}")
         fn = self._decode_fn(k)
         with use_context(self.dispatch_ctx), _quiet_donation():
-            (tok_blk, emit_blk, self.cache, self._tokens, self._pos,
-             self._lane_active, self._lane_out) = fn(
-                self.params, self.cache, self._tokens, self._pos,
-                self._lane_active, self._lane_out, self._enc_lens,
-                self._lane_eos, self._lane_max)
+            if self.paged:
+                # the tick donates the device tables and returns them
+                # aliased (it never remaps pages); re-adopt them guarded
+                # by the host tables' version so a concurrent admit
+                # (between step_begin and step_fetch) wins
+                sv = self.pages.self_table.version
+                cv = self.pages.cross_table.version
+                tables = {"self": self.pages.self_table.device(),
+                          "cross": self.pages.cross_table.device()}
+                (tok_blk, emit_blk, self.cache, tables, self._tokens,
+                 self._pos, self._lane_active, self._lane_out) = fn(
+                    self.params, self.cache, tables, self._tokens,
+                    self._pos, self._lane_active, self._lane_out,
+                    self._enc_lens, self._lane_eos, self._lane_max)
+                self.pages.self_table.adopt(tables["self"], sv)
+                self.pages.cross_table.adopt(tables["cross"], cv)
+            else:
+                (tok_blk, emit_blk, self.cache, self._tokens, self._pos,
+                 self._lane_active, self._lane_out) = fn(
+                    self.params, self.cache, self._tokens, self._pos,
+                    self._lane_active, self._lane_out, self._enc_lens,
+                    self._lane_eos, self._lane_max)
         return PendingTick(k=k, tok_blk=tok_blk, emit_blk=emit_blk)
 
     def step_fetch(self, pending: PendingTick):
@@ -750,6 +967,11 @@ class ServeEngine:
                         self._free_slot(slot)
                         finished.append(st)
                     break
+            if self.paged:
+                # advance the lane's valid-token extent (fragmentation
+                # accounting only; allocation already covered max_new;
+                # no-op for lanes freed above)
+                self.pages.note_len(slot, st.pos)
         return finished
 
     def step_end(self, pending: Optional[PendingTick]
@@ -794,6 +1016,11 @@ class ServeEngine:
         parked lane then attends exactly one (stale but harmless)
         position instead of its full dead context, and its emit mask
         stays off."""
+        if self.paged:
+            # drop page refs and point the lane's table rows at the
+            # scratch page (any in-flight device write for this lane
+            # lands there, never on a page another lane now owns)
+            self.pages.free_lane(slot)
         self.free.append(slot)
         self._set_lane(slot, token=0, pos=0, enc_len=0, eos=0, max_new=0,
                        n_out=0, active=False)
@@ -817,7 +1044,7 @@ class ServeEngine:
         dt = "q8_0" if self.cache_dtype == "q8_0" else "bf16"
         per_tok = 2 * cfg.n_layers * stored_bytes(
             (cfg.n_kv_heads, cfg.head_dim), dt)
-        return {
+        out = {
             "cache_dtype": self.cache_dtype,
             "kv_bytes_total": kv_bytes,
             "state_bytes_total": state_bytes,
@@ -826,6 +1053,46 @@ class ServeEngine:
             "traffic_ratio_vs_bf16":
                 cache_traffic_ratio() if self.cache_dtype == "q8_0" else 1.0,
         }
+        if self.paged:
+            # paged pools stream only MAPPED pages per step (the gather
+            # reads through the tables), so the decode LOAD term — and
+            # the energy model built on it — prices actual resident
+            # request bytes, not n_slots x max_len padding.
+            rep = self.pages.report()
+            layers = self.cache["layers"]
+            sb = sum(int(l.nbytes) for l in jax.tree.leaves(layers["self"]))
+            cb = sum(int(l.nbytes)
+                     for l in jax.tree.leaves(layers["cross"]))
+            spb = sb // self.pages.self_pool.n_pages
+            cpb = cb // self.pages.cross_pool.n_pages
+            resident = (rep["self"]["pages_in_use"] * spb
+                        + rep["cross"]["pages_in_use"] * cpb)
+            out["paging"] = {
+                **rep,
+                "self_page_bytes": spb,
+                "cross_page_bytes": cpb,
+                "resident_kv_bytes": resident,
+            }
+            out["bytes_per_step"] = resident
+        return out
+
+    def paging_report(self) -> dict:
+        """Page-pool occupancy / fragmentation / prefix-sharing stats
+        (``repro.paging`` accounting; paged engines only)."""
+        if not self.paged:
+            raise ValueError("paging_report() requires paged=True")
+        return self.pages.report()
+
+    def page_headroom(self) -> float:
+        """Free-page fraction of the tighter pool (1.0 for slot
+        engines) — the gateway's load-shed signal: when this drops
+        below its threshold, BATCH-class work is shed first so
+        interactive admissions keep finding pages."""
+        if not self.paged:
+            return 1.0
+        sp, cp = self.pages.self_pool, self.pages.cross_pool
+        return min(sp.free_pages / max(sp.n_pages - 1, 1),
+                   cp.free_pages / max(cp.n_pages - 1, 1))
 
     def dispatch_report(self) -> dict:
         """Kernel-routing counters (trace-time, keyed (op, decision,
@@ -993,4 +1260,64 @@ def _extend_cross_cache(cache: dict, k, v, slot, offset, *,
                      "vs": dus(cross["vs"], vt.scale)}
     else:
         new_cross = {"k": dus(cross["k"], k), "v": dus(cross["v"], v)}
+    return {"layers": {**cache["layers"], "cross": new_cross}}
+
+
+def _enc_digest(x, kind: str) -> str:
+    """Content key of a request's encoder input for paged prefix
+    sharing. Decoder self-K/V flows through cross-attention, so shared
+    prompt pages are only valid between lanes with identical audio —
+    the digest is part of the self-prefix key, not just the cross key.
+    ``kind`` ("frames"/"states") keeps the two input encodings from
+    ever colliding."""
+    arr = np.asarray(x)
+    return hashlib.sha1(kind.encode() + arr.tobytes()).hexdigest()
+
+
+def _scatter_pages(pool: Any, one: Any, pv_self, pv_cross,
+                   page_size: int) -> Any:
+    """Write a batch-1 dense cache pytree into a lane's physical pages.
+
+    Each dense leaf ``(L, 1, S, ...)`` is reshaped into page rows
+    ``(L, S // P, P, ...)`` and scattered at the lane's page vector
+    (``pv`` covers the full logical extent: mapped pages first, then
+    the scratch page, which absorbs the bucket padding — duplicate
+    scratch indices are benign, last-write-wins over garbage). Shared
+    prefix pages are rewritten with bit-identical content (prefill is
+    deterministic), so the scatter never corrupts another lane."""
+    def scat(plane, dense, pv):
+        lead, s = dense.shape[0], dense.shape[2]
+        rows = dense[:, 0].reshape(
+            (lead, s // page_size, page_size) + dense.shape[3:])
+        return plane.at[:, pv].set(rows.astype(plane.dtype))
+
+    layers, dense_layers = pool["layers"], one["layers"]
+    new = {kind: {key: scat(layers[kind][key], dense_layers[kind][key],
+                            pv)
+                  for key in layers[kind]}
+           for kind, pv in (("self", pv_self), ("cross", pv_cross))}
+    return {"layers": new}
+
+
+def _extend_paged_cross_cache(cache: dict, k, v, phys, off, *,
+                              q8: bool) -> dict:
+    """Paged variant of ``_extend_cross_cache``: the chunk's s_new new
+    positions land at ``(layer, phys[i], off[i])`` in the shared cross
+    planes (gather targets from ``PagedKV.extend_cross``). Jitted with
+    the pool donated — an in-place plane write; one compile per
+    distinct chunk length."""
+    cross = cache["layers"]["cross"]
+
+    def scat(plane, new):
+        return plane.at[:, phys, off].set(new[:, 0].astype(plane.dtype))
+
+    if q8:
+        kt = quantize_q8_0(k, axis=-1)
+        vt = quantize_q8_0(v, axis=-1)
+        new_cross = {"kq": scat(cross["kq"], kt.q),
+                     "ks": scat(cross["ks"], kt.scale),
+                     "vq": scat(cross["vq"], vt.q),
+                     "vs": scat(cross["vs"], vt.scale)}
+    else:
+        new_cross = {"k": scat(cross["k"], k), "v": scat(cross["v"], v)}
     return {"layers": {**cache["layers"], "cross": new_cross}}

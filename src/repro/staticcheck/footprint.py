@@ -66,11 +66,20 @@ def representative_calls() -> dict[str, tuple[tuple, dict]]:
     wx = jax.random.normal(key, (16, 4, 2, 2, 16), jnp.float32)
     r = jax.random.normal(key, (4, 2, 16, 16), jnp.float32) * 0.1
     s0 = jnp.zeros((4, 2, 2, 16), jnp.float32)
+    # paged pool planes: (n_pages, P, Hkv, D) + per-lane page tables
+    # (B, n_lp) reassembling 8 logical pages of 8 — the reduced serving
+    # geometry (4 lanes x max_len 64 + scratch page 0)
+    pq = jax.random.normal(key, (4, 1, 4, 32), jnp.bfloat16)
+    plane = jax.random.normal(key, (33, 8, 2, 32), jnp.bfloat16)
+    table = jax.random.randint(jax.random.key(1), (4, 8), 1, 33,
+                               jnp.int32)
+    plens = jnp.full((4,), 48, jnp.int32)
     return {
         "q8_matmul": ((x8, w8), {}),
         "fp16_matmul": ((xf, wf), {}),
         "flash_attention": ((q, kv, kv), {"causal": True}),
         "q8_decode_attention": ((dq, kq, ks, kq, ks, length), {}),
+        "paged_decode_attention": ((pq, plane, plane, table, plens), {}),
         "slstm_scan": ((wx, r, s0), {}),
     }
 

@@ -11,6 +11,13 @@ executes — the four hot-path programs:
                            donated)
 * ``frontend_gemm``      — the audio frontend's projection GEMM path
 
+Paged engines (``repro.paging``) trace the paged twins of the first
+three — ``paged_decode_block`` (page tables donated alongside the pool
+and re-aliased through), ``paged_prefill`` (page-row scatter), and
+``paged_extend_cross`` (per-frame page/offset scatter) — under the same
+check IDs, so the paged pool obeys the same donation / sync-free /
+dtype-plane contract as the slot pool.
+
 Tracing with ``jitted.trace(*args)`` gives the jaxpr (complete with
 scan bodies) and, via ``.lower()``, the StableHLO text where donation
 appears as ``tf.aliasing_output`` parameter attributes. Nothing runs on
@@ -35,6 +42,11 @@ from repro.serving.engine import ServeEngine
 # same programs.
 N_SLOTS, MAX_LEN, ENC_LEN = 4, 64, 16
 DECODE_BLOCK, BUCKET, ENC_S = 2, 32, 8
+# Paged pool geometry: usable pages == the slot pool's token capacity
+# (+1 for the reserved scratch page 0), mirroring tests/test_paging.py.
+PAGE_SIZE = 8
+N_PAGES = N_SLOTS * (MAX_LEN // PAGE_SIZE) + 1
+N_CROSS_PAGES = N_SLOTS * (ENC_LEN // PAGE_SIZE) + 1
 
 
 @dataclasses.dataclass
@@ -57,6 +69,18 @@ def build_engine(cache_dtype: str = "q8_0",
     return ServeEngine(model, params, n_slots=N_SLOTS, max_len=MAX_LEN,
                        enc_len=ENC_LEN, cache_dtype=cache_dtype,
                        decode_block=DECODE_BLOCK)
+
+
+def build_paged_engine(cache_dtype: str = "q8_0",
+                       arch: str = "whisper-tiny-en") -> ServeEngine:
+    cfg = reduced(get_config(arch))
+    model = build(cfg)
+    params = model.init_values(jax.random.key(0))
+    return ServeEngine(model, params, n_slots=N_SLOTS, max_len=MAX_LEN,
+                       enc_len=ENC_LEN, cache_dtype=cache_dtype,
+                       decode_block=DECODE_BLOCK, paged=True,
+                       page_size=PAGE_SIZE, n_pages=N_PAGES,
+                       n_cross_pages=N_CROSS_PAGES)
 
 
 def _donated_leaves(args: tuple, argnums: tuple) -> int:
@@ -135,4 +159,45 @@ def hot_programs(eng: ServeEngine,
                                    jnp.float32)
         programs.append(program_from_fn("frontend_gemm", frontend_fn,
                                         mel))
+    return programs
+
+
+def paged_hot_programs(eng: ServeEngine) -> list[HotProgram]:
+    """Trace the paged engine's hot path: the page-table decode tick,
+    the page-row prefill scatter, and the streaming cross extension."""
+    assert eng.paged
+    tag = f"[{eng.cache_dtype}]"
+    cfg = eng.model.cfg
+    programs = []
+
+    # --- fused paged decode tick (tables donated + aliased through) ---
+    dec = eng._decode_fn(DECODE_BLOCK)
+    tables = {"self": eng.pages.self_table.device(),
+              "cross": eng.pages.cross_table.device()}
+    dec_args = (eng.params, eng.cache, tables, eng._tokens, eng._pos,
+                eng._lane_active, eng._lane_out, eng._enc_lens,
+                eng._lane_eos, eng._lane_max)
+    programs.append(_trace(f"paged_decode_block{tag}", dec, dec_args,
+                           donate=(1, 2, 3, 4, 5, 6), eng=eng))
+
+    # --- paged prefill: dense one-lane cache -> page-row scatter ---
+    pre = eng._prefill_fn(BUCKET, ENC_S)
+    toks = jax.ShapeDtypeStruct((1, BUCKET), jnp.int32)
+    frames = jax.ShapeDtypeStruct((1, ENC_S, cfg.d_model), jnp.float32)
+    pv_self = jax.ShapeDtypeStruct((MAX_LEN // PAGE_SIZE,), jnp.int32)
+    pv_cross = jax.ShapeDtypeStruct((ENC_LEN // PAGE_SIZE,), jnp.int32)
+    programs.append(_trace(
+        f"paged_prefill{tag}", pre,
+        (eng.params, eng.cache, toks, 4, pv_self, pv_cross, frames),
+        donate=(1,), eng=eng))
+
+    # --- streaming cross-K/V extension at per-frame page targets ---
+    s_new = 4
+    states = jax.ShapeDtypeStruct((1, s_new, cfg.d_model), jnp.float32)
+    k_sds, v_sds = jax.eval_shape(eng._cross_kv, eng.params, states)
+    phys = jax.ShapeDtypeStruct((s_new,), jnp.int32)
+    off = jax.ShapeDtypeStruct((s_new,), jnp.int32)
+    programs.append(_trace(f"paged_extend_cross{tag}", eng._extend,
+                           (eng.cache, k_sds, v_sds, phys, off),
+                           donate=(0,), eng=eng))
     return programs

@@ -34,6 +34,13 @@ def _copy(tree):
 
 
 def _decode_args(eng):
+    if eng.paged:
+        tables = {"self": jnp.array(eng.pages.self_table.device()),
+                  "cross": jnp.array(eng.pages.cross_table.device())}
+        return (eng.params, _copy(eng.cache), tables,
+                jnp.array(eng._tokens), jnp.array(eng._pos),
+                jnp.array(eng._lane_active), jnp.array(eng._lane_out),
+                eng._enc_lens, eng._lane_eos, eng._lane_max)
     return (eng.params, _copy(eng.cache), jnp.array(eng._tokens),
             jnp.array(eng._pos), jnp.array(eng._lane_active),
             jnp.array(eng._lane_out), eng._enc_lens, eng._lane_eos,
@@ -42,6 +49,7 @@ def _decode_args(eng):
 
 def check_recompile(eng) -> list[Finding]:
     out = []
+    ptag = "paged_" if eng.paged else ""
     with warnings.catch_warnings():
         # CPU has no donation support: jit warns per compile; the
         # engine's own paths silence it the same way.
@@ -55,7 +63,8 @@ def check_recompile(eng) -> list[Finding]:
         n = fn._cache_size()
         ok = same and n == 1
         out.append(Finding(
-            check=CHECK, subject=f"decode_block[{eng.cache_dtype}]",
+            check=CHECK,
+            subject=f"{ptag}decode_block[{eng.cache_dtype}]",
             ok=ok,
             detail=(f"2 ticks -> {n} compile(s); keyed lookup "
                     f"{'stable' if same else 'UNSTABLE'}"),
@@ -69,17 +78,26 @@ def check_recompile(eng) -> list[Finding]:
         grew = len(eng._prefill_fns) - n_keys0
         toks = jnp.zeros((1, BUCKET), jnp.int32)
         frames = jnp.zeros((1, ENC_S, d_model), jnp.float32)
-        jax.block_until_ready(
-            pre(eng.params, _copy(eng.cache), toks, 4, 0, frames))
-        jax.block_until_ready(
-            pre(eng.params, _copy(eng.cache), toks, 5, 1, frames))
+        if eng.paged:
+            # page-vector targets replace the slot index; scratch page 0
+            # absorbs both probe writes, so the pool is untouched
+            p = eng.page_size
+            pv_s = jnp.zeros((eng.max_len // p,), jnp.int32)
+            pv_c = jnp.zeros((eng.enc_len // p,), jnp.int32)
+            pre_args = [(4, pv_s, pv_c), (5, pv_s, pv_c)]
+        else:
+            pre_args = [(4, 0), (5, 1)]
+        for extra in pre_args:
+            jax.block_until_ready(
+                pre(eng.params, _copy(eng.cache), toks, *extra, frames))
         n = pre._cache_size()
         # a second bucket is a new key — exactly one
         eng._prefill_fn(BUCKET // 2, ENC_S)
         grew2 = len(eng._prefill_fns) - n_keys0 - grew
         ok = same and n == 1 and grew <= 1 and grew2 == 1
         out.append(Finding(
-            check=CHECK, subject=f"prefill[{eng.cache_dtype}]", ok=ok,
+            check=CHECK, subject=f"{ptag}prefill[{eng.cache_dtype}]",
+            ok=ok,
             detail=(f"2 same-bucket admits -> {n} compile(s); "
                     f"+{grew2} cache key for a new bucket"),
             data={"compiles": n, "keyed_lookup_stable": same,

@@ -61,16 +61,22 @@ def run_all(config: Optional[StaticcheckConfig] = None,
     root = root or repo_root()
     findings: list[Finding] = []
 
-    engines = []
+    engines, paged_engines = [], []
     if selected & (_PROGRAM_CHECKS | {"SC-RECOMP"}):
-        from repro.staticcheck.harness import build_engine, hot_programs
+        from repro.staticcheck.harness import (build_engine,
+                                               build_paged_engine,
+                                               hot_programs,
+                                               paged_hot_programs)
         engines = [build_engine(cd) for cd in cache_dtypes]
+        paged_engines = [build_paged_engine(cd) for cd in cache_dtypes]
 
     if selected & _PROGRAM_CHECKS:
         programs = []
         for i, eng in enumerate(engines):
             # one frontend trace is enough — it has no cache planes
             programs.extend(hot_programs(eng, frontend=(i == 0)))
+        for eng in paged_engines:
+            programs.extend(paged_hot_programs(eng))
         if "SC-DON" in selected:
             findings.extend(check_donation(programs))
         if "SC-SYNC" in selected:
@@ -80,7 +86,7 @@ def run_all(config: Optional[StaticcheckConfig] = None,
     if "SC-AST" in selected:
         findings.extend(check_ast_syncs(root))
     if "SC-RECOMP" in selected:
-        for eng in engines:
+        for eng in engines + paged_engines:
             findings.extend(check_recompile(eng))
     if "SC-FOOT" in selected:
         findings.extend(check_footprint(config))

@@ -45,7 +45,8 @@ SYNC_INVENTORY = [
     ("serving/engine.py", "ServeEngine.step_fetch", "jax.device_get"),
 ]
 
-SCAN_DIRS = ("src/repro/serving", "src/repro/gateway", "src/repro/models")
+SCAN_DIRS = ("src/repro/serving", "src/repro/gateway",
+             "src/repro/models", "src/repro/paging")
 
 
 def check_program_sync(programs: list[HotProgram]) -> list[Finding]:

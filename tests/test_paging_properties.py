@@ -1,0 +1,116 @@
+"""Property-based invariants of the page allocator and lane manager
+(``repro.paging``), driven by hypothesis when it is installed
+(``pip install -e .[test]``); tests/test_paging.py carries seeded
+deterministic versions that always run.
+
+Invariants under arbitrary operation sequences:
+* the pool never leaks or double-frees a page — ``used_pages`` always
+  equals the shadow model, every refcount matches;
+* allocation is all-or-nothing (a failed multi-page alloc changes
+  nothing);
+* lane admit/free sequences drain both pools to exactly zero, with the
+  prefix store evicted once its last holder frees.
+"""
+
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -e .[test])")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.paging import PageAllocError, PagePool, PagedKV  # noqa: E402
+
+P = 8
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(
+    st.one_of(
+        st.tuples(st.just("alloc"), st.integers(1, 4)),
+        st.tuples(st.just("retain"), st.integers(0, 200)),
+        st.tuples(st.just("free"), st.integers(0, 200)),
+    ),
+    max_size=60))
+def test_pool_refcounts_match_shadow_model(ops):
+    pool = PagePool(12, P)
+    shadow: dict[int, int] = {}
+    for op, arg in ops:
+        if op == "alloc":
+            free_before = pool.free_pages
+            got = pool.try_alloc(arg)
+            if got is None:
+                assert free_before < arg          # only fails when short
+                assert pool.free_pages == free_before   # all-or-nothing
+            else:
+                assert len(set(got)) == arg
+                for pg in got:
+                    assert pg not in shadow and pg != 0
+                    shadow[pg] = 1
+        elif op == "retain":
+            live = sorted(shadow)
+            if not live:
+                continue
+            pg = live[arg % len(live)]
+            pool.retain(pg)
+            shadow[pg] += 1
+        else:
+            live = sorted(shadow)
+            if not live:
+                continue
+            pg = live[arg % len(live)]
+            pool.free(pg)
+            shadow[pg] -= 1
+            if shadow[pg] == 0:
+                del shadow[pg]
+        assert pool.used_pages == len(shadow)
+        for pg, n in shadow.items():
+            assert pool.refcount(pg) == n
+        pool.check()
+    # drain: refcounts wind down to exactly zero, every page returns
+    for pg, n in list(shadow.items()):
+        for _ in range(n):
+            pool.free(pg)
+    assert pool.used_pages == 0 and pool.free_pages == 11
+    pool.check()
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(
+    st.tuples(
+        st.integers(0, 3),                       # slot
+        st.integers(0, 2),                       # audio content id
+        st.integers(1, 16),                      # prompt tokens
+        st.integers(1, 8),                       # max_new
+    ),
+    max_size=24))
+def test_lane_admits_always_drain_to_zero(admits):
+    kv = PagedKV(n_slots=4, max_len=32, enc_len=16, page_size=P,
+                 n_pages=12, n_cross_pages=6)
+    held: dict[int, bool] = {}
+    for slot, audio, n_tok, max_new in admits:
+        if held.get(slot):
+            kv.free_lane(slot)
+            held[slot] = False
+        if n_tok + max_new > kv.max_len:
+            continue
+        # anchor-style prompt: shared first page when n_tok >= P
+        tokens = list(range(min(n_tok, kv.max_len)))
+        try:
+            kv.admit_lane(slot, tokens, f"digest-{audio}",
+                          max_new=max_new, enc_s=8)
+        except PageAllocError:
+            # rolled back: the failed admit must not retain anything
+            assert slot not in kv.lanes
+            continue
+        held[slot] = True
+        kv.check()
+    for slot, h in held.items():
+        if h:
+            kv.free_lane(slot)
+    assert kv.self_pool.used_pages == 0
+    assert kv.cross_pool.used_pages == 0
+    assert kv.self_prefix.stats()["entries"] == 0
+    assert kv.cross_prefix.stats()["entries"] == 0
+    kv.check()

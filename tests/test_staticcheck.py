@@ -60,7 +60,9 @@ def test_verdicts_match_dynamic_decode_tests(clean_report):
     prefill, the fused decode tick, and the cross-cache extension."""
     funcs = clean_report.function_verdicts()
     for dt in ("q8_0", "bf16"):
-        for fn in ("prefill", "decode_block", "extend_cross_cache"):
+        for fn in ("prefill", "decode_block", "extend_cross_cache",
+                   "paged_prefill", "paged_decode_block",
+                   "paged_extend_cross"):
             v = funcs[f"{fn}[{dt}]"]
             assert v["donation"] is True, (fn, dt, v)
             assert v["sync_free"] is True, (fn, dt, v)
