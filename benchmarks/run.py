@@ -27,6 +27,7 @@ MODULES = [
     "benchmarks.dispatch_check",
     "benchmarks.decode_traffic",
     "benchmarks.decode_throughput",
+    "benchmarks.model_zoo",
     "benchmarks.e2e_asr",
     "benchmarks.serve_load",
 ]
@@ -62,6 +63,7 @@ def platforms_record(module_checks: dict) -> dict:
     dispatch_checks = module_checks.get("benchmarks.dispatch_check", {})
     asr_checks = module_checks.get("benchmarks.e2e_asr", {})
     tp_checks = module_checks.get("benchmarks.decode_throughput", {})
+    zoo_checks = module_checks.get("benchmarks.model_zoo", {})
     sl_checks = module_checks.get("benchmarks.serve_load", {})
     dt_checks = module_checks.get("benchmarks.decode_traffic", {})
     return {
@@ -106,6 +108,16 @@ def platforms_record(module_checks: dict) -> dict:
                     False)),
             "one_host_sync_per_tick": bool(tp_checks.get(
                 "exactly one host sync per tick", False)),
+        },
+        # model zoo: every lane-state family served through the one
+        # engine — per-family tokens/s, modeled J/token, bytes/step
+        # (benchmarks/model_zoo)
+        "model_zoo": {
+            "families": zoo_checks.get("zoo", {}),
+            "one_host_sync_per_tick": bool(zoo_checks.get(
+                "one host sync per tick for every family", False)),
+            "lanestate_drained": bool(zoo_checks.get(
+                "lane-state ledger drained after every serve", False)),
         },
         # async gateway under Poisson load: token parity vs the sync
         # scheduler, goodput accounting, J/audio-s (benchmarks/serve_load)

@@ -210,11 +210,22 @@ class Gateway:
 
     def report(self, kernel: str = "fp16") -> dict:
         """Metrics summary; folds in the engine's platform energy
-        report (J/audio-s) when the engine has a platform."""
+        report (J/audio-s) when the engine has a platform, plus the
+        served family's lane-state spec so a fleet of mixed-family
+        gateways stays distinguishable in rolled-up metrics."""
         energy = None
         if self.engine.platform is not None:
             energy = self.engine.energy_report(kernel)
-        return self.metrics.summary(energy)
+        out = self.metrics.summary(energy)
+        spec = self.engine.spec
+        out["engine"] = {
+            "arch": self.engine.model.cfg.name,
+            "family": spec.family,
+            "state_kinds": list(spec.state_kinds),
+            "cache_dtype": self.engine.cache_dtype,
+            "prefill_exact": spec.prefill_exact,
+        }
+        return out
 
     # ------------------------------------------------------------- submit
     async def submit_tokens(self, tokens, *, max_new: int = 16,

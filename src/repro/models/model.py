@@ -31,6 +31,68 @@ def shape_applicable(cfg: ArchConfig, shape: str) -> tuple[bool, str]:
 
 
 @dataclasses.dataclass(frozen=True)
+class LaneStateSpec:
+    """What one serving lane of this model carries between decode steps.
+
+    The serving engine (``repro.serving``) is family-agnostic: it asks
+    the model for this spec and drives admission, prefill, the fused
+    decode tick, q8_0 storage, abort/free and the energy accounting off
+    it instead of assuming a KV cache. Declared state kinds:
+
+    * ``self_kv`` — causal attention K/V planes, ``O(max_len)`` per
+      lane (dense, enc-dec, MoE, and the hybrid families).
+    * ``cross_kv`` — encoder-side K/V planes, ``O(enc_len)`` per lane
+      (enc-dec only).
+    * ``recurrent`` — constant-size per-lane state, rewritten in full
+      every decode step: ``"ssm"`` (mamba ``conv``/``h``), ``"mstate"``
+      (mLSTM ``(C, n, m)``), ``"sstate"`` (sLSTM ``(c, n, h, m)``).
+    * ``moe_experts > 0`` — per-lane expert-routing counters
+      ``(n_experts,) int32``, updated by every routed MoE layer.
+
+    ``prefill_exact``: recurrent scans fold *every* input position into
+    the end-of-prompt state, so bucket zero-padding would corrupt it
+    (attention is immune — decode masks positions beyond ``pos``).
+    Engines prefill such lanes at the exact prompt length, one compile
+    per distinct length.
+
+    ``recurrent_dtype``: the storage dtype of recurrent leaves in a
+    serving pool. Steps compute in f32 and cast back on write, so the
+    donated decode scan carry keeps a stable dtype (no silent f32
+    widening — checked by staticcheck SC-DTYPE).
+
+    ``q8_supported``: the q8_0 cache tier quantizes K/V planes; it
+    needs plain-softmax decode attention with ``head_dim % 32 == 0``
+    and at least one KV plane to quantize (pure-recurrent lanes have
+    none — their O(1) state stays ``recurrent_dtype``)."""
+    family: str
+    self_kv: bool
+    cross_kv: bool
+    recurrent: tuple = ()
+    recurrent_dtype: str = "bfloat16"
+    moe_experts: int = 0
+    moe_top_k: int = 0
+    prefill_exact: bool = False
+    q8_supported: bool = False
+
+    @property
+    def state_kinds(self) -> tuple:
+        """Every state kind a lane of this family holds, in engine
+        order — the allocator's reservation key."""
+        out = []
+        if self.self_kv:
+            out.append("self_kv")
+        if self.cross_kv:
+            out.append("cross_kv")
+        out.extend(self.recurrent)
+        if self.moe_experts:
+            out.append("routing")
+        return tuple(out)
+
+
+_RECURRENT_KIND = {"mamba": "ssm", "mlstm": "mstate", "slstm": "sstate"}
+
+
+@dataclasses.dataclass(frozen=True)
 class Model:
     cfg: ArchConfig
 
@@ -68,7 +130,10 @@ class Model:
         precomputed encoder output, e.g. streaming chunked encode —
         skips the encoder); img_embed (vlm, train/prefill); enc_lens
         (audio decode, optional: per-lane valid encoder lengths for
-        cross-attention over padded cached encoder states). ``pages``
+        cross-attention over padded cached encoder states); n_valid
+        (decoder-only prefill, optional: live prompt length in a padded
+        bucket — masks padding out of MoE expert-capacity routing).
+        ``pages``
         (enc-dec decode, optional): per-lane page tables when ``cache``
         is a paged pool (``repro.paging``)."""
         cfg = self.cfg
@@ -87,7 +152,8 @@ class Model:
         prefix = batch.get("img_embed") if mode != "decode" else None
         return tf_mod.decoder_forward(values, cfg, batch["tokens"],
                                       mode=mode, cache=cache, pos=pos,
-                                      prefix_embed=prefix)
+                                      prefix_embed=prefix,
+                                      n_valid=batch.get("n_valid"))
 
     def encode(self, values, frames):
         """Encoder-only pass (enc-dec models): frame embeddings
@@ -122,6 +188,60 @@ class Model:
     def cache_specs(self, batch: int, max_len: int, enc_len: int = 1500):
         return jax.eval_shape(
             lambda: self.init_cache(batch, max_len, enc_len))
+
+    # ---- lane state spec ---------------------------------------------------
+    def state_spec(self) -> LaneStateSpec:
+        """The model-declared per-lane serving state (``LaneStateSpec``).
+        Derived from the block pattern, so it is exact for every config
+        in the registry — including reduced() shrinks."""
+        cfg = self.cfg
+        if cfg.enc_dec:
+            return LaneStateSpec(
+                family=cfg.family, self_kv=True, cross_kv=True,
+                q8_supported=cfg.head_dim % 32 == 0)
+        blocks = [bt for bt, _ in tf_mod.segment_pattern(cfg)
+                  + tf_mod.tail_pattern(cfg)]
+        recurrent = []
+        for bt in blocks:
+            kind = _RECURRENT_KIND.get(bt)
+            if kind is not None and kind not in recurrent:
+                recurrent.append(kind)
+        self_kv = any(bt in ("attn", "shared_attn") for bt in blocks)
+        q8 = (self_kv and cfg.head_dim % 32 == 0
+              and cfg.attn_softcap is None and cfg.sliding_window is None
+              and not cfg.local_global)
+        return LaneStateSpec(
+            family=cfg.family, self_kv=self_kv, cross_kv=False,
+            recurrent=tuple(recurrent),
+            moe_experts=cfg.n_experts if cfg.is_moe else 0,
+            moe_top_k=cfg.top_k if cfg.is_moe else 0,
+            prefill_exact=bool(recurrent), q8_supported=q8)
+
+    def lane_state_bytes(self, max_len: int, enc_len: int = 1500,
+                         dtype=jnp.bfloat16) -> dict:
+        """Per-lane state footprint by kind, in bytes (eval_shape — no
+        allocation): ``{"kv": ..., "state": ..., "total": ...}``. ``kv``
+        grows O(max_len) (+O(enc_len) cross); ``state`` is the
+        constant-size recurrent/routing footprint — the number the
+        edge-memory story in the paper's follow-up turns on."""
+        specs = jax.eval_shape(
+            lambda: self.init_cache(1, max_len, enc_len, dtype=dtype))
+
+        def walk(tree):
+            if isinstance(tree, dict):
+                if set(tree) in ({"k", "v"}, {"kq", "ks", "vq", "vs"}):
+                    return (sum(int(l.size * l.dtype.itemsize)
+                                for l in jax.tree.leaves(tree)), 0)
+                kv = st = 0
+                for sub in tree.values():
+                    a, b = walk(sub)
+                    kv, st = kv + a, st + b
+                return kv, st
+            return 0, sum(int(l.size * l.dtype.itemsize)
+                          for l in jax.tree.leaves(tree))
+
+        kv, st = walk(specs)
+        return {"kv": kv, "state": st, "total": kv + st}
 
     # ---- count ------------------------------------------------------------
     def n_params(self) -> int:

@@ -31,8 +31,21 @@ def init_moe(keys: KeyGen, cfg: ArchConfig) -> dict:
     }
 
 
+def _count_routes(top_i: jax.Array, b: int, e: int,
+                  counts: jax.Array) -> jax.Array:
+    """Accumulate executed top-k assignments into per-lane counters.
+    ``top_i``: (b, s, k) or (b*s, k) expert indices; ``counts``: (b, e)
+    int32. Counts *executed* routing decisions — the serving engine
+    decodes every slot each tick, so parked lanes keep counting; this
+    is a device-work diagnostic (who loaded which expert), not a
+    billing meter."""
+    hits = jax.nn.one_hot(top_i.reshape(b, -1), e, dtype=jnp.int32)
+    return counts + hits.sum(axis=1)
+
+
 def moe_ffn(p: dict, x: jax.Array, cfg: ArchConfig,
-            grouped: bool = None) -> jax.Array:
+            grouped: bool = None, route_counts: jax.Array = None,
+            valid_len: jax.Array = None):
     """x: (B, S, d) -> (B, S, d).
 
     ``grouped=True`` (default; §Perf hillclimb B): GShard-style *groups* —
@@ -44,12 +57,24 @@ def moe_ffn(p: dict, x: jax.Array, cfg: ArchConfig,
     flattened token dim — replicated (E, global_cap, d) dispatch tensors
     and (n_global, d) all-reduces every layer made mixtral-8x7b the only
     collective-bound cell of the baseline table (EXPERIMENTS.md §Perf).
+
+    ``route_counts`` ((B, E) int32, the serving cache's per-lane
+    "routing" plane): when given, returns ``(out, new_counts)`` with
+    this layer's executed top-k assignments accumulated in.
+
+    ``valid_len`` (scalar int, serving prefill): positions >= valid_len
+    are bucket padding — their gates are zeroed before the per-expert
+    capacity top-C, so padding can never evict a live token from an
+    expert. Capacity routing is non-causal (unlike attention, where the
+    causal mask already hides the padded tail), so an unmasked padded
+    bucket would change live tokens' expert assignments.
     """
     if grouped is None:
         from repro import flags
         grouped = not flags.BASELINE
     if not grouped:
-        return _moe_ffn_global(p, x, cfg)
+        return _moe_ffn_global(p, x, cfg, route_counts=route_counts,
+                               valid_len=valid_len)
     b, s, d = x.shape
     e, top_k = cfg.n_experts, cfg.top_k
     cap = min(s, max(top_k, int(cfg.capacity_factor * s * top_k / e)))
@@ -64,6 +89,8 @@ def moe_ffn(p: dict, x: jax.Array, cfg: ArchConfig,
     gate = jnp.zeros((b, s, e), jnp.float32)
     gate = gate.at[jnp.arange(b)[:, None, None],
                    jnp.arange(s)[None, :, None], top_i].set(top_p)
+    if valid_len is not None:
+        gate = gate * (jnp.arange(s) < valid_len)[None, :, None]
     gate_t = constrain(gate.swapaxes(1, 2), "batch", "experts", None)
     sel_gate, sel_tok = jax.lax.top_k(gate_t, cap)         # (b, e, cap)
 
@@ -85,10 +112,15 @@ def moe_ffn(p: dict, x: jax.Array, cfg: ArchConfig,
             ye.reshape(e * cap, d).astype(jnp.float32))
 
     out = jax.vmap(combine_row)(sel_tok, y_e).astype(x.dtype)
-    return constrain(out, "batch", "q_seq", "embed")
+    out = constrain(out, "batch", "q_seq", "embed")
+    if route_counts is not None:
+        return out, _count_routes(top_i, b, e, route_counts)
+    return out
 
 
-def _moe_ffn_global(p: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+def _moe_ffn_global(p: dict, x: jax.Array, cfg: ArchConfig,
+                    route_counts: jax.Array = None,
+                    valid_len: jax.Array = None):
     """Baseline (pre-hillclimb) dispatch: global-token top-C. Kept for
     the §Perf A/B and the equivalence tests."""
     b, s, d = x.shape
@@ -106,6 +138,9 @@ def _moe_ffn_global(p: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
 
     gate = jnp.zeros((n, e), jnp.float32)
     gate = gate.at[jnp.arange(n)[:, None], top_i].set(top_p)
+    if valid_len is not None:                 # see moe_ffn: padding mask
+        live = jnp.broadcast_to(jnp.arange(s) < valid_len, (b, s))
+        gate = gate * live.reshape(n)[:, None]
     gate_t = constrain(gate.T, "experts", None)            # (e, n)
     sel_gate, sel_tok = jax.lax.top_k(gate_t, cap)         # (e, cap)
 
@@ -123,7 +158,10 @@ def _moe_ffn_global(p: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
     out = jnp.zeros((n, d), jnp.float32)
     out = out.at[sel_tok.reshape(-1)].add(y_e.reshape(e * cap, d))
     out = out.astype(x.dtype).reshape(b, s, d)
-    return constrain(out, "batch", "q_seq", "embed")
+    out = constrain(out, "batch", "q_seq", "embed")
+    if route_counts is not None:
+        return out, _count_routes(top_i, b, e, route_counts)
+    return out
 
 
 def load_balance_loss(p: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:

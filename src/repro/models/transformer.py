@@ -84,7 +84,7 @@ def _init_block(keys: KeyGen, cfg: ArchConfig, btype: str) -> dict:
 
 def _apply_block(bp: dict, x, cfg: ArchConfig, btype: str, kind: str, *,
                  mode: str, cache, pos, shared: Optional[dict],
-                 layer_idx=None):
+                 layer_idx=None, n_valid=None):
     """``layer_idx`` (decode): ``cache`` holds the STACKED (L, …) subtree
     for this block; attention writes its token in place at layer_idx;
     state blocks (ssm/xlstm) slice their layer's state and write the
@@ -112,13 +112,33 @@ def _apply_block(bp: dict, x, cfg: ArchConfig, btype: str, kind: str, *,
             cache=None if cache is None else cache.get("kv"), pos=pos,
             layer_idx=layer_idx)
         x = x + a
+        new_routing = None
         if cfg.d_ff and "ln2" in p:
             h = rmsnorm(p["ln2"], x, cfg.norm_eps)
             if cfg.is_moe:
-                x = x + moe_mod.moe_ffn(p["moe"], h, cfg)
+                # per-lane expert-routing counters (LaneStateSpec
+                # "routing"): caches that carry a "routing" plane get it
+                # updated with this layer's executed top-k assignments
+                rsub = None if cache is None else cache.get("routing")
+                if rsub is not None:
+                    y, rc = moe_mod.moe_ffn(p["moe"], h, cfg,
+                                            route_counts=_slice(rsub),
+                                            valid_len=n_valid)
+                    x = x + y
+                    new_routing = _unslice(rsub, rc)
+                else:
+                    x = x + moe_mod.moe_ffn(p["moe"], h, cfg,
+                                            valid_len=n_valid)
             else:
                 x = x + mlp(p["mlp"], h, cfg.act)
-        return x, (None if new_cache is None else {"kv": new_cache})
+        if new_cache is None and new_routing is None:
+            return x, None
+        out_cache = {}
+        if new_cache is not None:
+            out_cache["kv"] = new_cache
+        if new_routing is not None:
+            out_cache["routing"] = new_routing
+        return x, out_cache
     if btype == "mamba":
         h = rmsnorm(bp["ln1"], x, cfg.norm_eps)
         sub = None if cache is None else cache.get("ssm")
@@ -146,7 +166,11 @@ def _apply_block(bp: dict, x, cfg: ArchConfig, btype: str, kind: str, *,
 def _block_cache(cfg: ArchConfig, btype: str, kind: str, batch: int,
                  max_len: int, dtype):
     if btype in ("attn", "shared_attn"):
-        return {"kv": attn_mod.init_kv_cache(cfg, batch, max_len, dtype)}
+        c = {"kv": attn_mod.init_kv_cache(cfg, batch, max_len, dtype)}
+        if cfg.is_moe and cfg.d_ff:
+            # LaneStateSpec "routing": per-lane executed top-k counters
+            c["routing"] = jnp.zeros((batch, cfg.n_experts), jnp.int32)
+        return c
     # "q8_0" applies to KV planes only; recurrent states stay bf16
     # (they are O(1)-sized and fully rewritten every step — no LOAD win)
     if isinstance(dtype, str) and dtype == "q8_0":
@@ -154,9 +178,9 @@ def _block_cache(cfg: ArchConfig, btype: str, kind: str, batch: int,
     if btype == "mamba":
         return {"ssm": ssm_mod.init_mamba_cache(cfg, batch, dtype)}
     if btype == "mlstm":
-        return {"mstate": xlstm_mod.init_mlstm_cache(cfg, batch)}
+        return {"mstate": xlstm_mod.init_mlstm_cache(cfg, batch, dtype)}
     if btype == "slstm":
-        return {"sstate": xlstm_mod.init_slstm_cache(cfg, batch)}
+        return {"sstate": xlstm_mod.init_slstm_cache(cfg, batch, dtype)}
     raise ValueError(btype)
 
 
@@ -203,7 +227,7 @@ def init_decoder(key, cfg: ArchConfig) -> dict:
 
 
 def _scan_stack(params_stack, cache_stack, x, cfg, pattern, *, mode, pos,
-                shared):
+                shared, n_valid=None):
     """Scan segments; returns (x, new_cache_stack).
 
     Decode carries the stacked cache through the scan and each segment
@@ -220,7 +244,8 @@ def _scan_stack(params_stack, cache_stack, x, cfg, pattern, *, mode, pos,
             bc = None if seg_cache is None else seg_cache[f"block{j}"]
             x, nc = _apply_block(seg_params[f"block{j}"], x, cfg, bt, kind,
                                  mode=mode, cache=bc, pos=pos,
-                                 shared=shared, layer_idx=layer_idx)
+                                 shared=shared, layer_idx=layer_idx,
+                                 n_valid=n_valid)
             new_caches[f"block{j}"] = nc
         x = constrain(x, "batch", "q_seq", "embed")
         return x, (None if mode == "train" else new_caches)
@@ -277,21 +302,27 @@ def _scan_stack(params_stack, cache_stack, x, cfg, pattern, *, mode, pos,
 
 def decoder_forward(params: dict, cfg: ArchConfig, tokens, *,
                     mode: str = "train", cache=None, pos=None,
-                    prefix_embed=None):
+                    prefix_embed=None, n_valid=None):
     """tokens: (B, S) int32 (S=1 for decode). ``prefix_embed``: (B, P, d)
     continuous embeddings prepended at position 0 (VLM patch stub).
+    ``n_valid`` (scalar int, bucketed serving prefill): live prompt
+    length — positions past it are padding, masked out of MoE
+    expert-capacity routing (attention already hides them causally).
     Returns (logits, new_cache)."""
     values = params
     x = embed(values["embed"], tokens)
     if prefix_embed is not None:
         x = jnp.concatenate([prefix_embed.astype(x.dtype), x], axis=1)
+        if n_valid is not None:
+            n_valid = n_valid + prefix_embed.shape[1]
     x = constrain(x, "batch", "q_seq", "embed")
 
     pattern = segment_pattern(cfg)
     shared = values.get("shared")
     seg_cache = None if cache is None else cache["segments"]
     x, new_seg_cache = _scan_stack(values["segments"], seg_cache, x, cfg,
-                                   pattern, mode=mode, pos=pos, shared=shared)
+                                   pattern, mode=mode, pos=pos,
+                                   shared=shared, n_valid=n_valid)
     new_cache = None
     tail_cache = None
     if "tail" in values:

@@ -145,6 +145,10 @@ def mlstm_block(p: dict, x: jax.Array, cfg: ArchConfig, *,
         jnp.einsum("bsi,ih->bsh", u.astype(jnp.float32),
                    p["wf"].astype(jnp.float32)) + p["f_bias"])
 
+    # the state cache declares its storage dtype (LaneStateSpec); steps
+    # compute in f32 and cast back on write so a serving pool's donated
+    # scan carry never silently widens to f32
+    cdt = cache["C"].dtype if cache is not None else jnp.float32
     if mode == "decode":
         assert cache is not None
         state = (cache["C"].astype(jnp.float32), cache["n"].astype(jnp.float32),
@@ -152,11 +156,13 @@ def mlstm_block(p: dict, x: jax.Array, cfg: ArchConfig, *,
         y, (C, n, m) = _mlstm_core_step(q[:, 0], k[:, 0], v[:, 0],
                                         i_raw[:, 0], logf[:, 0], state)
         y = y[:, None]
-        new_cache = {"C": C, "n": n, "m": m}
+        new_cache = {"C": C.astype(cdt), "n": n.astype(cdt),
+                     "m": m.astype(cdt)}
     else:
         state = _init_mstate(b, h, hd)
         y, (C, n, m) = _mlstm_core_chunked(q, k, v, i_raw, logf, state)
-        new_cache = {"C": C, "n": n, "m": m} if mode == "prefill" else None
+        new_cache = {"C": C.astype(cdt), "n": n.astype(cdt),
+                     "m": m.astype(cdt)} if mode == "prefill" else None
 
     y = y.reshape(b, -1, d_in).astype(x.dtype)
     y = rmsnorm(p["out_norm"], y, cfg.norm_eps) * g[:, :y.shape[1]]
@@ -171,10 +177,16 @@ def _init_mstate(b, h, hd):
             jnp.full((b, h), -1e30, jnp.float32))
 
 
-def init_mlstm_cache(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> dict:
+def init_mlstm_cache(cfg: ArchConfig, batch: int,
+                     dtype=jnp.bfloat16) -> dict:
+    """Per-lane mLSTM state ``{C: (b,h,hd,hd), n: (b,h,hd), m: (b,h)}``.
+    ``dtype`` is the storage dtype (every leaf, ``m`` included — it
+    used to stay f32, which silently widened serving pools); defaults
+    bf16, unified with ``init_mamba_cache``."""
     d_in, h, hd = _mdims(cfg)
     C, n, m = _init_mstate(batch, h, hd)
-    return {"C": C.astype(dtype), "n": n.astype(dtype), "m": m}
+    return {"C": C.astype(dtype), "n": n.astype(dtype),
+            "m": m.astype(dtype)}
 
 
 # ----------------------------------------------------------------------------
@@ -263,7 +275,9 @@ def slstm_block(p: dict, x: jax.Array, cfg: ArchConfig, *,
 
         state, hs = jax.lax.scan(step_legacy, state0, x.swapaxes(0, 1))
         y = hs.swapaxes(0, 1).reshape(b, s, d)
-        new_cache = dict(zip(("c", "n", "h", "m"), state)) \
+        cdt = cache["c"].dtype if cache is not None else jnp.float32
+        new_cache = dict(zip(("c", "n", "h", "m"),
+                             (s_.astype(cdt) for s_ in state))) \
             if mode == "prefill" else None
         y = rmsnorm(p["out_norm"], y.astype(x.dtype), cfg.norm_eps)
         u = jax.nn.gelu(jnp.einsum("bsd,di->bsi", y.astype(jnp.bfloat16),
@@ -272,13 +286,17 @@ def slstm_block(p: dict, x: jax.Array, cfg: ArchConfig, *,
         return out.astype(x.dtype), new_cache
 
     r_all = _stacked_r(p)
+    # storage-dtype contract as in mlstm_block: f32 step math, cast back
+    # to the cache's declared dtype on write
+    cdt = cache["c"].dtype if cache is not None else jnp.float32
     if mode == "decode":
         assert cache is not None
         state = tuple(cache[k].astype(jnp.float32) for k in ("c", "n", "h", "m"))
         wx = _slstm_wx(p, x)[:, :, 0]          # (4, B, H, hd)
         state = _slstm_step(r_all, wx, state)
         y = state[2].reshape(b, 1, d)
-        new_cache = dict(zip(("c", "n", "h", "m"), state))
+        new_cache = dict(zip(("c", "n", "h", "m"),
+                             (s_.astype(cdt) for s_ in state)))
     else:
         state0 = _init_sstate(b, h_, hd)
         wx_all = _slstm_wx(p, x)               # (4, B, S, H, hd)
@@ -290,7 +308,8 @@ def slstm_block(p: dict, x: jax.Array, cfg: ArchConfig, *,
         state, hs = jax.lax.scan(step, state0,
                                  wx_all.transpose(2, 0, 1, 3, 4))
         y = hs.swapaxes(0, 1).reshape(b, s, d)
-        new_cache = dict(zip(("c", "n", "h", "m"), state)) \
+        new_cache = dict(zip(("c", "n", "h", "m"),
+                             (s_.astype(cdt) for s_ in state))) \
             if mode == "prefill" else None
 
     y = rmsnorm(p["out_norm"], y.astype(x.dtype), cfg.norm_eps)
@@ -305,7 +324,12 @@ def _init_sstate(b, h, hd):
     return (z, z, z, jnp.full((b, h, hd), -1e30, jnp.float32))
 
 
-def init_slstm_cache(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> dict:
+def init_slstm_cache(cfg: ArchConfig, batch: int,
+                     dtype=jnp.bfloat16) -> dict:
+    """Per-lane sLSTM state, four ``(b, h, hd)`` leaves. ``dtype`` is
+    the storage dtype (previously ignored — the cache was always f32);
+    defaults bf16, unified with ``init_mamba_cache``."""
     h, hd = cfg.n_heads, cfg.d_model // cfg.n_heads
     c, n, hh, m = _init_sstate(batch, h, hd)
-    return {"c": c, "n": n, "h": hh, "m": m}
+    return {"c": c.astype(dtype), "n": n.astype(dtype),
+            "h": hh.astype(dtype), "m": m.astype(dtype)}

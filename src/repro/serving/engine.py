@@ -1,4 +1,15 @@
-"""Serving engine: slot-based KV cache + jitted prefill/decode.
+"""Serving engine: spec-declared per-lane state + jitted prefill/decode.
+
+Per-lane state is **model-declared** (``Model.state_spec()`` →
+``LaneStateSpec``), not assumed: attention families carry slot/paged KV
+planes, SSM/mLSTM/sLSTM families carry constant-size recurrent buffers
+(``conv``/``h``, ``(C, n, m)``, ``(c, n, h, m)``) that are fully
+rewritten every step, MoE families add per-lane expert-routing counters
+— and one engine serves all of them. Admission (exact-length prefill
+for recurrent lanes), the fused decode tick, donation, q8_0 storage,
+abort/free, and the traffic/energy accounting all key off the spec;
+``LaneStatePool`` (lanestate.py) is the host-side ledger of which state
+each live lane holds.
 
 Continuous-batching design (vLLM-style, adapted to JAX's static shapes):
 
@@ -12,7 +23,9 @@ Continuous-batching design (vLLM-style, adapted to JAX's static shapes):
   free lane **inside the prefill jit** (the pool buffer is donated, so
   the scatter is an in-place lane write, and only the first-token argmax
   — a single scalar — crosses back to host, never the
-  ``[1, bucket, vocab]`` logits);
+  ``[1, bucket, vocab]`` logits); lanes whose spec sets
+  ``prefill_exact`` (recurrent state — scans fold padding into the
+  state) prefill at the exact prompt length instead;
 * Q8_0 weights (``core.quantize.quantize_tree``) serve through the same
   forward — the paper's quantized serving variant is a flag, not a fork.
 
@@ -43,7 +56,10 @@ caches are quantized before the slot scatter, decode writes quantize the
 new token in place, and the decode cache matvec routes through
 ``dispatch("q8_decode_attention", ...)`` — the paper's Q8_0 LOAD saving
 (~0.53x cache bytes/step, ``kernels.q8_attention.ops.cache_traffic_ratio``)
-applied to the decode bottleneck.
+applied to the decode bottleneck. Recurrent state stays at the spec's
+``recurrent_dtype`` (bf16) in both tiers — it is O(1)-sized and fully
+rewritten every step, so there is no LOAD win to quantize for; models
+with no KV planes at all (pure xLSTM/SSM) reject q8_0 outright.
 
 Encoder-decoder serving (whisper): requests carry ``enc_frames``; admit
 encodes them at their exact length (bidirectional attention — padding
@@ -79,6 +95,7 @@ from repro.models import encdec as encdec_mod
 from repro.models.attention import quantize_kv_cache
 from repro.models.model import Model
 from repro.paging import PageAllocError, PagedKV
+from repro.serving.lanestate import LaneStatePool
 from repro.platforms import Platform, get_platform
 
 
@@ -297,16 +314,31 @@ class ServeEngine:
             raise ValueError(f"decode_block must be >= 1, got "
                              f"{decode_block}")
         cfg = model.cfg
+        # the model-declared per-lane state (LaneStateSpec): which state
+        # kinds a lane carries, how prefill must run, and whether the
+        # q8_0 tier applies — every family-specific decision below keys
+        # off this instead of the config
+        self.spec = model.state_spec()
         if cache_dtype == "q8_0":
             if flags.BASELINE:
                 raise ValueError("cache_dtype='q8_0' needs the stacked "
                                  "decode path (unset REPRO_BASELINE)")
+            if not self.spec.self_kv and not self.spec.cross_kv:
+                raise ValueError(
+                    f"cache_dtype='q8_0' quantizes attention KV planes; "
+                    f"{cfg.name} lanes carry only recurrent state "
+                    f"({'/'.join(self.spec.recurrent)}) — serve it with "
+                    f"cache_dtype='bf16'")
             if cfg.attn_softcap is not None or cfg.sliding_window \
                     is not None or cfg.local_global:
                 raise ValueError(
                     f"cache_dtype='q8_0' supports plain softmax decode "
                     f"attention only; {cfg.name} uses softcap/windowed "
                     f"attention")
+            if cfg.head_dim % 32:
+                raise ValueError(
+                    f"cache_dtype='q8_0' blocks scales 32-wide along "
+                    f"head_dim; {cfg.name} has head_dim={cfg.head_dim}")
         self.platform: Optional[Platform] = \
             get_platform(platform) if platform is not None else None
         if dispatch_ctx is None and self.platform is not None:
@@ -356,6 +388,10 @@ class ServeEngine:
                                           dtype=cdt)
         self.free = list(range(n_slots))
         self.active: dict[int, RequestState] = {}   # slot -> state
+        # host-side ledger of which state each lane holds (reserved at
+        # admit/open_stream, extended per streamed chunk, released by
+        # _free_slot) — the conformance suite's leak check
+        self.lanestate = LaneStatePool(n_slots)
         # --- device-resident decode state (never re-uploaded per tick):
         # last emitted token, write position, valid encoder length, and
         # the per-lane masks/budgets the fused scan needs to freeze
@@ -524,7 +560,9 @@ class ServeEngine:
             @functools.partial(jax.jit, donate_argnums=(1,))
             def prefill(params, pool, tokens, n, slot, enc=None):
                 cache = model.init_cache(1, max_len, enc_len)
-                batch = {"tokens": tokens}
+                # n_valid: bucket padding must not win MoE expert
+                # capacity (non-enc-dec families ignore it)
+                batch = {"tokens": tokens, "n_valid": n}
                 if enc is not None:
                     batch[enc_key] = enc
                 logits, cache = model.forward(params, batch,
@@ -642,7 +680,13 @@ class ServeEngine:
             raise RejectionError(err)
         n = len(req.tokens)
         slot = self.free.pop()
-        bucket = min(_bucket(n), self.max_len)
+        # recurrent lanes (LaneStateSpec.prefill_exact) fold every input
+        # position into the end-of-prompt state, so bucket zero-padding
+        # would corrupt it — prefill at the exact prompt length (one
+        # compile per distinct length; attention-only lanes keep the
+        # power-of-2 bucket grid)
+        bucket = n if self.spec.prefill_exact \
+            else min(_bucket(n), self.max_len)
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :n] = req.tokens
         enc_s = None
@@ -701,6 +745,8 @@ class ServeEngine:
                     self.params, self.cache, jnp.asarray(toks), n, slot)
         first = int(first)   # scalar fetch — the only admit-time sync
         self._generated += 1
+        self.lanestate.reserve(slot, self.spec, n_tokens=n + req.max_new,
+                               enc_frames=enc_s or 0)
         st = RequestState(req=req, slot=slot, pos=n, out=[first])
         done = first == req.eos_id or len(st.out) >= req.max_new
         self._set_lane(slot, token=first, pos=n, enc_len=enc_s or 0,
@@ -733,6 +779,8 @@ class ServeEngine:
             # allocated per chunk in stream_feed, self pages at the
             # first anchor (when the prompt+budget extent is known)
             self.pages.admit_stream_lane(slot)
+        self.lanestate.reserve(
+            slot, self.spec, n_tokens=len(req.tokens) + req.max_new)
         st = RequestState(req=req, slot=slot, pos=0, out=[])
         self._streams[slot] = _StreamState(states=[])
         return st
@@ -784,6 +832,7 @@ class ServeEngine:
                     self.cache = self._extend(self.cache, k, v, slot,
                                               ss.n_frames)
         ss.n_frames += s_new
+        self.lanestate.extend_cross(slot, s_new)
         if first_feed:
             self._anchor(st, ss, final=False)
         else:
@@ -1021,6 +1070,8 @@ class ServeEngine:
             # scratch page (any in-flight device write for this lane
             # lands there, never on a page another lane now owns)
             self.pages.free_lane(slot)
+        if self.lanestate.holds(slot):
+            self.lanestate.release(slot)
         self.free.append(slot)
         self._set_lane(slot, token=0, pos=0, enc_len=0, eos=0, max_new=0,
                        n_out=0, active=False)
@@ -1033,22 +1084,30 @@ class ServeEngine:
     def cache_report(self) -> dict:
         """Cache footprint / decode-traffic accounting.
 
-        ``bytes_per_step`` is the full-pool KV stream of one decode step
-        (this dense implementation reads every cache position and masks
-        after the dot — exactly the paper's LOAD term; a fused tick
-        streams it ``decode_block`` times). The analytic per-token
-        figure uses ``core.quantize.stored_bytes`` under the paper's
-        dense packing (C3)."""
+        ``bytes_per_step`` is the full-pool cache stream of one decode
+        step (this dense implementation reads every cache position and
+        masks after the dot — exactly the paper's LOAD term; a fused
+        tick streams it ``decode_block`` times). Recurrent/routing
+        state (LaneStateSpec) is read AND fully rewritten every step,
+        so it streams twice per step — constant in sequence length,
+        which is the whole O(1)-state memory story; pure-KV engines see
+        a zero delta. The analytic per-token figure uses
+        ``core.quantize.stored_bytes`` under the paper's dense packing
+        (C3)."""
         kv_bytes, state_bytes = _cache_bytes(self.cache)
         cfg = self.model.cfg
         dt = "q8_0" if self.cache_dtype == "q8_0" else "bf16"
         per_tok = 2 * cfg.n_layers * stored_bytes(
             (cfg.n_kv_heads, cfg.head_dim), dt)
+        state_per_step = 2 * state_bytes
         out = {
             "cache_dtype": self.cache_dtype,
+            "family": self.spec.family,
+            "state_kinds": list(self.spec.state_kinds),
             "kv_bytes_total": kv_bytes,
             "state_bytes_total": state_bytes,
-            "bytes_per_step": kv_bytes,
+            "state_bytes_per_step": state_per_step,
+            "bytes_per_step": kv_bytes + state_per_step,
             "self_kv_bytes_per_token": per_tok,
             "traffic_ratio_vs_bf16":
                 cache_traffic_ratio() if self.cache_dtype == "q8_0" else 1.0,
@@ -1073,7 +1132,7 @@ class ServeEngine:
                 "cross_page_bytes": cpb,
                 "resident_kv_bytes": resident,
             }
-            out["bytes_per_step"] = resident
+            out["bytes_per_step"] = resident + state_per_step
         return out
 
     def paging_report(self) -> dict:
@@ -1082,6 +1141,46 @@ class ServeEngine:
         if not self.paged:
             raise ValueError("paging_report() requires paged=True")
         return self.pages.report()
+
+    def lane_report(self) -> dict:
+        """The host-side lane-state ledger (``LaneStatePool.report``):
+        which state kinds each live lane holds, with extents."""
+        return self.lanestate.report()
+
+    def routing_report(self) -> dict:
+        """MoE engines: fetch the per-lane expert-routing counters the
+        decode/prefill jits accumulate in the cache's "routing" planes.
+        A diagnostic host sync (inventoried, NOT on the per-tick path):
+        counters count *executed* top-k assignments — the fused tick
+        decodes every slot, parked lanes included, so this is the
+        device-work / expert-load picture the energy model prices, not
+        a per-request billing meter."""
+        if not self.spec.moe_experts:
+            raise ValueError(
+                f"routing_report() needs an MoE model; "
+                f"{self.model.cfg.name} declares no routing state")
+        planes = []
+
+        def grab(tree):
+            if isinstance(tree, dict):
+                for key, sub in tree.items():
+                    if key == "routing":
+                        planes.append(sub)
+                    else:
+                        grab(sub)
+
+        grab(self.cache)
+        stacked = jax.device_get(planes)   # [(n_layers_i, n_slots, E)]
+        per_lane = sum(p.sum(axis=0) for p in stacked)  # (n_slots, E)
+        totals = per_lane.sum(axis=0)
+        return {
+            "n_experts": self.spec.moe_experts,
+            "top_k": self.spec.moe_top_k,
+            "moe_layers": sum(int(p.shape[0]) for p in stacked),
+            "per_lane": per_lane.tolist(),
+            "per_expert": totals.tolist(),
+            "executed_assignments": int(totals.sum()),
+        }
 
     def page_headroom(self) -> float:
         """Free-page fraction of the tighter pool (1.0 for slot

@@ -193,6 +193,38 @@ class BatchScheduler:
         m.occupancy_sum += self.engine.n_active / self.engine.n_slots
         return finished
 
+    def abort(self, uid) -> Optional[RequestState]:
+        """Cancel a request by uid wherever it currently lives: still
+        queued (completed as CANCELLED without ever touching the
+        engine), in flight (``engine.abort`` — the lane's state
+        reservations are released and the slot zeroed for reuse), or an
+        open stream (pending chunks dropped, stream closed). Returns
+        the cancelled state, or None if the uid is unknown/already
+        completed. Works for every model family — lane teardown is
+        spec-driven in the engine."""
+        from repro.serving.engine import RejectCode
+        for i, (req, t_submit, t_wall) in enumerate(self.queue):
+            if req.uid == uid:
+                del self.queue[i]
+                st = RequestState(
+                    req=req, slot=-1, pos=0, out=[], done=True,
+                    error=f"request {uid} cancelled while queued",
+                    error_code=RejectCode.CANCELLED)
+                self.results[uid] = st
+                return st
+        for slot, (st, _pending) in list(self._streams.items()):
+            if st.req.uid == uid:
+                del self._streams[slot]
+                self.engine.abort(st)
+                self.results[uid] = st
+                return st
+        for st in list(self.engine.active.values()):
+            if st.req.uid == uid:
+                self.engine.abort(st)
+                self.results[uid] = st
+                return st
+        return None
+
     def run_until_drained(self, max_ticks: int = 10_000, *,
                           strict: bool = True) -> bool:
         """Tick until every queued/streaming/active request completes,

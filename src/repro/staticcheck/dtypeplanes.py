@@ -16,12 +16,22 @@ flags converts that are
 
 Per-token activation upcasts (argmax logits, softmax accumulators —
 all orders of magnitude below plane size) pass untouched.
+
+A second SC-DTYPE pass guards the *recurrent* planes
+(``check_recurrent_state``): SSM ``(C, n, m)`` and xLSTM ``(h, c)``
+state is computed in f32 inside a block but must be written back in
+its storage dtype — a decode tick whose output cache carries a wider
+dtype than its input silently doubles every recurrent lane's resident
+bytes from tick one (the pre-fix bug this check pins down). Verified
+shape-only via ``jax.eval_shape`` on the fused tick: the carry's leaf
+dtypes must be a fixed point.
 """
 
 from __future__ import annotations
 
 import math
 
+import jax
 import jax.numpy as jnp
 
 from repro.staticcheck.harness import HotProgram
@@ -36,8 +46,11 @@ _STORAGE_DTYPES = {jnp.dtype(jnp.int8), jnp.dtype(jnp.bfloat16),
 
 def _plane_upcasts(prog: HotProgram) -> list[dict]:
     n_slots, max_len, enc_len, head_dim = prog.plane_dims
-    min_elems = n_slots * min(max_len, enc_len) * head_dim
-    seq_dims = {max_len, enc_len}
+    # enc_len is 0 for decoder-only engines: no cross pool, so only
+    # max_len counts as a pool sequence dim
+    seq_dims = {d for d in (max_len, enc_len) if d}
+    min_elems = n_slots * min(seq_dims) * head_dim
+    state_shapes = set(prog.state_shapes)
     hits = []
     for eqn, depth in iter_eqns(prog.jaxpr):
         if eqn.primitive.name != "convert_element_type":
@@ -50,6 +63,12 @@ def _plane_upcasts(prog: HotProgram) -> list[dict]:
             continue
         shape = tuple(aval.shape)
         if math.prod(shape) < min_elems or not seq_dims & set(shape):
+            continue
+        if shape in state_shapes:
+            # recurrent/routing plane: read-upcast into f32 compute is
+            # the designed per-tick path (O(1) state per lane); the
+            # storage-width writeback is what check_recurrent_state
+            # pins down
             continue
         hits.append({"from": str(aval.dtype), "shape": list(shape),
                      "depth": depth})
@@ -82,4 +101,46 @@ def check_dtype_planes(programs: list[HotProgram]) -> list[Finding]:
                         f"{key} — the pool would stream 4-byte planes"),
                 data={"upcasts": hits,
                       "cache_dtypes": list(prog.cache_dtypes)}))
+    return out
+
+
+def check_recurrent_state(engines: list) -> list[Finding]:
+    """Recurrent-carry dtype stability: one fused decode tick must hand
+    back every cache leaf in the dtype it received it — in particular
+    the constant-size recurrent buffers (``ssm``/``mstate``/``sstate``
+    lanes), whose blocks compute in f32 and must cast back to storage
+    on write. Shape-only (``jax.eval_shape``): nothing runs on device.
+    Engines whose spec declares no recurrent state are skipped — their
+    planes are covered by the jaxpr upcast walk above."""
+    from repro.staticcheck.harness import DECODE_BLOCK
+    out = []
+    for eng in engines:
+        if not eng.spec.recurrent:
+            continue
+        cfg = eng.model.cfg
+        fn = eng._decode_fn(DECODE_BLOCK)
+        res = jax.eval_shape(fn, eng.params, eng.cache, eng._tokens,
+                             eng._pos, eng._lane_active, eng._lane_out,
+                             eng._enc_lens, eng._lane_eos,
+                             eng._lane_max)
+        new_cache = res[2]   # (tok_blk, emit_blk, cache, ...)
+        drift = []
+        for (pi, li), (_po, lo) in zip(
+                jax.tree_util.tree_leaves_with_path(eng.cache),
+                jax.tree_util.tree_leaves_with_path(new_cache)):
+            if li.dtype != lo.dtype:
+                drift.append(f"{jax.tree_util.keystr(pi)}: "
+                             f"{li.dtype} -> {lo.dtype}")
+        ok = not drift
+        out.append(Finding(
+            check=CHECK,
+            subject=f"recurrent_state[{cfg.name}|{eng.cache_dtype}]",
+            ok=ok,
+            detail=("decode carry is a dtype fixed point "
+                    f"({'/'.join(eng.spec.recurrent)} state stays "
+                    "storage-width)" if ok else
+                    "decode tick widens cache leaves: "
+                    + "; ".join(drift)),
+            data={"recurrent_kinds": list(eng.spec.recurrent),
+                  "drift": drift}))
     return out

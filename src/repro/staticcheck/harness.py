@@ -58,7 +58,10 @@ class HotProgram:
     stablehlo: str             # lowered text with donation attributes
     donated_leaves: int        # buffers jit was told to donate
     cache_dtypes: tuple = ()   # storage dtypes of the donated pool
-    plane_dims: tuple = ()     # (n_slots, max_len, enc_len, head_dim)
+    plane_dims: tuple = ()     # (n_slots, max_len, enc_len, head_dim);
+                               # enc_len 0 for decoder-only engines
+    state_shapes: tuple = ()   # shapes of non-KV (recurrent/routing)
+                               # cache planes — read-upcast by design
 
 
 def build_engine(cache_dtype: str = "q8_0",
@@ -69,6 +72,32 @@ def build_engine(cache_dtype: str = "q8_0",
     return ServeEngine(model, params, n_slots=N_SLOTS, max_len=MAX_LEN,
                        enc_len=ENC_LEN, cache_dtype=cache_dtype,
                        decode_block=DECODE_BLOCK)
+
+
+# The model-zoo engines: one decoder-only arch per served family
+# (LaneStateSpec coverage — KV-only dense, KV+routing MoE, hybrid
+# KV+ssm, pure-recurrent xlstm). Traced under the same SC-DON/SC-SYNC/
+# SC-DTYPE/SC-RECOMP checks as the whisper engines; q8_0 twins only
+# where the family's spec supports the tier.
+FAMILY_ARCHS = ("qwen3-4b", "qwen3-moe-30b-a3b", "zamba2-7b",
+                "xlstm-350m")
+
+
+def build_family_engines(cache_dtypes: tuple = ("bf16",)
+                         ) -> list[ServeEngine]:
+    """One engine per (family arch, supported cache dtype)."""
+    out = []
+    for arch in FAMILY_ARCHS:
+        model = build(reduced(get_config(arch)))
+        params = model.init_values(jax.random.key(0))
+        for cd in cache_dtypes:
+            if cd == "q8_0" and not model.state_spec().q8_supported:
+                continue
+            out.append(ServeEngine(model, params, n_slots=N_SLOTS,
+                                   max_len=MAX_LEN, enc_len=ENC_LEN,
+                                   cache_dtype=cd,
+                                   decode_block=DECODE_BLOCK))
+    return out
 
 
 def build_paged_engine(cache_dtype: str = "q8_0",
@@ -87,20 +116,51 @@ def _donated_leaves(args: tuple, argnums: tuple) -> int:
     return len(jax.tree.leaves(tuple(args[i] for i in argnums)))
 
 
+def _state_shapes(cache) -> tuple:
+    """Shapes of the cache leaves that are *not* KV planes — recurrent
+    ``(C, n, m)`` / ``(h, c, ...)`` buffers and routing counters. Same
+    classification walk the engine's byte accounting uses."""
+    shapes = set()
+
+    def walk(tree):
+        if isinstance(tree, dict):
+            if set(tree) in ({"k", "v"}, {"kq", "ks", "vq", "vs"}):
+                return
+            for v in tree.values():
+                walk(v)
+        elif isinstance(tree, (list, tuple)):
+            for v in tree:
+                walk(v)
+        elif tree is not None:
+            shape = tuple(tree.shape)
+            shapes.add(shape)
+            # layer-stacked planes are sliced per layer inside the
+            # block scan — record that view too
+            if len(shape) > 1:
+                shapes.add(shape[1:])
+
+    walk(cache)
+    return tuple(sorted(shapes))
+
+
 def _trace(name: str, jitted, args: tuple, donate: tuple,
            eng: Optional[ServeEngine] = None) -> HotProgram:
     traced = jitted.trace(*args)
     cache_dtypes = ()
     plane_dims = ()
+    state_shapes = ()
     if eng is not None:
         cache_dtypes = tuple(sorted({str(x.dtype) for x in
                                      jax.tree.leaves(eng.cache)}))
-        plane_dims = (eng.n_slots, eng.max_len, eng.enc_len,
+        plane_dims = (eng.n_slots, eng.max_len,
+                      eng.enc_len if eng.enc_dec else 0,
                       eng.model.cfg.head_dim)
+        state_shapes = _state_shapes(eng.cache)
     return HotProgram(name=name, jaxpr=traced.jaxpr,
                       stablehlo=traced.lower().as_text(),
                       donated_leaves=_donated_leaves(args, donate),
-                      cache_dtypes=cache_dtypes, plane_dims=plane_dims)
+                      cache_dtypes=cache_dtypes, plane_dims=plane_dims,
+                      state_shapes=state_shapes)
 
 
 def program_from_fn(name: str, fn, *args, donate: tuple = (),
@@ -115,9 +175,12 @@ def hot_programs(eng: ServeEngine,
                  frontend: bool = True) -> list[HotProgram]:
     """Trace the serving hot path of one engine. Program names carry
     the cache dtype (``decode_block[q8_0]``) so the two pool layouts
-    report separately."""
-    tag = f"[{eng.cache_dtype}]"
+    report separately; model-zoo engines additionally carry the arch
+    (``decode_block[xlstm-350m|bf16]``) so every family's programs get
+    their own verdicts."""
     cfg = eng.model.cfg
+    tag = f"[{eng.cache_dtype}]" if cfg.enc_dec \
+        else f"[{cfg.name}|{eng.cache_dtype}]"
     programs = []
 
     # --- fused decode tick (the per-tick program) ---
@@ -128,12 +191,19 @@ def hot_programs(eng: ServeEngine,
     programs.append(_trace(f"decode_block{tag}", dec, dec_args,
                            donate=(1, 2, 3, 4, 5), eng=eng))
 
-    # --- bucketed prefill (audio-frame input path) ---
-    pre = eng._prefill_fn(BUCKET, ENC_S)
-    toks = jax.ShapeDtypeStruct((1, BUCKET), jnp.int32)
-    frames = jax.ShapeDtypeStruct((1, ENC_S, cfg.d_model), jnp.float32)
-    programs.append(_trace(f"prefill{tag}", pre,
-                           (eng.params, eng.cache, toks, 4, 0, frames),
+    # --- prompt prefill: bucketed, or exact-length for recurrent lanes
+    # (spec.prefill_exact); decoder-only engines take no encoder input
+    bucket = BUCKET if not eng.spec.prefill_exact else BUCKET - 3
+    toks = jax.ShapeDtypeStruct((1, bucket), jnp.int32)
+    if eng.enc_dec:
+        pre = eng._prefill_fn(bucket, ENC_S)
+        frames = jax.ShapeDtypeStruct((1, ENC_S, cfg.d_model),
+                                      jnp.float32)
+        pre_args = (eng.params, eng.cache, toks, 4, 0, frames)
+    else:
+        pre = eng._prefill_fn(bucket)
+        pre_args = (eng.params, eng.cache, toks, 4, 0)
+    programs.append(_trace(f"prefill{tag}", pre, pre_args,
                            donate=(1,), eng=eng))
 
     # --- streaming cross-K/V pool extension ---

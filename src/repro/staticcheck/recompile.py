@@ -49,7 +49,10 @@ def _decode_args(eng):
 
 def check_recompile(eng) -> list[Finding]:
     out = []
+    cfg = eng.model.cfg
     ptag = "paged_" if eng.paged else ""
+    dtag = f"[{eng.cache_dtype}]" if cfg.enc_dec \
+        else f"[{cfg.name}|{eng.cache_dtype}]"
     with warnings.catch_warnings():
         # CPU has no donation support: jit warns per compile; the
         # engine's own paths silence it the same way.
@@ -64,20 +67,28 @@ def check_recompile(eng) -> list[Finding]:
         ok = same and n == 1
         out.append(Finding(
             check=CHECK,
-            subject=f"{ptag}decode_block[{eng.cache_dtype}]",
+            subject=f"{ptag}decode_block{dtag}",
             ok=ok,
             detail=(f"2 ticks -> {n} compile(s); keyed lookup "
                     f"{'stable' if same else 'UNSTABLE'}"),
             data={"compiles": n, "keyed_lookup_stable": same}))
 
         # --- prefill bucket grid ---
-        d_model = eng.model.cfg.d_model
+        # Recurrent engines prefill at exact prompt length (a zero-pad
+        # bucket would fold padding into the end-of-scan state), so
+        # their "buckets" are arbitrary lengths; the cache-keying
+        # contract is the same.
+        bucket = BUCKET if not eng.spec.prefill_exact else BUCKET - 3
+        enc = (ENC_S,) if eng.enc_dec else ()
+        d_model = cfg.d_model
         n_keys0 = len(eng._prefill_fns)
-        pre = eng._prefill_fn(BUCKET, ENC_S)
-        same = pre is eng._prefill_fn(BUCKET, ENC_S)
+        pre = eng._prefill_fn(bucket, *enc)
+        same = pre is eng._prefill_fn(bucket, *enc)
         grew = len(eng._prefill_fns) - n_keys0
-        toks = jnp.zeros((1, BUCKET), jnp.int32)
-        frames = jnp.zeros((1, ENC_S, d_model), jnp.float32)
+        toks = jnp.zeros((1, bucket), jnp.int32)
+        tail = ()
+        if eng.enc_dec:
+            tail = (jnp.zeros((1, ENC_S, d_model), jnp.float32),)
         if eng.paged:
             # page-vector targets replace the slot index; scratch page 0
             # absorbs both probe writes, so the pool is untouched
@@ -89,14 +100,15 @@ def check_recompile(eng) -> list[Finding]:
             pre_args = [(4, 0), (5, 1)]
         for extra in pre_args:
             jax.block_until_ready(
-                pre(eng.params, _copy(eng.cache), toks, *extra, frames))
+                pre(eng.params, _copy(eng.cache), toks, *extra, *tail))
         n = pre._cache_size()
-        # a second bucket is a new key — exactly one
-        eng._prefill_fn(BUCKET // 2, ENC_S)
+        # a second bucket (for exact-length engines: any other prompt
+        # length) is a new key — exactly one
+        eng._prefill_fn(bucket // 2, *enc)
         grew2 = len(eng._prefill_fns) - n_keys0 - grew
         ok = same and n == 1 and grew <= 1 and grew2 == 1
         out.append(Finding(
-            check=CHECK, subject=f"{ptag}prefill[{eng.cache_dtype}]",
+            check=CHECK, subject=f"{ptag}prefill{dtag}",
             ok=ok,
             detail=(f"2 same-bucket admits -> {n} compile(s); "
                     f"+{grew2} cache key for a new bucket"),

@@ -8,7 +8,8 @@ report all key on them):
 SC-DON      every donated hot-path buffer is aliased in-place (no copy)
 SC-SYNC     no hidden host transfer inside a compiled hot-path program
 SC-AST      source scan: host-sync calls outside the whitelisted inventory
-SC-DTYPE    no plane-sized f32 upcast of q8_0/bf16 cache pools
+SC-DTYPE    no plane-sized f32 upcast of cache pools; recurrent carry
+            dtype-stable across the fused tick
 SC-RECOMP   jit caches stable across ticks / admissions / bucket grid
 SC-FOOT     registry analytic flops/bytes match the compiled HLO cost
 SC-REG      every kernel op is host-servable (backend chain complete)
@@ -21,7 +22,8 @@ from typing import Optional
 
 from repro.staticcheck.config import StaticcheckConfig, repo_root
 from repro.staticcheck.donation import check_donation
-from repro.staticcheck.dtypeplanes import check_dtype_planes
+from repro.staticcheck.dtypeplanes import check_dtype_planes, \
+    check_recurrent_state
 from repro.staticcheck.footprint import check_footprint, check_registry
 from repro.staticcheck.recompile import check_recompile
 from repro.staticcheck.report import Finding, Report
@@ -61,20 +63,29 @@ def run_all(config: Optional[StaticcheckConfig] = None,
     root = root or repo_root()
     findings: list[Finding] = []
 
-    engines, paged_engines = [], []
+    engines, paged_engines, family_engines = [], [], []
     if selected & (_PROGRAM_CHECKS | {"SC-RECOMP"}):
         from repro.staticcheck.harness import (build_engine,
+                                               build_family_engines,
                                                build_paged_engine,
                                                hot_programs,
                                                paged_hot_programs)
         engines = [build_engine(cd) for cd in cache_dtypes]
         paged_engines = [build_paged_engine(cd) for cd in cache_dtypes]
+        # model-zoo coverage: every served family at bf16, plus one
+        # q8_0 twin (the MoE arch) so the quantized tier is exercised
+        # on a non-whisper family without doubling the engine count
+        family_engines = build_family_engines(("bf16",))
+        family_engines.append(build_engine("q8_0",
+                                           arch="qwen3-moe-30b-a3b"))
 
     if selected & _PROGRAM_CHECKS:
         programs = []
         for i, eng in enumerate(engines):
             # one frontend trace is enough — it has no cache planes
             programs.extend(hot_programs(eng, frontend=(i == 0)))
+        for eng in family_engines:
+            programs.extend(hot_programs(eng, frontend=False))
         for eng in paged_engines:
             programs.extend(paged_hot_programs(eng))
         if "SC-DON" in selected:
@@ -83,10 +94,11 @@ def run_all(config: Optional[StaticcheckConfig] = None,
             findings.extend(check_program_sync(programs))
         if "SC-DTYPE" in selected:
             findings.extend(check_dtype_planes(programs))
+            findings.extend(check_recurrent_state(family_engines))
     if "SC-AST" in selected:
         findings.extend(check_ast_syncs(root))
     if "SC-RECOMP" in selected:
-        for eng in engines + paged_engines:
+        for eng in engines + family_engines + paged_engines:
             findings.extend(check_recompile(eng))
     if "SC-FOOT" in selected:
         findings.extend(check_footprint(config))

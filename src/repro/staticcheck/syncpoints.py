@@ -39,10 +39,14 @@ _SYNC_PRIMITIVES = {"infeed", "outfeed", "io_callback", "pure_callback",
 # custom_call @xla_python_*_callback; infeed/outfeed lower to their ops)
 _SYNC_TEXT = ("callback", "stablehlo.infeed", "stablehlo.outfeed")
 
-# The whitelisted sync inventory: sites that ARE the sync budget. Each
-# entry is (path suffix, qualname, call).
+# The whitelisted sync inventory: sites that ARE the sync budget (the
+# one per-tick fetch) or reviewed off-tick diagnostics. Each entry is
+# (path suffix, qualname, call).
 SYNC_INVENTORY = [
     ("serving/engine.py", "ServeEngine.step_fetch", "jax.device_get"),
+    # MoE expert-load diagnostic: explicit operator call, never on the
+    # per-tick decode path
+    ("serving/engine.py", "ServeEngine.routing_report", "jax.device_get"),
 ]
 
 SCAN_DIRS = ("src/repro/serving", "src/repro/gateway",

@@ -1,0 +1,148 @@
+"""Property-based invariants of the spec-driven lane-state allocator
+(``repro.serving.lanestate``), hypothesis-driven like
+tests/test_paging_properties.py; the engine conformance suite carries
+the deterministic end-to-end versions.
+
+Invariants under arbitrary reserve/extend/release sequences over
+*mixed-family* lanes (the allocator is deliberately family-agnostic —
+one run interleaves dense-KV, enc-dec, MoE, hybrid-SSM and pure
+recurrent specs in one pool):
+
+* a lane's reservation always carries exactly its spec's state kinds,
+  with recurrent kinds pinned to 1 unit and routing to ``n_experts``;
+* double-reserve of a held slot and cross-extension of a lane without
+  cross-KV state fail without mutating the ledger (shadow model match);
+* totals are the exact sum of the shadow model at every step;
+* releasing every held lane drains the pool to zero across all kinds —
+  no path leaks pages, recurrent buffers, or counters.
+"""
+
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -e .[test])")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.models.model import LaneStateSpec  # noqa: E402
+from repro.serving.lanestate import LaneStatePool  # noqa: E402
+
+N_SLOTS = 6
+
+# one spec per served family, as Model.state_spec() derives them
+SPECS = (
+    LaneStateSpec(family="dense", self_kv=True, cross_kv=False),
+    LaneStateSpec(family="audio", self_kv=True, cross_kv=True),
+    LaneStateSpec(family="moe", self_kv=True, cross_kv=False,
+                  moe_experts=4, moe_top_k=2),
+    LaneStateSpec(family="hybrid", self_kv=True, cross_kv=False,
+                  recurrent=("ssm",), prefill_exact=True),
+    LaneStateSpec(family="ssm", self_kv=False, cross_kv=False,
+                  recurrent=("mstate", "sstate"), prefill_exact=True),
+)
+
+
+def _expected(spec, n_tokens, enc_frames):
+    r = {}
+    if spec.self_kv:
+        r["self_kv"] = n_tokens
+    if spec.cross_kv:
+        r["cross_kv"] = enc_frames
+    for kind in spec.recurrent:
+        r[kind] = 1
+    if spec.moe_experts:
+        r["routing"] = spec.moe_experts
+    return r
+
+
+_OPS = st.lists(
+    st.one_of(
+        st.tuples(st.just("reserve"), st.integers(0, N_SLOTS - 1),
+                  st.integers(0, len(SPECS) - 1), st.integers(0, 48),
+                  st.integers(0, 16)),
+        st.tuples(st.just("extend"), st.integers(0, 200),
+                  st.integers(0, 8)),
+        st.tuples(st.just("release"), st.integers(0, 200)),
+    ),
+    max_size=80)
+
+
+@settings(max_examples=60, deadline=None)
+@given(_OPS)
+def test_ledger_matches_shadow_and_drains(ops):
+    pool = LaneStatePool(N_SLOTS)
+    shadow: dict[int, dict] = {}       # slot -> expected reservation
+    for op in ops:
+        if op[0] == "reserve":
+            _, slot, si, n_tokens, enc_frames = op
+            spec = SPECS[si]
+            if slot in shadow:
+                with pytest.raises(ValueError):
+                    pool.reserve(slot, spec, n_tokens=n_tokens,
+                                 enc_frames=enc_frames)
+            else:
+                got = pool.reserve(slot, spec, n_tokens=n_tokens,
+                                   enc_frames=enc_frames)
+                want = _expected(spec, n_tokens, enc_frames)
+                assert got == want
+                shadow[slot] = want
+        elif op[0] == "extend":
+            _, pick, frames = op
+            live = sorted(shadow)
+            if not live:
+                continue
+            slot = live[pick % len(live)]
+            if "cross_kv" in shadow[slot]:
+                pool.extend_cross(slot, frames)
+                shadow[slot]["cross_kv"] += frames
+            else:
+                with pytest.raises(ValueError):
+                    pool.extend_cross(slot, frames)
+        else:
+            _, pick = op
+            live = sorted(shadow)
+            if not live:
+                continue
+            slot = live[pick % len(live)]
+            assert pool.release(slot) == shadow.pop(slot)
+            assert not pool.holds(slot)
+        # ledger == shadow at every step
+        assert pool.n_live == len(shadow)
+        totals = pool.totals()
+        for kind in totals:
+            assert totals[kind] == sum(r.get(kind, 0)
+                                       for r in shadow.values())
+        for slot, want in shadow.items():
+            assert pool.held(slot) == want
+        pool.check()
+    # drain: releasing every held lane zeroes every state kind
+    for slot in sorted(shadow):
+        pool.release(slot)
+    assert pool.drained
+    assert all(v == 0 for v in pool.totals().values())
+    pool.check()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, len(SPECS) - 1), st.integers(-4, 9))
+def test_reserve_bounds(si, slot):
+    pool = LaneStatePool(N_SLOTS)
+    spec = SPECS[si]
+    if 0 <= slot < N_SLOTS:
+        pool.reserve(slot, spec, n_tokens=8)
+        assert set(pool.held(slot)) == set(spec.state_kinds)
+    else:
+        with pytest.raises(ValueError):
+            pool.reserve(slot, spec, n_tokens=8)
+        assert pool.drained
+
+
+def test_negative_extents_rejected():
+    pool = LaneStatePool(2)
+    with pytest.raises(ValueError):
+        pool.reserve(0, SPECS[0], n_tokens=-1)
+    pool.reserve(0, SPECS[1], n_tokens=4, enc_frames=4)
+    with pytest.raises(ValueError):
+        pool.extend_cross(0, -2)
+    assert pool.held(0) == {"self_kv": 4, "cross_kv": 4}

@@ -136,7 +136,7 @@ def test_mlstm_chunked_equals_recurrent():
     x = jax.random.normal(jax.random.key(6), (2, 16, cfg.d_model),
                           jnp.float32) * 0.5
     y_par, _ = xlstm.mlstm_block(params, x, cfg, mode="train")
-    cache = xlstm.init_mlstm_cache(cfg, 2)
+    cache = xlstm.init_mlstm_cache(cfg, 2, jnp.float32)
     ys = []
     for t in range(16):
         y, cache = xlstm.mlstm_block(params, x[:, t:t + 1], cfg,

@@ -1,0 +1,127 @@
+"""Recurrent-step parity oracles: the chunked-scan *prefill* paths hand
+exactly the state a step-wise recurrence would have produced.
+
+The serving engine admits recurrent lanes with an exact-length chunked
+prefill (``mode="prefill"``) and then continues token-by-token through
+the fused decode tick — so the end-of-prefill state is load-bearing:
+any drift there corrupts every subsequent decode step. Each family's
+oracle here runs the same sequence two ways —
+
+  chunked prefill over the prompt, then step-wise decode of the tail
+  vs. step-wise decode of the whole sequence from zero state
+
+— and asserts the tail outputs agree. sLSTM additionally pins the
+fused-scan formulation against the legacy per-step-GEMV baseline
+(``flags.BASELINE``), state included.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.models.layers import KeyGen, split_params
+
+B, S, SPLIT = 2, 12, 7          # prefill x[:, :SPLIT], decode the rest
+
+
+def _x(cfg, seed):
+    return jax.random.normal(jax.random.key(seed),
+                             (B, S, cfg.d_model), jnp.float32) * 0.5
+
+
+def _tail_stepwise(block, params, x, cfg, cache, t0):
+    ys = []
+    for t in range(t0, x.shape[1]):
+        y, cache = block(params, x[:, t:t + 1], cfg, mode="decode",
+                         cache=cache, pos=t)
+        ys.append(y)
+    return jnp.concatenate(ys, axis=1), cache
+
+
+def _assert_close(a, b, tol=2e-2):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_mamba_prefill_state_matches_stepwise():
+    """zamba2's SSD chunked prefill state == step-wise SSM state: the
+    decode tail continued from the prefill cache equals the tail of the
+    all-steps reference (``mamba_recurrent_ref`` stepping from zero)."""
+    from repro.models import ssm
+    cfg = reduced(get_config("zamba2-7b"))
+    params, _ = split_params(ssm.init_mamba(KeyGen(jax.random.key(3)),
+                                            cfg))
+    x = _x(cfg, 4)
+    cache = ssm.init_mamba_cache(cfg, B, jnp.float32)
+    _, cache = ssm.mamba_block(params, x[:, :SPLIT], cfg,
+                               mode="prefill", cache=cache)
+    y_tail, _ = _tail_stepwise(ssm.mamba_block, params, x, cfg, cache,
+                               SPLIT)
+    y_ref = ssm.mamba_recurrent_ref(params, x, cfg)
+    _assert_close(y_tail, y_ref[:, SPLIT:])
+
+
+def test_mlstm_prefill_state_matches_stepwise():
+    """xlstm's chunked-parallel mLSTM prefill hands the same ``(C, n,
+    m)`` a pure ``_mlstm_core_step`` recurrence reaches."""
+    from repro.models import xlstm
+    cfg = reduced(get_config("xlstm-350m"))
+    params, _ = split_params(xlstm.init_mlstm(KeyGen(jax.random.key(5)),
+                                              cfg))
+    x = _x(cfg, 6)
+    cache = xlstm.init_mlstm_cache(cfg, B, jnp.float32)
+    _, cache = xlstm.mlstm_block(params, x[:, :SPLIT], cfg,
+                                 mode="prefill", cache=cache)
+    y_tail, _ = _tail_stepwise(xlstm.mlstm_block, params, x, cfg,
+                               cache, SPLIT)
+    ref_cache = xlstm.init_mlstm_cache(cfg, B, jnp.float32)
+    y_ref, _ = _tail_stepwise(xlstm.mlstm_block, params, x, cfg,
+                              ref_cache, 0)
+    _assert_close(y_tail, y_ref[:, SPLIT:])
+
+
+def test_slstm_prefill_state_matches_stepwise():
+    """sLSTM's fused-scan prefill state == per-token ``_slstm_step``
+    state."""
+    from repro.models import xlstm
+    cfg = reduced(get_config("xlstm-350m"))
+    params, _ = split_params(xlstm.init_slstm(KeyGen(jax.random.key(7)),
+                                              cfg))
+    x = _x(cfg, 8)
+    cache = xlstm.init_slstm_cache(cfg, B, jnp.float32)
+    _, cache = xlstm.slstm_block(params, x[:, :SPLIT], cfg,
+                                 mode="prefill", cache=cache)
+    y_tail, _ = _tail_stepwise(xlstm.slstm_block, params, x, cfg,
+                               cache, SPLIT)
+    ref_cache = xlstm.init_slstm_cache(cfg, B, jnp.float32)
+    y_ref, _ = _tail_stepwise(xlstm.slstm_block, params, x, cfg,
+                              ref_cache, 0)
+    _assert_close(y_tail, y_ref[:, SPLIT:])
+
+
+def test_slstm_scan_matches_legacy_baseline(monkeypatch):
+    """The hoisted-GEMM sLSTM scan tracks the legacy per-step formulation
+    (``flags.BASELINE``): same prefill outputs AND the same handed-off
+    ``(c, n, h, m)`` state leaves — to bf16 input precision, since the
+    hoisted gate GEMMs run with bf16 operands (f32 accumulate) where the
+    legacy in-scan GEMVs were full f32."""
+    from repro import flags
+    from repro.models import xlstm
+    cfg = reduced(get_config("xlstm-350m"))
+    params, _ = split_params(xlstm.init_slstm(KeyGen(jax.random.key(9)),
+                                              cfg))
+    x = _x(cfg, 10)
+
+    def prefill():
+        cache = xlstm.init_slstm_cache(cfg, B, jnp.float32)
+        return xlstm.slstm_block(params, x, cfg, mode="prefill",
+                                 cache=cache)
+
+    y_fast, cache_fast = prefill()
+    monkeypatch.setattr(flags, "BASELINE", True)
+    y_legacy, cache_legacy = prefill()
+    _assert_close(y_fast, y_legacy)
+    for k in ("c", "n", "h", "m"):
+        _assert_close(cache_fast[k], cache_legacy[k])
