@@ -1,6 +1,6 @@
 """Decode throughput: tokens/s and host syncs per token across
-``decode_block x cache_dtype`` — the serving engine's measured-perf
-trajectory.
+``decode_block x cache_dtype x {plain, speculative}`` — the serving
+engine's measured-perf trajectory.
 
 The fused decode loop (``ServeEngine.step``) runs ``decode_block``
 decode steps inside one donated jit and syncs to host once per tick, so
@@ -22,6 +22,19 @@ that down three ways:
 * the model is a micro whisper config (1 enc / 1 dec layer, d=64):
   the point is the loop overhead around a decode step, not the step
   itself — ``decode_traffic``/``e2e_asr`` cover the reduced config.
+
+The q4_0 tier and self-speculative cells add two more blocking,
+deterministic properties:
+
+* the q4_0 pool's cache stream per decode step measures below
+  0.5312x the q8_0 pool's (0.28125 / 0.53125 ~= 0.529 of it — the
+  nibble planes beat q8 by almost 2x on the LOAD term);
+* the speculative tick beats plain q8_0 serving by > 1.3x on the
+  platform-roofline *modeled* tokens/s, computed from the MEASURED
+  acceptance rate of this very serve (``energy_report``), at
+  token-identical outputs. Wall-clock speculative tok/s is reported
+  but, like every wall-clock figure here, is not gated on shared-CPU
+  runners.
 """
 
 import dataclasses
@@ -39,13 +52,16 @@ from repro.models.model import build
 from repro.serving.engine import AudioRequest, ServeEngine
 
 BLOCKS = (1, 4, 16)
-CACHE_DTYPES = ("bf16", "q8_0")
+CACHE_DTYPES = ("bf16", "q8_0", "q4_0")
 N_SLOTS = 2
 MAX_LEN = 64
 ENC_FRAMES = 12
 MAX_NEW = 49          # 1 prefill token + 48 decode tokens; 48 % 16 == 0
 PROMPTS = ([5, 6, 7], [9, 10, 11, 12])
 PASSES = 6            # timed passes per cell (interleaved, best-of)
+SPEC_K = 4            # draft 3 + verify 1 per round; 16 % 4 == 0
+SPEC_BLOCK = 16
+PLATFORM = "imax3-28nm/32k"
 
 
 def _micro_whisper():
@@ -133,30 +149,38 @@ def _seed_pass(eng, loop, cfg):
     n = loop.serve(sts)
     dt = time.monotonic() - t0
     eng.free = list(range(eng.n_slots))
+    for slot in range(eng.n_slots):     # bypassed retire(): drop the
+        if eng.lanestate.holds(slot):   # lane-state reservations too
+            eng.lanestate.release(slot)
     return [st.out for st in sts], n, dt
 
 
 def run():
     cfg, model, params = _micro_whisper()
 
-    def engine(cache_dtype, block):
+    def engine(cache_dtype, block, spec_k=0):
         return ServeEngine(model, params, n_slots=N_SLOTS,
                            max_len=MAX_LEN, enc_len=16,
-                           cache_dtype=cache_dtype, decode_block=block)
+                           cache_dtype=cache_dtype, decode_block=block,
+                           spec_k=spec_k, platform=PLATFORM)
 
     cells = {}          # (dtype, block) -> dict
     seed = {}           # dtype -> dict
+    spec = {}           # dtype -> dict (speculative tick, SPEC_BLOCK)
     for dt in CACHE_DTYPES:
         for b in BLOCKS:
             cells[(dt, b)] = {"eng": engine(dt, b), "best": float("inf")}
         e = engine(dt, 1)
         seed[dt] = {"eng": e, "loop": _SeedLoop(e), "best": float("inf")}
+        spec[dt] = {"eng": engine(dt, SPEC_BLOCK, spec_k=SPEC_K),
+                    "best": float("inf")}
 
     # compile warmup, then interleaved timed passes: contention and
     # throttle phases hit every cell, best-of filters the spikes
     for dt in CACHE_DTYPES:
         for b in BLOCKS:
             _fused_pass(cells[(dt, b)]["eng"], cfg)
+        _fused_pass(spec[dt]["eng"], cfg)
         _seed_pass(seed[dt]["eng"], seed[dt]["loop"], cfg)
     gc.disable()
     try:
@@ -169,6 +193,11 @@ def run():
                     c["sum_toks"] = c.get("sum_toks", 0) + toks
                     c["sum_syncs"] = c.get("sum_syncs", 0) + syncs
                     c.update(outs=outs, toks=toks, best=min(c["best"], wall))
+                sp = spec[dt]
+                outs, toks, syncs, ticks, wall = _fused_pass(sp["eng"], cfg)
+                sp["sum_toks"] = sp.get("sum_toks", 0) + toks
+                sp["sum_syncs"] = sp.get("sum_syncs", 0) + syncs
+                sp.update(outs=outs, toks=toks, best=min(sp["best"], wall))
                 s = seed[dt]
                 outs, toks, wall = _seed_pass(s["eng"], s["loop"], cfg)
                 s.update(outs=outs, toks=toks, best=min(s["best"], wall))
@@ -186,6 +215,14 @@ def run():
             c["sum_syncs"] / max(c["sum_toks"], 1), 5)
         one_sync_per_tick &= eng._host_syncs == eng._ticks
         parity[dt] &= c["outs"] == cells[(dt, 1)]["outs"]
+    spec_parity, acceptance = {}, {}
+    for dt, sp in spec.items():
+        tok_s[f"{dt}/spec{SPEC_K}"] = round(sp["toks"] / sp["best"], 1)
+        syncs_per_tok[f"{dt}/spec{SPEC_K}"] = round(
+            sp["sum_syncs"] / max(sp["sum_toks"], 1), 5)
+        one_sync_per_tick &= sp["eng"]._host_syncs == sp["eng"]._ticks
+        spec_parity[dt] = sp["outs"] == cells[(dt, 1)]["outs"]
+        acceptance[dt] = round(sp["eng"].acceptance_rate, 4)
     seed_tok_s = {dt: round(s["toks"] / s["best"], 1)
                   for dt, s in seed.items()}
     seed_parity = {dt: seed[dt]["outs"] == cells[(dt, 1)]["outs"]
@@ -194,6 +231,23 @@ def run():
                     for dt in CACHE_DTYPES}
     speedup_16vseed = {dt: tok_s[f"{dt}/block16"] / seed_tok_s[dt]
                        for dt in CACHE_DTYPES}
+
+    # cache-stream LOAD term per decode step, straight off the pools
+    bytes_per_step = {dt: cells[(dt, 16)]["eng"].cache_report()
+                      ["bytes_per_step"] for dt in CACHE_DTYPES}
+    q4_stream_vs_q8 = bytes_per_step["q4_0"] / bytes_per_step["q8_0"]
+
+    # roofline tokens/s with the acceptance rate MEASURED on this very
+    # serve — deterministic (the greedy token stream is), unlike the
+    # wall-clock columns
+    modeled_tok_s = {}
+    for dt in CACHE_DTYPES:
+        modeled_tok_s[f"{dt}/plain16"] = \
+            cells[(dt, 16)]["eng"].energy_report()["modeled_tokens_per_s"]
+        modeled_tok_s[f"{dt}/spec{SPEC_K}"] = \
+            spec[dt]["eng"].energy_report()["modeled_tokens_per_s"]
+    spec_modeled_gain = (modeled_tok_s[f"q4_0/spec{SPEC_K}"]
+                         / modeled_tok_s["q8_0/plain16"])
 
     lines = [
         f"decode throughput: micro whisper (1+1 layers, d=64), "
@@ -205,23 +259,42 @@ def run():
         for b in BLOCKS:
             lines.append(f"{dt:6s} {b:5d} {tok_s[f'{dt}/block{b}']:8.1f} "
                          f"{syncs_per_tok[f'{dt}/block{b}']:10.4f}")
+        lines.append(f"{dt:6s} {'spec':>5s} "
+                     f"{tok_s[f'{dt}/spec{SPEC_K}']:8.1f} "
+                     f"{syncs_per_tok[f'{dt}/spec{SPEC_K}']:10.4f}   "
+                     f"(spec_k={SPEC_K}, acceptance "
+                     f"{acceptance[dt]:.2f})")
         lines.append(f"{dt:6s} {'seed':>5s} {seed_tok_s[dt]:8.1f} "
                      f"{1.0:10.4f}   (pre-PR host-resident loop)")
     for dt in CACHE_DTYPES:
         lines.append(
             f"{dt}: block16 = {speedup_16v1[dt]:.2f}x block1, "
             f"{speedup_16vseed[dt]:.2f}x seed loop")
+    lines.append(
+        f"q4_0 cache stream/step = {q4_stream_vs_q8:.4f}x q8_0 "
+        f"({bytes_per_step['q4_0']} vs {bytes_per_step['q8_0']} B)")
+    lines.append(
+        f"spec{SPEC_K}[q4_0] modeled roofline = "
+        f"{spec_modeled_gain:.2f}x plain q8_0/block16 "
+        f"(measured acceptance {acceptance['q4_0']:.2f})")
 
     checks = {
         # deterministic properties — blocking
         "fused blocks token-identical to block1 (bf16)": parity["bf16"],
         "fused blocks token-identical to block1 (q8_0)": parity["q8_0"],
+        "fused blocks token-identical to block1 (q4_0)": parity["q4_0"],
+        "speculative ticks token-identical to plain decode":
+            all(spec_parity.values()),
         "fused tokens match the seed host loop":
             all(seed_parity.values()),
         "exactly one host sync per tick": one_sync_per_tick,
         "block16 syncs/token == block1/16":
             abs(syncs_per_tok["bf16/block1"]
                 - 16 * syncs_per_tok["bf16/block16"]) < 1e-9,
+        "q4_0 cache stream/step < 0.5312x q8_0":
+            q4_stream_vs_q8 < 0.5312,
+        f"spec{SPEC_K}[q4_0] > 1.3x plain q8_0 modeled tok/s":
+            spec_modeled_gain > 1.3,
         # wall clock — informative here, enforced in the strict CI job
         "tokens_per_s": tok_s,
         "seed_loop_tokens_per_s": seed_tok_s,
@@ -230,6 +303,11 @@ def run():
             {dt: round(v, 2) for dt, v in speedup_16v1.items()},
         "speedup_block16_vs_seed_loop":
             {dt: round(v, 2) for dt, v in speedup_16vseed.items()},
+        "acceptance_rate": acceptance,
+        "q4_cache_stream_vs_q8": round(q4_stream_vs_q8, 4),
+        "modeled_tokens_per_s":
+            {k: round(v, 1) for k, v in modeled_tok_s.items()},
+        "spec_modeled_speedup_vs_q8_plain": round(spec_modeled_gain, 2),
     }
     if os.environ.get("REPRO_BENCH_STRICT_THROUGHPUT"):
         checks["block16 >= 3x block1 tok/s (bf16, strict)"] = \

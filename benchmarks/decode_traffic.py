@@ -1,5 +1,5 @@
-"""bf16 vs Q8_0 KV-cache decode traffic — the paper's C1 LOAD saving
-applied to the serving decode bottleneck.
+"""bf16 vs Q8_0 vs Q4_0 KV-cache decode traffic — the paper's C1 LOAD
+saving applied to the serving decode bottleneck.
 
 Every decode tick streams the full cache pool through the attention
 matvec, so cache bytes/step — not weight bytes — dominate the decode
@@ -7,7 +7,10 @@ memory term (§Roofline decode rows). Serving the same whisper workload
 through a ``cache_dtype="q8_0"`` pool must cut that stream to
 ``kernels.q8_attention.ops.cache_traffic_ratio()`` ≈ 0.53x of bf16
 (int8 planes + one f16 scale per 32-element block), while routing the
-cache matvec through the dispatched ``q8_decode_attention`` op.
+cache matvec through the dispatched ``q8_decode_attention`` op; a
+``"q4_0"`` pool (packed nibble planes) cuts it again to
+``kernels.q4_attention.ops.cache_traffic_ratio_q4()`` ≈ 0.28x via
+``q4_decode_attention``.
 
 The paged section serves the same workload through a ``paged=True``
 engine (``repro.paging``): per-lane cache bytes are then the lane's
@@ -27,6 +30,7 @@ import numpy as np
 import benchmarks.common  # noqa: F401  (puts src/ on the path)
 from repro.configs import get_config, reduced
 from repro.kernels.api import reset_dispatch_log
+from repro.kernels.q4_attention.ops import cache_traffic_ratio_q4
 from repro.kernels.q8_attention.ops import cache_traffic_ratio
 from repro.models.model import build
 from repro.serving.engine import AudioRequest, ServeEngine
@@ -93,14 +97,21 @@ def run():
     model = build(cfg)
     params = model.init_values(jax.random.key(0))
 
-    res = {dt: _serve(model, params, cfg, dt) for dt in ("bf16", "q8_0")}
+    res = {dt: _serve(model, params, cfg, dt)
+           for dt in ("bf16", "q8_0", "q4_0")}
     paged = _serve(model, params, cfg, "bf16", paged=True)
     rb, rq = res["bf16"]["cache"], res["q8_0"]["cache"]
     ratio = rq["bytes_per_step"] / rb["bytes_per_step"]
+    ratio4 = (res["q4_0"]["cache"]["bytes_per_step"]
+              / rb["bytes_per_step"])
     q8_calls = sum(n for (op, _, _), n in res["q8_0"]["counters"].items()
                    if op == "q8_decode_attention")
+    q4_calls = sum(n for (op, _, _), n in res["q4_0"]["counters"].items()
+                   if op == "q4_decode_attention")
     agree = sum(a == b for a, b in zip(res["bf16"]["out"].values(),
                                        res["q8_0"]["out"].values()))
+    agree4 = sum(a == b for a, b in zip(res["bf16"]["out"].values(),
+                                        res["q4_0"]["out"].values()))
     paged_calls = sum(n for (op, _, _), n in paged["counters"].items()
                       if op == "paged_decode_attention")
     paged_agree = sum(a == b for a, b in zip(res["bf16"]["out"].values(),
@@ -115,7 +126,7 @@ def run():
         f"{'cache':10s} {'KV bytes/step':>14s} {'KV B/tok':>9s} "
         f"{'ticks':>6s} {'tok/s':>8s}",
     ]
-    for dt in ("bf16", "q8_0"):
+    for dt in ("bf16", "q8_0", "q4_0"):
         c = res[dt]["cache"]
         lines.append(
             f"{dt:10s} {c['bytes_per_step']:14d} "
@@ -128,6 +139,8 @@ def run():
         f"{paged['ticks']:6d} {paged['tok_per_s']:8.1f}")
     lines.append(f"q8_0 / bf16 cache bytes/step: {ratio:.4f}x "
                  f"(paper C1 LOAD: {cache_traffic_ratio():.4f}x)")
+    lines.append(f"q4_0 / bf16 cache bytes/step: {ratio4:.4f}x "
+                 f"(analytic: {cache_traffic_ratio_q4():.4f}x)")
     lines.append(f"paged / slot cache bytes/step: {paged_ratio:.4f}x "
                  f"(resident pages only, mid-serve)")
     lines.append(f"greedy outputs identical for {agree}/{N_REQUESTS} "
@@ -144,12 +157,16 @@ def run():
     checks = {
         "q8 cache stream ~0.53x of bf16":
             abs(ratio - cache_traffic_ratio()) < 1e-6,
+        "q4 cache stream ~0.28x of bf16":
+            abs(ratio4 - cache_traffic_ratio_q4()) < 1e-6,
         "decode ticks route q8_decode_attention": q8_calls > 0,
-        "all requests served under both cache dtypes":
-            len(res["bf16"]["out"]) == N_REQUESTS
-            and len(res["q8_0"]["out"]) == N_REQUESTS,
+        "decode ticks route q4_decode_attention": q4_calls > 0,
+        "all requests served under every cache dtype":
+            all(len(res[dt]["out"]) == N_REQUESTS for dt in res),
         "q8/bf16 greedy agreement": f"{agree}/{N_REQUESTS}",
+        "q4/bf16 greedy agreement": f"{agree4}/{N_REQUESTS}",
         "q8 tok/s": f"{res['q8_0']['tok_per_s']:.1f}",
+        "q4 tok/s": f"{res['q4_0']['tok_per_s']:.1f}",
         # ---- paged pool (repro.paging) -------------------------------
         "paged tokens identical to slot pool":
             paged_agree == N_REQUESTS,

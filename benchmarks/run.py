@@ -105,9 +105,25 @@ def platforms_record(module_checks: dict) -> dict:
                     "fused blocks token-identical to block1 (bf16)", False)
                 and tp_checks.get(
                     "fused blocks token-identical to block1 (q8_0)",
+                    False)
+                and tp_checks.get(
+                    "fused blocks token-identical to block1 (q4_0)",
                     False)),
             "one_host_sync_per_tick": bool(tp_checks.get(
                 "exactly one host sync per tick", False)),
+            # q4_0 tier + self-speculative decode (this PR's headline):
+            # measured cache-stream ratio, measured acceptance, and the
+            # roofline tokens/s built from them — all deterministic
+            "q4_cache_stream_vs_q8":
+                tp_checks.get("q4_cache_stream_vs_q8"),
+            "acceptance_rate": tp_checks.get("acceptance_rate", {}),
+            "modeled_tokens_per_s":
+                tp_checks.get("modeled_tokens_per_s", {}),
+            "spec_modeled_speedup_vs_q8_plain":
+                tp_checks.get("spec_modeled_speedup_vs_q8_plain"),
+            "spec_matches_plain": bool(tp_checks.get(
+                "speculative ticks token-identical to plain decode",
+                False)),
         },
         # model zoo: every lane-state family served through the one
         # engine — per-family tokens/s, modeled J/token, bytes/step

@@ -29,7 +29,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
-from repro.core.quantize import Q8_BYTES_PER_ELEM, stored_bytes
+from repro.core.quantize import bytes_per_elem, stored_bytes
 from repro.core.workload import KernelSpec
 
 N_TILE = 4  # column-wise multithreading depth (Sec III-B)
@@ -38,7 +38,7 @@ LMM_LIMITS = tuple(kb * 1024 for kb in (8, 16, 32, 64, 128, 256))
 
 
 def elem_bytes(dtype: str) -> float:
-    return {"f32": 4.0, "f16": 2.0, "bf16": 2.0, "q8_0": Q8_BYTES_PER_ELEM}[dtype]
+    return bytes_per_elem(dtype)
 
 
 def kernel_footprint(spec: KernelSpec, policy: str = "optimized",

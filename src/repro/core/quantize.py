@@ -1,12 +1,18 @@
-"""Q8_0 blockwise quantization (paper contribution C1/C3).
+"""Q8_0 / Q4_0 blockwise quantization (paper contribution C1/C3).
 
 The paper reuses ggml's Q8_0 format: the innermost dimension is split into
 blocks of 32 elements; each block stores 32 int8 values plus one fp16 scale
 ``d = max(|x|)/127`` (1.0625 bytes/element vs 2 for fp16).
 
-On TPU we keep the exact format but store the int8 plane and the scale plane
-as two dense arrays (the paper's "padding removal": no interleaved headers,
-no row-alignment padding), which is what the Pallas kernel consumes.
+Q4_0 is the tier below: the same 32-element blocks store symmetric 4-bit
+codes ``q = round(x / d) in [-7, 7]`` with ``d = max(|x|)/7``, packed two
+codes per byte (0.5625 bytes/element) — the CGLA follow-up's headline
+low-bit dot-product tier.
+
+On TPU we keep the exact formats but store the code plane and the scale
+plane as two dense arrays (the paper's "padding removal": no interleaved
+headers, no row-alignment padding), which is what the Pallas kernels
+consume.
 """
 
 from __future__ import annotations
@@ -17,9 +23,34 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-QBLOCK = 32  # ggml Q8_0 block size (elements)
+QBLOCK = 32  # ggml Q8_0/Q4_0 block size (elements)
 Q8_BYTES_PER_BLOCK = QBLOCK + 2  # 32 int8 + fp16 scale
 Q8_BYTES_PER_ELEM = Q8_BYTES_PER_BLOCK / QBLOCK  # 1.0625
+Q4_BYTES_PER_BLOCK = QBLOCK // 2 + 2  # 32 packed nibbles + fp16 scale
+Q4_BYTES_PER_ELEM = Q4_BYTES_PER_BLOCK / QBLOCK  # 0.5625
+
+#: Storage bytes per element for every supported tier — the one place the
+#: rest of the stack (``stored_bytes``, ``core.footprint.elem_bytes``, the
+#: serving cache pricing) reads element sizes from.
+BYTES_PER_ELEM = {
+    "f32": 4.0,
+    "f16": 2.0,
+    "bf16": 2.0,
+    "q8_0": Q8_BYTES_PER_ELEM,
+    "q4_0": Q4_BYTES_PER_ELEM,
+}
+
+
+def bytes_per_elem(dtype: str) -> float:
+    """Element size of a storage tier; raises a ``ValueError`` naming the
+    supported tiers on an unknown dtype string (not an opaque KeyError)."""
+    try:
+        return BYTES_PER_ELEM[dtype]
+    except KeyError:
+        raise ValueError(
+            f"unknown storage dtype {dtype!r}; supported tiers: "
+            f"{sorted(BYTES_PER_ELEM)}"
+        ) from None
 
 
 @jax.tree_util.register_pytree_node_class
@@ -96,24 +127,116 @@ def dequantize_q8_0(t: Q8Tensor, dtype=jnp.float32, axis: int = -1) -> jax.Array
     return jnp.moveaxis(x.reshape(qm.shape), -1, axis).astype(dtype)
 
 
-def quantization_error_bound(t: Q8Tensor) -> jax.Array:
-    """Per-block worst-case absolute error: d/2 (round-to-nearest)."""
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Q4Tensor:
+    """A Q4_0-quantized tensor. ``q``: uint8 plane with the quantized axis
+    halved — each byte packs two consecutive 4-bit codes (low nibble =
+    even index, high nibble = odd index), biased by +8 so codes occupy
+    [1, 15]. ``scale``: float16/float32, quantized axis // QBLOCK."""
+
+    q: jax.Array
+    scale: jax.Array
+
+    def tree_flatten(self):
+        return (self.q, self.scale), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def shape(self):
+        """Packed-plane shape (the quantized axis is halved)."""
+        return self.q.shape
+
+    @property
+    def nbytes_packed(self) -> int:
+        """Dense-packed storage bytes (optimized policy, C3)."""
+        return int(self.q.size) + 2 * int(self.scale.size)
+
+
+def pack_q4(codes: jax.Array, axis: int = -1) -> jax.Array:
+    """Pack int8 codes in [-8, 7] two-per-byte along ``axis`` (length must
+    be even): byte i = (codes[2i] + 8) | ((codes[2i+1] + 8) << 4)."""
+    axis = axis % codes.ndim
+    cm = jnp.moveaxis(codes, axis, -1)
+    k = cm.shape[-1]
+    if k % 2 != 0:
+        raise ValueError(f"pack_q4 needs an even axis length, got {k}")
+    pairs = (cm.astype(jnp.int32) + 8).astype(jnp.uint8)
+    pairs = pairs.reshape(*cm.shape[:-1], k // 2, 2)
+    packed = pairs[..., 0] | (pairs[..., 1] << 4)
+    return jnp.moveaxis(packed, -1, axis)
+
+
+def unpack_q4(packed: jax.Array, axis: int = -1) -> jax.Array:
+    """Inverse of :func:`pack_q4`: uint8 bytes -> int8 codes in [-8, 7],
+    ``axis`` doubled."""
+    axis = axis % packed.ndim
+    pm = jnp.moveaxis(packed, axis, -1)
+    lo = (pm & jnp.uint8(0xF)).astype(jnp.int8) - 8
+    hi = (pm >> 4).astype(jnp.int8) - 8
+    codes = jnp.stack([lo, hi], axis=-1).reshape(*pm.shape[:-1],
+                                                 2 * pm.shape[-1])
+    return jnp.moveaxis(codes, -1, axis)
+
+
+def quantize_q4_0(x: jax.Array, scale_dtype=jnp.float16,
+                  axis: int = -1) -> Q4Tensor:
+    """Quantize to Q4_0 with 32-element blocks along ``axis``; symmetric
+    codes in [-7, 7] with ``d = max(|x|)/7``, packed two per byte along
+    the same axis. ``axis`` dim must be a multiple of QBLOCK."""
+    axis = axis % x.ndim
+    xm = jnp.moveaxis(x, axis, -1)
+    _check_last_dim(xm.shape[-1])
+    blocks = xm.astype(jnp.float32).reshape(*xm.shape[:-1], -1, QBLOCK)
+    amax = jnp.max(jnp.abs(blocks), axis=-1)
+    d = (amax / 7.0).astype(scale_dtype)
+    inv = jnp.where(d > 0, 1.0 / d.astype(jnp.float32), 0.0)
+    q = jnp.clip(jnp.round(blocks * inv[..., None]), -7, 7).astype(jnp.int8)
+    codes = jnp.moveaxis(q.reshape(xm.shape), -1, axis)
+    scale = jnp.moveaxis(d, -1, axis)
+    return Q4Tensor(q=pack_q4(codes, axis=axis), scale=scale)
+
+
+def dequantize_q4_0(t: Q4Tensor, dtype=jnp.float32, axis: int = -1) -> jax.Array:
+    """Exact inverse of the storage transform (not of quantize: lossy)."""
+    axis = axis % t.q.ndim
+    codes = unpack_q4(t.q, axis=axis)
+    qm = jnp.moveaxis(codes, axis, -1)
+    sm = jnp.moveaxis(t.scale, axis, -1)
+    q = qm.reshape(*qm.shape[:-1], -1, QBLOCK).astype(jnp.float32)
+    x = q * sm.astype(jnp.float32)[..., None]
+    return jnp.moveaxis(x.reshape(qm.shape), -1, axis).astype(dtype)
+
+
+def quantization_error_bound(t) -> jax.Array:
+    """Per-block worst-case absolute error: d/2 (round-to-nearest).
+    Accepts either a :class:`Q8Tensor` or a :class:`Q4Tensor`."""
     return t.scale.astype(jnp.float32) / 2.0
 
 
 def as_array(leaf: Any, dtype=jnp.bfloat16, axis: int = -2) -> jax.Array:
-    """Dequantize a Q8Tensor (blocked along ``axis``, the quantize_tree
-    convention) or cast a plain array — for params consumed outside the
-    Q8-aware ``mm`` path (positional tables, frontends)."""
+    """Dequantize a Q8Tensor/Q4Tensor (blocked along ``axis``, the
+    quantize_tree convention) or cast a plain array — for params consumed
+    outside the quant-aware ``mm`` path (positional tables, frontends)."""
     if isinstance(leaf, Q8Tensor):
         return dequantize_q8_0(leaf, dtype, axis=axis)
+    if isinstance(leaf, Q4Tensor):
+        return dequantize_q4_0(leaf, dtype, axis=axis)
     return leaf.astype(dtype)
 
 
-def quantize_tree(params: Any, predicate=None) -> Any:
+def quantize_tree(params: Any, predicate=None, tier: str = "q8_0") -> Any:
     """Quantize every float leaf (matching ``predicate(path, leaf)``) of a
-    param pytree to Q8Tensor; other leaves pass through. Used to build the
-    Q8_0 serving variant of any architecture (paper Sec III-A)."""
+    param pytree to Q8Tensor/Q4Tensor; other leaves pass through. Used to
+    build the Q8_0/Q4_0 serving variants of any architecture (paper Sec
+    III-A; ``tier="q4_0"`` builds the self-speculative draft weights)."""
+    if tier not in ("q8_0", "q4_0"):
+        raise ValueError(
+            f"unknown weight tier {tier!r}; supported: ['q4_0', 'q8_0']")
+    qfn = quantize_q8_0 if tier == "q8_0" else quantize_q4_0
 
     def _q(path, leaf):
         if not isinstance(leaf, jax.Array) and not hasattr(leaf, "dtype"):
@@ -125,7 +248,7 @@ def quantize_tree(params: Any, predicate=None) -> Any:
             return leaf
         if predicate is not None and not predicate(path, leaf):
             return leaf
-        return quantize_q8_0(leaf, axis=-2)
+        return qfn(leaf, axis=-2)
 
     return jax.tree_util.tree_map_with_path(_q, params)
 
@@ -142,7 +265,7 @@ def stored_bytes(shape, dtype: str, policy: str = "optimized",
     padded up to ``align_bytes`` alignment; ``optimized`` is the paper's dense
     packing (C3).
     """
-    elem = {"f32": 4.0, "f16": 2.0, "bf16": 2.0, "q8_0": Q8_BYTES_PER_ELEM}[dtype]
+    elem = bytes_per_elem(dtype)
     *lead, k = shape
     rows = 1
     for d in lead:

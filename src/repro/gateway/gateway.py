@@ -225,6 +225,12 @@ class Gateway:
             "cache_dtype": self.engine.cache_dtype,
             "prefill_exact": spec.prefill_exact,
         }
+        if self.engine.spec_k:
+            out["engine"]["speculative"] = {
+                "spec_k": self.engine.spec_k,
+                "draft_dtype": self.engine.draft_dtype,
+                "acceptance_rate": self.engine.acceptance_rate,
+            }
         return out
 
     # ------------------------------------------------------------- submit
@@ -262,7 +268,11 @@ class Gateway:
         ticket.tokens = list(tokens)
         ticket.max_new = max_new
         ticket.eos_id = eos_id
-        if len(ticket.tokens) + max_new >= self.engine.max_len:
+        # mirror ServeEngine.validate's bound, speculative KV headroom
+        # included, so a session the gateway accepts is never rejected
+        # later at admit
+        headroom = self.engine.spec_k - 1 if self.engine.spec_k else 0
+        if len(ticket.tokens) + max_new + headroom >= self.engine.max_len:
             self._shed(ticket, RejectCode.TOO_LONG,
                        f"request {ticket.uid} too long for engine "
                        f"({len(ticket.tokens)}+{max_new} vs "

@@ -295,6 +295,11 @@ def _register_builtin_ops() -> None:
     from repro.kernels.flash_attention.ref import attention_ref
     from repro.kernels.paged_attention.ref import paged_decode_attention_ref
     from repro.kernels.paged_attention.xla import paged_decode_attention_xla
+    from repro.kernels.q4_attention.ops import q4_decode_attention
+    from repro.kernels.q4_attention.ref import q4_decode_attention_ref
+    from repro.kernels.q4_attention.xla import q4_decode_attention_xla
+    from repro.kernels.q4_matmul.ops import q4_matmul, q4_matmul_xla
+    from repro.kernels.q4_matmul.ref import q4_matmul_ref
     from repro.kernels.q8_attention.ops import q8_decode_attention
     from repro.kernels.q8_attention.ref import q8_decode_attention_ref
     from repro.kernels.q8_attention.xla import q8_decode_attention_xla
@@ -317,6 +322,27 @@ def _register_builtin_ops() -> None:
             "xla": lambda ctx, x, w, out_dtype=jnp.float32: q8_matmul_xla(
                 x, w, out_dtype=out_dtype),
             "ref": lambda ctx, x, w, out_dtype=jnp.float32: q8_matmul_ref(
+                x, w.q, w.scale, out_dtype=out_dtype),
+        },
+    ))
+
+    # ---- q4_matmul: y = x @ dequant(w), w a packed-K Q4Tensor ----
+    # One tier below q8_matmul: spec.k is the *logical* K (2x the packed
+    # plane rows) so the SC-FOOT bytes band prices the 0.5625 B/elem
+    # stream against the same m/n/k as the q8 op.
+    register(KernelOp(
+        name="q4_matmul",
+        doc="Q4_0 GEMM (nibble-packed weights quantized along K).",
+        spec=lambda x, w, **kw: KernelSpec(
+            "q4_matmul", m=_flat_m(x), n=w.q.shape[-1], k=x.shape[-1],
+            dtype="q4_0", tag="proj"),
+        backends={
+            "pallas": lambda ctx, x, w, out_dtype=jnp.float32: q4_matmul(
+                x, w, vmem_budget=ctx.vmem_budget, out_dtype=out_dtype,
+                interpret=ctx.interpret),
+            "xla": lambda ctx, x, w, out_dtype=jnp.float32: q4_matmul_xla(
+                x, w, out_dtype=out_dtype),
+            "ref": lambda ctx, x, w, out_dtype=jnp.float32: q4_matmul_ref(
                 x, w.q, w.scale, out_dtype=out_dtype),
         },
     ))
@@ -419,6 +445,28 @@ def _register_builtin_ops() -> None:
         },
     ))
 
+    # ---- q4_decode_attention: decode matvec over the Q4_0 KV cache ----
+    # Same shape/count conventions as the q8 op; the Pallas binding is
+    # single-query (speculative multi-query verify raises ValueError and
+    # lands on the bf16-widened xla backend via accel->host fallback).
+    register(KernelOp(
+        name="q4_decode_attention",
+        doc="Decode attention reading the Q4_0 nibble-packed KV cache.",
+        spec=lambda q, kp, ks, vp, vs, length, **kw: KernelSpec(
+            "q4_decode_attention", m=q.shape[1], n=kp.shape[1],
+            k=q.shape[-1], dtype="q4_0", count=2 * q.shape[0],
+            tag="attn_qk"),
+        backends={
+            "pallas": lambda ctx, q, kp, ks, vp, vs, length, bk=128:
+                q4_decode_attention(q, kp, ks, vp, vs, length, bk=bk,
+                                    interpret=ctx.interpret),
+            "xla": lambda ctx, q, kp, ks, vp, vs, length, bk=128:
+                q4_decode_attention_xla(q, kp, ks, vp, vs, length),
+            "ref": lambda ctx, q, kp, ks, vp, vs, length, bk=128:
+                q4_decode_attention_ref(q, kp, ks, vp, vs, length),
+        },
+    ))
+
     # ---- paged_decode_attention: decode matvec over a paged KV pool ----
     # Planes live in a shared (n_pages, P, Hkv, ·) pool; ``table``
     # (B, n_lp) reassembles each lane's logical sequence by gather, so
@@ -432,10 +480,11 @@ def _register_builtin_ops() -> None:
         doc="Decode attention gathered over per-lane page tables.",
         spec=lambda q, kc, vc, table, lens, **kw: KernelSpec(
             "paged_decode_attention", m=q.shape[1],
-            n=table.shape[1] * (kc["q"] if isinstance(kc, dict)
-                                else kc).shape[1],
+            n=table.shape[1] * (kc["p" if "p" in kc else "q"]
+                                if isinstance(kc, dict) else kc).shape[1],
             k=q.shape[-1],
-            dtype="q8_0" if isinstance(kc, dict) else "bf16",
+            dtype=(("q4_0" if "p" in kc else "q8_0")
+                   if isinstance(kc, dict) else "bf16"),
             count=2 * q.shape[0] * q.shape[2], tag="attn_qk"),
         backends={
             "xla": lambda ctx, q, kc, vc, table, lens:

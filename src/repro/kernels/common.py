@@ -30,3 +30,14 @@ def pad_dim(x: jax.Array, axis: int, mult: int) -> jax.Array:
     pad = [(0, 0)] * x.ndim
     pad[axis] = (0, rem)
     return jnp.pad(x, pad)
+
+
+def lens_mask(length, bh: int, s_len: int) -> jax.Array:
+    """Normalize a decode-attention ``length`` of shape (), (BH,), or
+    (BH, Q) into a (BH, Q|1, S) bool attend mask. The (BH, Q) form gives
+    every query row its own depth — how the speculative verify forward
+    masks draft position j to [0, pos + j + 1)."""
+    lens = jnp.asarray(length, jnp.int32)
+    if lens.ndim <= 1:
+        lens = jnp.broadcast_to(lens.reshape(-1), (bh,))[:, None]
+    return jnp.arange(s_len)[None, None, :] < lens[:, :, None]

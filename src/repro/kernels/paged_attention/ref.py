@@ -11,7 +11,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.quantize import QBLOCK
+from repro.core.quantize import QBLOCK, unpack_q4
+from repro.kernels.common import lens_mask
 from repro.kernels.paged_attention.xla import _repeat_heads, gather_pages
 
 NEG_INF = -1e30
@@ -25,7 +26,12 @@ def _dequant(codes: jax.Array, scale: jax.Array) -> jax.Array:
 def paged_decode_attention_ref(q, kc, vc, table, lens) -> jax.Array:
     """Same contract as ``paged_decode_attention_xla``."""
     b, _, h, d = q.shape
-    if isinstance(kc, dict):
+    if isinstance(kc, dict) and "p" in kc:      # q4_0 packed nibbles
+        k = _dequant(unpack_q4(gather_pages(kc["p"], table), axis=-1),
+                     gather_pages(kc["s"], table))
+        v = _dequant(unpack_q4(gather_pages(vc["p"], table), axis=-1),
+                     gather_pages(vc["s"], table))
+    elif isinstance(kc, dict):
         k = _dequant(gather_pages(kc["q"], table),
                      gather_pages(kc["s"], table))
         v = _dequant(gather_pages(vc["q"], table),
@@ -38,9 +44,7 @@ def paged_decode_attention_ref(q, kc, vc, table, lens) -> jax.Array:
     s_len = k.shape[1]
     s_ = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k,
                     preferred_element_type=jnp.float32) * (d ** -0.5)
-    mask = (jnp.arange(s_len)[None, :]
-            < jnp.asarray(lens, jnp.int32)[:, None])
-    s_ = jnp.where(mask[:, None, None, :], s_, NEG_INF)
+    s_ = jnp.where(lens_mask(lens, b, s_len)[:, None, :, :], s_, NEG_INF)
     w = jax.nn.softmax(s_, axis=-1)
     out = jnp.einsum("bhqk,bkhd->bqhd", w, v,
                      preferred_element_type=jnp.float32)

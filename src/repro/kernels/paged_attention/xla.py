@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 
 from repro import flags
+from repro.kernels.common import lens_mask
+from repro.kernels.q4_attention.xla import q4_decode_attention_xla
 from repro.kernels.q8_attention.xla import q8_decode_attention_xla
 
 NEG_INF = -1e30
@@ -43,20 +45,23 @@ def _repeat_heads(k: jax.Array, n_heads: int) -> jax.Array:
 
 
 def paged_decode_attention_xla(q, kc, vc, table, lens) -> jax.Array:
-    """q: (B, 1, H, D); kc/vc: pool planes — arrays (bf16 cache) or
-    ``{"q": int8, "s": f16}`` dicts (q8_0); table: (B, n_lp) int32;
-    lens: (B,) int32, lane b attends logical positions [0, lens[b]).
-    Returns (B, 1, H, D) in q's dtype."""
-    b, _, h, d = q.shape
-    if isinstance(kc, dict):                    # Q8_0 planes
+    """q: (B, Q, H, D); kc/vc: pool planes — arrays (bf16 cache),
+    ``{"q": int8, "s": f16}`` dicts (q8_0), or ``{"p": uint8, "s": f16}``
+    dicts (q4_0 packed nibbles); table: (B, n_lp) int32; lens: (B,) or
+    (B, Q) int32 attend depths (the (B, Q) form is the speculative
+    verify's per-draft-position mask). Returns (B, Q, H, D) in q.dtype."""
+    b, nq, h, d = q.shape
+    if isinstance(kc, dict):                    # quantized planes
         def flat(plane):
             g = _repeat_heads(gather_pages(plane, table), h)
             return g.transpose(0, 2, 1, 3).reshape(b * h, g.shape[1], -1)
-        qf = q.transpose(0, 2, 1, 3).reshape(b * h, 1, d)
-        lens_f = jnp.repeat(jnp.asarray(lens, jnp.int32), h)
-        out = q8_decode_attention_xla(qf, flat(kc["q"]), flat(kc["s"]),
-                                      flat(vc["q"]), flat(vc["s"]), lens_f)
-        return out.reshape(b, h, 1, d).transpose(0, 2, 1, 3)
+        qf = q.transpose(0, 2, 1, 3).reshape(b * h, nq, d)
+        lens_f = jnp.repeat(jnp.asarray(lens, jnp.int32), h, axis=0)
+        fn = q4_decode_attention_xla if "p" in kc else q8_decode_attention_xla
+        key = "p" if "p" in kc else "q"
+        out = fn(qf, flat(kc[key]), flat(kc["s"]),
+                 flat(vc[key]), flat(vc["s"]), lens_f)
+        return out.reshape(b, h, nq, d).transpose(0, 2, 1, 3)
 
     k = _repeat_heads(gather_pages(kc, table), h)
     v = _repeat_heads(gather_pages(vc, table), h)
@@ -64,9 +69,8 @@ def paged_decode_attention_xla(q, kc, vc, table, lens) -> jax.Array:
     ddt = jnp.float32 if flags.BASELINE else jnp.bfloat16
     s_ = jnp.einsum("bqhd,bkhd->bhqk", q.astype(ddt), k.astype(ddt),
                     preferred_element_type=jnp.float32) * (d ** -0.5)
-    mask = (jnp.arange(s_len)[None, :]
-            < jnp.asarray(lens, jnp.int32)[:, None])
-    s_ = jnp.where(mask[:, None, None, :], s_, NEG_INF)
+    mask = lens_mask(lens, b, s_len)            # (B, Q|1, S)
+    s_ = jnp.where(mask[:, None, :, :], s_, NEG_INF)
     w = jax.nn.softmax(s_, axis=-1)
     out = jnp.einsum("bhqk,bkhd->bqhd", w.astype(ddt), v.astype(ddt),
                      preferred_element_type=jnp.float32)

@@ -1,0 +1,1 @@
+from repro.kernels.q4_attention.ops import *  # noqa

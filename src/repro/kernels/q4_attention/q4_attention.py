@@ -1,0 +1,122 @@
+"""Pallas TPU kernel: decode attention over a Q4_0-quantized KV cache.
+
+One tier below ``q8_attention``: the cache stream drops to
+(0.5 + 2/QBLOCK)/2 = 0.28125x of bf16 — nibble codes plus one f16 scale
+per 32-element block along head_dim. Nibbles are unpacked and scaled
+**in VMEM right before the MXU dot** (paper C1); the cache never exists
+in HBM above 4 bits/element.
+
+Online-softmax over KV blocks, one grid step per (head, kv-block), with
+a masked tail for cache positions beyond the current decode position.
+Single-query only: the speculative multi-query verify path routes to the
+XLA backend via the dispatch fallback.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.quantize import QBLOCK
+
+NEG_INF = -1e30
+
+
+def _q4_attn_kernel(len_ref, q_ref, kp_ref, ks_ref, vp_ref, vs_ref,
+                    o_ref, m_ref, l_ref, acc_ref, *,
+                    scale, n_k_blocks, bk):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                     # (1, D)
+
+    def dequant(pref, sref):
+        raw = pref[0]                                    # (bk, D//2) uint8
+        lo = (raw & jnp.uint8(0xF)).astype(jnp.int8) - 8
+        hi = (raw >> 4).astype(jnp.int8) - 8
+        rows, half = raw.shape
+        codes = jnp.stack([lo, hi], axis=2).reshape(rows, 2 * half)
+        sc = sref[0].astype(jnp.float32)                 # (bk, D//32)
+        sc_full = jnp.repeat(sc, QBLOCK, axis=1)         # C1: in-VMEM
+        return codes.astype(jnp.float32) * sc_full
+
+    k = dequant(kp_ref, ks_ref)
+    v = dequant(vp_ref, vs_ref)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (1, bk)
+    s = s * scale
+    kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+    s = jnp.where(kpos < len_ref[0, 0], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == n_k_blocks - 1)
+    def _done():
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / safe).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret"))
+def q4_decode_attention_pallas(q: jax.Array, kp: jax.Array, ks: jax.Array,
+                               vp: jax.Array, vs: jax.Array,
+                               length: jax.Array, *,
+                               bk: int = 128,
+                               interpret: bool = False) -> jax.Array:
+    """q: (BH, 1, D); kp/vp: (BH, S, D//2) packed uint8; ks/vs:
+    (BH, S, D//QBLOCK) scales; length: () or (BH,) int32 — lane h attends
+    positions [0, length[h]). S % bk == 0. Returns (BH, 1, D) in q.dtype."""
+    bh, one, d = q.shape
+    s = kp.shape[1]
+    assert one == 1 and kp.shape == (bh, s, d // 2) and s % bk == 0
+    assert ks.shape == (bh, s, d // QBLOCK), ks.shape
+    n_k_blocks = s // bk
+    scale = 1.0 / (d ** 0.5)
+    from jax.experimental.pallas import tpu as pltpu
+
+    from repro.kernels.common import tpu_compiler_params
+    kernel = functools.partial(_q4_attn_kernel, scale=scale,
+                               n_k_blocks=n_k_blocks, bk=bk)
+    grid = (bh, n_k_blocks)
+    lens = jnp.broadcast_to(
+        jnp.asarray(length, jnp.int32).reshape(-1), (bh,))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda h, j: (h, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, d), lambda h, j: (h, 0, 0)),
+            pl.BlockSpec((1, bk, d // 2), lambda h, j: (h, j, 0)),
+            pl.BlockSpec((1, bk, d // QBLOCK), lambda h, j: (h, j, 0)),
+            pl.BlockSpec((1, bk, d // 2), lambda h, j: (h, j, 0)),
+            pl.BlockSpec((1, bk, d // QBLOCK), lambda h, j: (h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda h, j: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, 1, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(lens.reshape(bh, 1), q, kp, ks, vp, vs)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle: dense decode attention over a dequantized Q4 cache.
+
+``length`` may be (), (BH,), or (BH, Q) — the last gives every query row
+its own attend-depth, which is how the speculative verify forward masks
+draft position j to [0, pos + j + 1)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import QBLOCK, unpack_q4
+from repro.kernels.common import lens_mask
+
+
+def dequant(p: jax.Array, scale: jax.Array) -> jax.Array:
+    """p: (..., S, D//2) packed uint8; scale: (..., S, D//QBLOCK) -> f32."""
+    codes = unpack_q4(p, axis=-1).astype(jnp.float32)
+    return codes * jnp.repeat(scale.astype(jnp.float32), QBLOCK, axis=-1)
+
+
+def q4_decode_attention_ref(q, kp, ks, vp, vs, length) -> jax.Array:
+    """q: (BH, Q, D); packed caches + scales; attend [0, length)."""
+    k = dequant(kp, ks)
+    v = dequant(vp, vs)
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k) * (d ** -0.5)
+    mask = lens_mask(length, q.shape[0], k.shape[1])
+    s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", w, v).astype(q.dtype)

@@ -1,0 +1,43 @@
+"""XLA host backend: Q4_0 decode attention without f32 plane
+materialization.
+
+Nibble codes are unpacked uint8 -> int8 -> bf16 (integers in [-8, 7],
+exact in bf16) and the per-block scales fold in *after* the
+f32-accumulated contraction — algebraically identical to
+dequantize-then-dot, with the widest materialized plane at 2 bytes/elem.
+``repro.staticcheck``'s SC-DTYPE pass verifies no f32 plane convert
+exists in the lowered program.
+
+Supports the speculative multi-query verify: ``q`` is (BH, Q, D) and
+``length`` may be (BH, Q) per-query attend-depths.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import QBLOCK, unpack_q4
+from repro.kernels.common import lens_mask
+
+
+def q4_decode_attention_xla(q, kp, ks, vp, vs, length) -> jax.Array:
+    """q: (BH, Q, D); kp/vp (BH, S, D//2) packed uint8 + scales; attend
+    positions [0, length). Same contract as the ref oracle."""
+    bh, nq, d = q.shape
+    s_len = kp.shape[1]
+    nb = d // QBLOCK
+    qb = q.astype(jnp.bfloat16).reshape(bh, nq, nb, QBLOCK)
+    k4 = unpack_q4(kp, axis=-1).astype(jnp.bfloat16).reshape(
+        bh, s_len, nb, QBLOCK)
+    v4 = unpack_q4(vp, axis=-1).astype(jnp.bfloat16).reshape(
+        bh, s_len, nb, QBLOCK)
+    s = jnp.einsum("bqnd,bknd->bqkn", qb, k4,
+                   preferred_element_type=jnp.float32)
+    s = (s * ks.astype(jnp.float32)[:, None, :, :]).sum(-1) * (d ** -0.5)
+    s = jnp.where(lens_mask(length, bh, s_len), s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    wv = w[:, :, :, None] * vs.astype(jnp.float32)[:, None, :, :]
+    out = jnp.einsum("bqkn,bknd->bqnd", wv.astype(jnp.bfloat16), v4,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(bh, nq, d).astype(q.dtype)

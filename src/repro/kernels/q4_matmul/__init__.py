@@ -1,0 +1,1 @@
+from repro.kernels.q4_matmul.ops import *  # noqa

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the Q4_0 GEMM kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import QBLOCK, unpack_q4
+
+
+def dequant_ref(wp: jax.Array, ws: jax.Array) -> jax.Array:
+    """wp: (K//2, N) packed uint8, ws: (K//QBLOCK, N) -> (K, N) f32."""
+    codes = unpack_q4(wp, axis=0).astype(jnp.float32)
+    scales = jnp.repeat(ws.astype(jnp.float32), QBLOCK, axis=0)
+    return codes * scales
+
+
+def q4_matmul_ref(x: jax.Array, wp: jax.Array, ws: jax.Array,
+                  out_dtype=jnp.float32) -> jax.Array:
+    """y = x @ dequant(wp, ws), f32 accumulation."""
+    w = dequant_ref(wp, ws)
+    return jnp.dot(x.astype(jnp.float32), w,
+                   preferred_element_type=jnp.float32).astype(out_dtype)

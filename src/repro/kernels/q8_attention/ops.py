@@ -36,8 +36,16 @@ def q8_decode_attention(q, kq, ks, vq, vs, length, *, bk: int = 128,
     [0, length). ``length`` is a scalar (lockstep decode) or a (BH,)
     vector (continuous batching: every serving lane at its own depth).
     Handles S not divisible by bk via zero padding (masked by
-    ``length``)."""
+    ``length``). Single-query only: the speculative verify's (BH, Q)
+    case raises ``ValueError`` so dispatch falls back to the XLA
+    backend."""
     bh, _, d = q.shape
+    length = jnp.asarray(length)
+    if q.shape[1] != 1 or length.ndim > 1:
+        raise ValueError(
+            "q8_decode_attention (Pallas) is single-query: got "
+            f"q {q.shape}, length {length.shape}; multi-query verify "
+            "routes to the XLA backend via dispatch fallback")
     kq, vq, ks, vs = (pad_dim(t, 1, bk) for t in (kq, vq, ks, vs))
     # scalar-vs-(BH,) length normalization happens in the pallas wrapper
     return q8_decode_attention_pallas(q, kq, ks, vq, vs,

@@ -6,6 +6,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.quantize import QBLOCK
+from repro.kernels.common import lens_mask
 
 
 def dequant(q8: jax.Array, scale: jax.Array) -> jax.Array:
@@ -15,15 +16,12 @@ def dequant(q8: jax.Array, scale: jax.Array) -> jax.Array:
 
 
 def q8_decode_attention_ref(q, kq, ks, vq, vs, length) -> jax.Array:
-    """q: (BH, 1, D); int8 caches + scales; attend [0, length).
-    ``length``: scalar or (BH,) per-lane depths."""
+    """q: (BH, Q, D); int8 caches + scales; attend [0, length).
+    ``length``: scalar, (BH,), or (BH, Q) per-query depths."""
     k = dequant(kq, ks)
     v = dequant(vq, vs)
     d = q.shape[-1]
     s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k) * (d ** -0.5)
-    lens = jnp.broadcast_to(
-        jnp.asarray(length, jnp.int32).reshape(-1), (q.shape[0],))
-    mask = jnp.arange(k.shape[1])[None, None, :] < lens[:, None, None]
-    s = jnp.where(mask, s, -1e30)
+    s = jnp.where(lens_mask(length, q.shape[0], k.shape[1]), s, -1e30)
     w = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bqk,bkd->bqd", w, v).astype(q.dtype)

@@ -18,29 +18,28 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.quantize import QBLOCK
+from repro.kernels.common import lens_mask
 
 
 def q8_decode_attention_xla(q, kq, ks, vq, vs, length) -> jax.Array:
-    """q: (BH, 1, D); int8 code planes + (BH, S, D//QBLOCK) scales;
-    attend positions [0, length). Same contract as the ref oracle."""
-    bh, _, d = q.shape
+    """q: (BH, Q, D); int8 code planes + (BH, S, D//QBLOCK) scales;
+    attend positions [0, length) with ``length`` (), (BH,), or (BH, Q)
+    per-query depths. Same contract as the ref oracle."""
+    bh, nq, d = q.shape
     s_len = kq.shape[1]
     nb = d // QBLOCK
-    qb = q.astype(jnp.bfloat16).reshape(bh, 1, nb, QBLOCK)
+    qb = q.astype(jnp.bfloat16).reshape(bh, nq, nb, QBLOCK)
     k8 = kq.astype(jnp.bfloat16).reshape(bh, s_len, nb, QBLOCK)
     v8 = vq.astype(jnp.bfloat16).reshape(bh, s_len, nb, QBLOCK)
     # per-block partial dots, f32 accumulation; scales fold in afterward
     s = jnp.einsum("bqnd,bknd->bqkn", qb, k8,
                    preferred_element_type=jnp.float32)
     s = (s * ks.astype(jnp.float32)[:, None, :, :]).sum(-1) * (d ** -0.5)
-    lens = jnp.broadcast_to(
-        jnp.asarray(length, jnp.int32).reshape(-1), (bh,))
-    mask = jnp.arange(s_len)[None, None, :] < lens[:, None, None]
-    s = jnp.where(mask, s, -1e30)
+    s = jnp.where(lens_mask(length, bh, s_len), s, -1e30)
     w = jax.nn.softmax(s, axis=-1)
     # out_d = sum_k w_k * code_kd * scale_k,blk: fold the scale into the
     # f32 weights (per (k, block)), contract against bf16 codes
     wv = w[:, :, :, None] * vs.astype(jnp.float32)[:, None, :, :]
     out = jnp.einsum("bqkn,bknd->bqnd", wv.astype(jnp.bfloat16), v8,
                      preferred_element_type=jnp.float32)
-    return out.reshape(bh, 1, d).astype(q.dtype)
+    return out.reshape(bh, nq, d).astype(q.dtype)

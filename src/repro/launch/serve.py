@@ -32,10 +32,17 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--q8", action="store_true",
                     help="serve Q8_0-quantized weights (paper variant)")
-    ap.add_argument("--cache-dtype", choices=["bf16", "q8_0"],
+    ap.add_argument("--cache-dtype", choices=["bf16", "q8_0", "q4_0"],
                     default="bf16",
                     help="KV-cache storage: q8_0 streams ~0.53x the "
-                         "bytes/step via the q8_decode_attention kernel")
+                         "bytes/step via the q8_decode_attention "
+                         "kernel, q4_0 ~0.28x via q4_decode_attention")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="self-speculative decoding: draft spec_k-1 "
+                         "tokens with q4_0-quantized weights and verify "
+                         "all spec_k in one forward per round "
+                         "(decode-block must be a multiple; greedy "
+                         "token parity with plain decode)")
     ap.add_argument("--enc-len", type=int, default=64,
                     help="encoder-state pool length (enc-dec models)")
     ap.add_argument("--decode-block", type=int, default=1,
@@ -64,8 +71,10 @@ def main(argv=None):
         from repro.core.quantize import quantize_tree
         params = quantize_tree(params)
         print("serving Q8_0-quantized weights")
-    if args.cache_dtype == "q8_0":
-        print("serving a Q8_0-quantized KV cache")
+    if args.cache_dtype in ("q8_0", "q4_0"):
+        print(f"serving a {args.cache_dtype.upper()}-quantized KV cache")
+    if args.spec_k:
+        print(f"self-speculative decoding: spec_k={args.spec_k}")
 
     if args.platform:
         from repro.platforms import get_platform
@@ -76,6 +85,7 @@ def main(argv=None):
                          max_len=args.max_len, enc_len=args.enc_len,
                          cache_dtype=args.cache_dtype,
                          decode_block=args.decode_block,
+                         spec_k=args.spec_k,
                          platform=args.platform)
     sched = BatchScheduler(engine)
 

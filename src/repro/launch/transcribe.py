@@ -30,7 +30,7 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--stream", action="store_true",
                     help="serve via the streaming chunked-encode path")
-    ap.add_argument("--cache-dtype", choices=["bf16", "q8_0"],
+    ap.add_argument("--cache-dtype", choices=["bf16", "q8_0", "q4_0"],
                     default="bf16")
     ap.add_argument("--decode-block", type=int, default=1,
                     help="decode steps fused per tick (one host sync "

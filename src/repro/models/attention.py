@@ -18,7 +18,7 @@ import jax.numpy as jnp
 
 from repro import flags
 from repro.configs import ArchConfig
-from repro.core.quantize import QBLOCK, quantize_q8_0
+from repro.core.quantize import QBLOCK, quantize_q4_0, quantize_q8_0
 from repro.kernels.api import dispatch
 from repro.models.layers import (KeyGen, Param, mm, mm_out, ninit, rmsnorm,
                                  rope)
@@ -227,19 +227,26 @@ def attention(p: dict, x: jax.Array, cfg: ArchConfig, *,
     assert mode == "decode" and cache is not None
     # ``pos`` may be a scalar (lockstep decode; all the dry-run decode
     # cells) or a (B,) vector (continuous batching: each serving slot at
-    # its own position — serving/engine.py).
+    # its own position — serving/engine.py). ``x`` may carry Q > 1 tokens
+    # per lane (the speculative verify forward): token j sits at absolute
+    # position pos + j and attends cache positions [0, pos + j].
     pos_v = jnp.asarray(pos, jnp.int32)
     per_lane = pos_v.ndim == 1
     pos_b = pos_v if per_lane else jnp.broadcast_to(pos_v, (b,))
+    nq = s
+    posq = pos_b[:, None] + jnp.arange(nq)[None, :]      # (B, Q)
     stacked = layer_idx is not None
     q8 = is_q8_cache(cache)
-    if q8 and (softcap is not None or window is not None):
+    q4 = is_q4_cache(cache)
+    quant = q8 or q4
+    tier = "q4_0" if q4 else "q8_0"
+    if quant and (softcap is not None or window is not None):
         raise NotImplementedError(
-            "q8_0 KV-cache decode supports plain softmax attention only "
-            "(no attn_softcap / sliding window)")
-    if q8 and not stacked:
+            f"{tier} KV-cache decode supports plain softmax attention "
+            "only (no attn_softcap / sliding window)")
+    if quant and not stacked:
         raise NotImplementedError(
-            "q8_0 KV-cache decode requires the stacked cache path "
+            f"{tier} KV-cache decode requires the stacked cache path "
             "(REPRO_BASELINE=1 serves bf16 caches only)")
     if page_table is not None and (not stacked or softcap is not None
                                    or window is not None):
@@ -249,57 +256,74 @@ def attention(p: dict, x: jax.Array, cfg: ArchConfig, *,
     if x_kv is None:
         q, k_new, v_new = _project_qkv(p, x, cfg)
         if use_rope:
-            q = rope(q, pos_b[:, None], cfg.rope_theta)
-            k_new = rope(k_new, pos_b[:, None], cfg.rope_theta)
+            q = rope(q, posq, cfg.rope_theta)
+            k_new = rope(k_new, posq, cfg.rope_theta)
+        # read depths: token j attends [0, pos + j]. Q == 1 keeps the
+        # (B,) form so the single-query Pallas decode kernels stay
+        # eligible; Q > 1 passes per-query (B, Q) depths through to the
+        # multi-query XLA backends.
+        read_lens = pos_b + 1 if nq == 1 else posq + 1
         if page_table is not None:
-            # paged pool: scatter the one new token per lane at
-            # (layer_idx, table[b, pos // P], pos % P). Parked lanes'
-            # table rows all point at the scratch page (0), so their
-            # writes can never corrupt an allocated page.
-            psz = (cache["kq"] if q8 else cache["k"]).shape[2]
-            phys = jnp.take_along_axis(
-                page_table, (pos_b // psz)[:, None], axis=1)[:, 0]
-            offs = pos_b % psz
+            # paged pool: scatter token j per lane at
+            # (layer_idx, table[b, (pos+j) // P], (pos+j) % P). Parked
+            # lanes' table rows all point at the scratch page (0), so
+            # their writes can never corrupt an allocated page; the
+            # logical page index is clipped for frozen lanes sitting at
+            # the end of their extent (their writes land inside their own
+            # extent and are never read back).
+            psz = (cache["kq"] if q8 else
+                   cache["kp"] if q4 else cache["k"]).shape[2]
+            n_lp = page_table.shape[1]
 
             def updp(c, new):
-                return c.at[layer_idx, phys, offs].set(
-                    new[:, 0].astype(c.dtype))
-            if q8:
-                kt = quantize_q8_0(k_new, axis=-1)
-                vt = quantize_q8_0(v_new, axis=-1)
-                new_cache = {"kq": updp(cache["kq"], kt.q),
+                for j in range(nq):
+                    pj = pos_b + j
+                    lp = jnp.minimum(pj // psz, n_lp - 1)
+                    phys = jnp.take_along_axis(
+                        page_table, lp[:, None], axis=1)[:, 0]
+                    c = c.at[layer_idx, phys, pj % psz].set(
+                        new[:, j].astype(c.dtype))
+                return c
+            if quant:
+                qz = quantize_q4_0 if q4 else quantize_q8_0
+                kt = qz(k_new, axis=-1)
+                vt = qz(v_new, axis=-1)
+                kk, vk = ("kp", "vp") if q4 else ("kq", "vq")
+                new_cache = {kk: updp(cache[kk], kt.q),
                              "ks": updp(cache["ks"], kt.scale),
-                             "vq": updp(cache["vq"], vt.q),
+                             vk: updp(cache[vk], vt.q),
                              "vs": updp(cache["vs"], vt.scale)}
             else:
                 new_cache = {"k": updp(cache["k"], k_new),
                              "v": updp(cache["v"], v_new)}
             out = _paged_cache_attention(q, new_cache, layer_idx,
-                                         page_table, pos_b + 1)
+                                         page_table, read_lens)
             y = mm_out(out.astype(x.dtype), p["wo"])
             return constrain(y, "batch", None, "embed"), new_cache
         if stacked:
-            # token-sized in-place write into the (L,B,S,Hkv,D) stack
+            # slab-sized in-place write into the (L,B,S,Hkv,D) stack
             def upd5(c, new):
                 if not per_lane:
-                    # one DUS, update (1, B, 1, Hkv, D) — lowers to an
+                    # one DUS, update (1, B, Q, Hkv, D) — lowers to an
                     # in-place slab write (no scatter, no transpose)
                     return jax.lax.dynamic_update_slice(
                         c, new[None, :].astype(c.dtype),
                         (layer_idx, 0, pos_v, 0, 0))
                 return _per_lane_write(c, new, layer_idx, pos_b)
-            if q8:
-                # quantize the one new token and write its int8+scale
+            if quant:
+                # quantize the new token slab and write its code+scale
                 # planes in place; the cache matvec then runs through
-                # the dispatched q8_decode_attention kernel.
-                kt = quantize_q8_0(k_new, axis=-1)
-                vt = quantize_q8_0(v_new, axis=-1)
-                new_cache = {"kq": upd5(cache["kq"], kt.q),
+                # the dispatched q8/q4_decode_attention kernel.
+                qz = quantize_q4_0 if q4 else quantize_q8_0
+                kt = qz(k_new, axis=-1)
+                vt = qz(v_new, axis=-1)
+                kk, vk = ("kp", "vp") if q4 else ("kq", "vq")
+                new_cache = {kk: upd5(cache[kk], kt.q),
                              "ks": upd5(cache["ks"], kt.scale),
-                             "vq": upd5(cache["vq"], vt.q),
+                             vk: upd5(cache[vk], vt.q),
                              "vs": upd5(cache["vs"], vt.scale)}
-                out = _q8_cache_attention(q, new_cache, layer_idx,
-                                          pos_b + 1)
+                out = _quant_cache_attention(q, new_cache, layer_idx,
+                                             read_lens)
                 y = mm_out(out.astype(x.dtype), p["wo"])
                 return constrain(y, "batch", None, "embed"), new_cache
             k_cache = upd5(cache["k"], k_new)
@@ -331,9 +355,9 @@ def attention(p: dict, x: jax.Array, cfg: ArchConfig, *,
             k_layer, v_layer = k_cache, v_cache
             kv_len = cache["k"].shape[1]
         kpos = jnp.arange(kv_len)
-        mask = kpos[None, :] <= pos_b[:, None]           # (B, K)
+        mask = kpos[None, None, :] <= posq[:, :, None]   # (B, Q, K)
         if window is not None:
-            mask &= (pos_b[:, None] - kpos[None, :]) < window
+            mask &= (posq[:, :, None] - kpos[None, None, :]) < window
     else:  # cross-attention decode: cached encoder K/V
         q = mm(x, p["wq"])
         if "bq" in p:
@@ -344,7 +368,8 @@ def attention(p: dict, x: jax.Array, cfg: ArchConfig, *,
         if page_table is not None:
             # read-only paged cross block; lane b attends its gathered
             # logical positions [0, kv_lens[b])
-            psz = (cache["kq"] if q8 else cache["k"]).shape[2]
+            psz = (cache["kq"] if q8 else
+                   cache["kp"] if q4 else cache["k"]).shape[2]
             kv_len = page_table.shape[1] * psz
             lens = (jnp.asarray(kv_lens, jnp.int32) if kv_lens is not None
                     else jnp.full((b,), kv_len, jnp.int32))
@@ -352,11 +377,11 @@ def attention(p: dict, x: jax.Array, cfg: ArchConfig, *,
                                          lens)
             y = mm_out(out.astype(x.dtype), p["wo"])
             return constrain(y, "batch", None, "embed"), new_cache
-        if q8:  # read-only Q8_0 planes; per-lane encoder lengths
-            kv_len = cache["kq"].shape[2]
+        if quant:  # read-only quantized planes; per-lane encoder lengths
+            kv_len = cache["kq" if q8 else "kp"].shape[2]
             lens = (jnp.asarray(kv_lens, jnp.int32) if kv_lens is not None
                     else jnp.full((b,), kv_len, jnp.int32))
-            out = _q8_cache_attention(q, cache, layer_idx, lens)
+            out = _quant_cache_attention(q, cache, layer_idx, lens)
             y = mm_out(out.astype(x.dtype), p["wo"])
             return constrain(y, "batch", None, "embed"), new_cache
         if stacked:   # read-only slice of the stacked cross cache
@@ -369,10 +394,10 @@ def attention(p: dict, x: jax.Array, cfg: ArchConfig, *,
             k_layer, v_layer = cache["k"], cache["v"]
             kv_len = cache["k"].shape[1]
         if kv_lens is None:
-            mask = jnp.ones((b, kv_len), bool)
+            mask = jnp.ones((b, 1, kv_len), bool)
         else:   # serving: encoder states padded to the pool's enc_len
             mask = (jnp.arange(kv_len)[None, :]
-                    < jnp.asarray(kv_lens, jnp.int32)[:, None])
+                    < jnp.asarray(kv_lens, jnp.int32)[:, None])[:, None, :]
 
     q = constrain(q, "batch", None, "heads", "head_dim")
     k = _repeat_kv(k_layer, h)
@@ -386,7 +411,7 @@ def attention(p: dict, x: jax.Array, cfg: ArchConfig, *,
                     preferred_element_type=jnp.float32) * scale
     if softcap is not None:
         s_ = softcap * jnp.tanh(s_ / softcap)
-    s_ = jnp.where(mask[:, None, None, :], s_, NEG_INF)
+    s_ = jnp.where(mask[:, None], s_, NEG_INF)   # mask: (B, Q|1, K)
     w = jax.nn.softmax(s_, axis=-1)
     out = jnp.einsum("bhqk,bkhd->bqhd", w.astype(ddt), v.astype(ddt),
                      preferred_element_type=jnp.float32)
@@ -396,51 +421,69 @@ def attention(p: dict, x: jax.Array, cfg: ArchConfig, *,
 
 def _per_lane_write(c: jax.Array, new: jax.Array, layer_idx,
                     pos_b: jax.Array) -> jax.Array:
-    """Write one new token per lane into the stacked cache:
-    ``c[layer_idx, b, pos_b[b]] = new[b, 0]`` for every lane ``b``.
+    """Write a Q-token slab per lane into the stacked cache:
+    ``c[layer_idx, b, pos_b[b] + j] = new[b, j]`` for every lane ``b``
+    and slab token ``j`` (Q == 1 on the plain decode path; Q == spec_k
+    in the speculative verify).
 
     Continuous batching puts each lane at its own position, so this is
     inherently a scatter — but XLA-CPU lowers small scatters through a
     slow generic path that dominates a fused decode step. On CPU the
     one-hot ``where`` formulation (a vectorized full-plane select) is
     ~4x cheaper and the plane is already streamed by the decode matvec
-    anyway; on TPU/GPU the per-lane DUS scatter writes a token-sized
-    slab in place and never touches the rest of the pool. Both are
+    anyway; on TPU/GPU the per-lane DUS scatter writes a slab-sized
+    update in place and never touches the rest of the pool. Both are
     elementwise-identical; the choice is made at trace time."""
+    nq = new.shape[1]
     if jax.default_backend() == "cpu":
         n_layers, _, s = c.shape[:3]
+        j_rel = jnp.arange(s)[None, :] - pos_b[:, None]          # (B, S)
         sel = (jnp.arange(n_layers)[:, None, None] == layer_idx) \
-            & (jnp.arange(s)[None, None, :] == pos_b[None, :, None])
+            & (j_rel >= 0)[None] & (j_rel < nq)[None]
+        slab = jnp.take_along_axis(
+            new, jnp.clip(j_rel, 0, nq - 1)[..., None, None],
+            axis=1)                                               # (B,S,·,·)
         return jnp.where(sel[..., None, None],
-                         new[None, :, :].astype(c.dtype), c)
+                         slab[None].astype(c.dtype), c)
     return jax.vmap(
         lambda cb, kn, pp: jax.lax.dynamic_update_slice(
-            cb, kn[None, None].astype(cb.dtype), (layer_idx, pp, 0, 0)),
-        in_axes=(1, 0, 0), out_axes=1)(c, new[:, 0], pos_b)
+            cb, kn[None].astype(cb.dtype), (layer_idx, pp, 0, 0)),
+        in_axes=(1, 0, 0), out_axes=1)(c, new, pos_b)
 
 
-def _q8_cache_attention(q: jax.Array, planes: dict, layer_idx,
-                        lens: jax.Array) -> jax.Array:
-    """Decode matvec over one layer of the stacked Q8_0 cache.
+def _quant_cache_attention(q: jax.Array, planes: dict, layer_idx,
+                           lens: jax.Array) -> jax.Array:
+    """Decode matvec over one layer of a stacked quantized cache.
 
-    q: (B, 1, H, D); ``planes``: {kq, ks, vq, vs} each (L, B, S, Hkv, ·);
-    lane b attends cache positions [0, lens[b]). The cache stays int8 all
-    the way to the kernel — dequantization happens next to the dot
-    (paper C1), via the ACCEL/HOST-routed ``q8_decode_attention`` op.
-    Returns (B, 1, H, D)."""
-    b, _, h, d = q.shape
+    q: (B, Q, H, D); ``planes``: {kq, ks, vq, vs} (q8_0) or
+    {kp, ks, vp, vs} (q4_0 nibble-packed), each (L, B, S, Hkv, ·); lane b
+    attends cache positions [0, lens[b]) (``lens`` (B,) — or (B, Q)
+    per-query depths in the speculative verify). The cache stays in code
+    planes all the way to the kernel — dequantization happens next to
+    the dot (paper C1), via the ACCEL/HOST-routed decode-attention op.
+    Returns (B, Q, H, D)."""
+    b, nq, h, d = q.shape
+    q4 = is_q4_cache(planes)
 
     def flat(c):
         lay = jax.lax.dynamic_index_in_dim(c, layer_idx, 0, keepdims=False)
         lay = _repeat_kv(lay, h)                      # (B, S, H, ·)
         return lay.transpose(0, 2, 1, 3).reshape(b * h, lay.shape[1], -1)
 
-    qf = q.transpose(0, 2, 1, 3).reshape(b * h, 1, d)
-    lens_f = jnp.repeat(jnp.asarray(lens, jnp.int32), h)
-    out = dispatch("q8_decode_attention", qf, flat(planes["kq"]),
-                   flat(planes["ks"]), flat(planes["vq"]),
-                   flat(planes["vs"]), lens_f)
-    return out.reshape(b, h, 1, d).transpose(0, 2, 1, 3)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, nq, d)
+    lens_f = jnp.repeat(jnp.asarray(lens, jnp.int32), h, axis=0)
+    if q4:
+        out = dispatch("q4_decode_attention", qf, flat(planes["kp"]),
+                       flat(planes["ks"]), flat(planes["vp"]),
+                       flat(planes["vs"]), lens_f)
+    else:
+        out = dispatch("q8_decode_attention", qf, flat(planes["kq"]),
+                       flat(planes["ks"]), flat(planes["vq"]),
+                       flat(planes["vs"]), lens_f)
+    return out.reshape(b, h, nq, d).transpose(0, 2, 1, 3)
+
+
+_q8_cache_attention = _quant_cache_attention  # back-compat alias
 
 
 def _paged_cache_attention(q: jax.Array, planes: dict, layer_idx,
@@ -454,7 +497,10 @@ def _paged_cache_attention(q: jax.Array, planes: dict, layer_idx,
     def lay(c):
         return jax.lax.dynamic_index_in_dim(c, layer_idx, 0,
                                             keepdims=False)
-    if is_q8_cache(planes):
+    if is_q4_cache(planes):
+        kc = {"p": lay(planes["kp"]), "s": lay(planes["ks"])}
+        vc = {"p": lay(planes["vp"]), "s": lay(planes["vs"])}
+    elif is_q8_cache(planes):
         kc = {"q": lay(planes["kq"]), "s": lay(planes["ks"])}
         vc = {"q": lay(planes["vq"]), "s": lay(planes["vs"])}
     else:
@@ -486,19 +532,28 @@ def _write_prefill_cache(cache: Optional[dict], k: jax.Array, v: jax.Array):
 def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int,
                   dtype=jnp.bfloat16) -> dict:
     """KV cache planes. ``dtype`` is an array dtype (bf16/f32 cache) or
-    the string ``"q8_0"``: int8 planes + f16 scales blocked along
-    head_dim — the serving engine's quantized-cache policy."""
+    a tier string: ``"q8_0"`` (int8 planes + f16 scales blocked along
+    head_dim) or ``"q4_0"`` (nibble-packed uint8 planes, head_dim halved,
+    + f16 scales) — the serving engine's quantized-cache policies."""
     shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
-    if isinstance(dtype, str) and dtype == "q8_0":
+    if isinstance(dtype, str):
         if cfg.head_dim % QBLOCK:
             raise ValueError(
-                f"q8_0 KV cache needs head_dim % {QBLOCK} == 0, got "
+                f"{dtype} KV cache needs head_dim % {QBLOCK} == 0, got "
                 f"{cfg.head_dim}")
         sshape = shape[:-1] + (cfg.head_dim // QBLOCK,)
-        return {"kq": jnp.zeros(shape, jnp.int8),
-                "ks": jnp.zeros(sshape, jnp.float16),
-                "vq": jnp.zeros(shape, jnp.int8),
-                "vs": jnp.zeros(sshape, jnp.float16)}
+        if dtype == "q8_0":
+            return {"kq": jnp.zeros(shape, jnp.int8),
+                    "ks": jnp.zeros(sshape, jnp.float16),
+                    "vq": jnp.zeros(shape, jnp.int8),
+                    "vs": jnp.zeros(sshape, jnp.float16)}
+        if dtype == "q4_0":
+            pshape = shape[:-1] + (cfg.head_dim // 2,)
+            return {"kp": jnp.zeros(pshape, jnp.uint8),
+                    "ks": jnp.zeros(sshape, jnp.float16),
+                    "vp": jnp.zeros(pshape, jnp.uint8),
+                    "vs": jnp.zeros(sshape, jnp.float16)}
+        raise ValueError(f"unknown KV-cache tier {dtype!r}")
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
@@ -506,19 +561,30 @@ def is_q8_cache(cache) -> bool:
     return isinstance(cache, dict) and "kq" in cache
 
 
-def quantize_kv_cache(tree):
-    """bf16 KV-cache pytree -> Q8_0 plane pytree.
+def is_q4_cache(cache) -> bool:
+    return isinstance(cache, dict) and "kp" in cache
+
+
+def quantize_kv_cache(tree, tier: str = "q8_0"):
+    """bf16 KV-cache pytree -> quantized plane pytree.
 
     Every ``{"k", "v"}`` dict becomes ``{"kq", "ks", "vq", "vs"}``
-    (int8 planes + f16 scales, 32-blocked along head_dim); state caches
-    (ssm/xlstm — different key sets) pass through untouched. The serving
-    engine applies this to each one-shot prefill cache before scattering
-    it into a ``cache_dtype="q8_0"`` pool."""
+    (``tier="q8_0"``: int8 planes + f16 scales, 32-blocked along
+    head_dim) or ``{"kp", "ks", "vp", "vs"}`` (``tier="q4_0"``:
+    nibble-packed uint8 planes); state caches (ssm/xlstm — different key
+    sets) pass through untouched. The serving engine applies this to each
+    one-shot prefill cache before scattering it into a quantized pool."""
     if isinstance(tree, dict):
         if set(tree) == {"k", "v"}:
+            if tier == "q4_0":
+                kt = quantize_q4_0(tree["k"], axis=-1)
+                vt = quantize_q4_0(tree["v"], axis=-1)
+                return {"kp": kt.q, "ks": kt.scale,
+                        "vp": vt.q, "vs": vt.scale}
             kt = quantize_q8_0(tree["k"], axis=-1)
             vt = quantize_q8_0(tree["v"], axis=-1)
             return {"kq": kt.q, "ks": kt.scale,
                     "vq": vt.q, "vs": vt.scale}
-        return {key: quantize_kv_cache(sub) for key, sub in tree.items()}
+        return {key: quantize_kv_cache(sub, tier) for key, sub in
+                tree.items()}
     return tree

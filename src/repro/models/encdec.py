@@ -160,9 +160,12 @@ def decode_tokens(params: dict, cfg: ArchConfig, tokens: jax.Array,
         if not isinstance(dec_pos, jax.Array):
             dec_pos = as_array(dec_pos, jnp.float32)   # Q8Tensor params
         if posv.ndim == 1:    # per-lane positions (continuous batching)
-            pe = jnp.take(dec_pos, posv, axis=0)[:, None]
+            # token j of a Q-token slab (speculative verify) sits at
+            # absolute position pos + j
+            pe = jnp.take(dec_pos,
+                          posv[:, None] + jnp.arange(s)[None, :], axis=0)
         else:
-            pe = jax.lax.dynamic_slice_in_dim(dec_pos, posv, 1,
+            pe = jax.lax.dynamic_slice_in_dim(dec_pos, posv, s,
                                               axis=0)[None]
         x = x + pe.astype(x.dtype)
     else:

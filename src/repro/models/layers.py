@@ -8,7 +8,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.quantize import Q8Tensor
+from repro.core.quantize import QBLOCK, Q4Tensor, Q8Tensor, unpack_q4
 from repro.kernels.api import dispatch
 from repro.parallel.sharding import constrain
 
@@ -74,15 +74,25 @@ def ninit(key, shape, fan_in: int, dtype=jnp.float32) -> jax.Array:
 # ----------------------------------------------------------------------------
 
 def mm(x: jax.Array, w, compute_dtype=jnp.bfloat16) -> jax.Array:
-    """x @ w where w may be a Q8Tensor (dispatched q8_matmul) or an array.
-    Contraction over x's last dim and w's first (or first-two for fused
-    head layouts)."""
+    """x @ w where w may be a Q8Tensor/Q4Tensor (dispatched q8/q4_matmul)
+    or an array. Contraction over x's last dim and w's first (or
+    first-two for fused head layouts)."""
     if isinstance(w, Q8Tensor):
         lead = x.shape[:-1]
         k = x.shape[-1]
         w2 = Q8Tensor(w.q.reshape(k, -1),
                       w.scale.reshape(w.scale.shape[0], -1))
         y = dispatch("q8_matmul", x.reshape(-1, k), w2,
+                     out_dtype=compute_dtype)
+        return y.reshape(*lead, *w.q.shape[1:])
+    if isinstance(w, Q4Tensor):
+        # w.q is nibble-packed along K: (K//2, N) for a logical (K, N)
+        # weight, so the output dims are w.q.shape[1:] unchanged.
+        lead = x.shape[:-1]
+        k = x.shape[-1]
+        w2 = Q4Tensor(w.q.reshape(k // 2, -1),
+                      w.scale.reshape(w.scale.shape[0], -1))
+        y = dispatch("q4_matmul", x.reshape(-1, k), w2,
                      out_dtype=compute_dtype)
         return y.reshape(*lead, *w.q.shape[1:])
     w = w.astype(compute_dtype)
@@ -100,6 +110,15 @@ def mm_out(x: jax.Array, w, compute_dtype=jnp.bfloat16) -> jax.Array:
         h, d, n = w.q.shape
         w2 = Q8Tensor(w.q.reshape(h * d, n), w.scale.reshape(-1, n))
         y = dispatch("q8_matmul", x.reshape(-1, h * d), w2,
+                     out_dtype=compute_dtype)
+        return y.reshape(*x.shape[:-2], n)
+    if isinstance(w, Q4Tensor):
+        # packed along head_dim (axis -2): w.q is (h, dh//2, n) for a
+        # logical (h, dh, n) weight; dh % QBLOCK == 0 keeps the flattened
+        # (h·dh) contraction's 32-blocks inside one head.
+        h, dp, n = w.q.shape
+        w2 = Q4Tensor(w.q.reshape(h * dp, n), w.scale.reshape(-1, n))
+        y = dispatch("q4_matmul", x.reshape(-1, h * 2 * dp), w2,
                      out_dtype=compute_dtype)
         return y.reshape(*x.shape[:-2], n)
     h, d, n = w.shape
@@ -181,11 +200,23 @@ def init_embedding(keys: KeyGen, vocab: int, d: int) -> dict:
     return {"table": Param(ninit(keys(), (vp, d), d), ("vocab", "param_embed"))}
 
 
+def _dequant_q4_bf16(t: Q4Tensor) -> jax.Array:
+    """Dequantize a vocab-axis-packed Q4 table to bf16 (no f32 plane)."""
+    codes = unpack_q4(t.q, axis=-2).astype(jnp.bfloat16)
+    return codes * jnp.repeat(t.scale.astype(jnp.bfloat16), QBLOCK, axis=-2)
+
+
 def embed(p: dict, tokens: jax.Array, compute_dtype=jnp.bfloat16) -> jax.Array:
     tbl = p["table"]
     if isinstance(tbl, Q8Tensor):
         from repro.core.quantize import dequantize_q8_0
         tbl = dequantize_q8_0(tbl, axis=-2)
+    elif isinstance(tbl, Q4Tensor):
+        # q4 tables live inside the traced draft-verify decode program:
+        # widen to bf16, never a full f32 plane (SC-DTYPE). The f16->bf16
+        # scale rounding only perturbs draft logits, which the verify
+        # forward makes irrelevant.
+        tbl = _dequant_q4_bf16(tbl)
     # gather rows first, cast the (B, S, d) result after: decode looks
     # up S=1 tokens per lane per step, and casting the padded-vocab
     # table before the take would re-stream it every fused-scan step
@@ -202,11 +233,18 @@ def logits_head(p: dict, x: jax.Array, vocab: int,
         y = mm(x, head, jnp.float32)
     else:
         tbl = p["table"]
-        if isinstance(tbl, Q8Tensor):
-            from repro.core.quantize import dequantize_q8_0
-            tbl = dequantize_q8_0(tbl, axis=-2)
-        y = jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
-                       tbl.astype(jnp.float32))
+        if isinstance(tbl, Q4Tensor):
+            # bf16-widened (SC-DTYPE: no f32 vocab plane in the traced
+            # draft program); f32 accumulation keeps the argmax stable.
+            y = jnp.einsum("...d,vd->...v", x.astype(jnp.bfloat16),
+                           _dequant_q4_bf16(tbl),
+                           preferred_element_type=jnp.float32)
+        else:
+            if isinstance(tbl, Q8Tensor):
+                from repro.core.quantize import dequantize_q8_0
+                tbl = dequantize_q8_0(tbl, axis=-2)
+            y = jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                           tbl.astype(jnp.float32))
     if softcap is not None:
         y = softcap * jnp.tanh(y / softcap)
     vp = y.shape[-1]

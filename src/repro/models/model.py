@@ -60,10 +60,14 @@ class LaneStateSpec:
     donated decode scan carry keeps a stable dtype (no silent f32
     widening — checked by staticcheck SC-DTYPE).
 
-    ``q8_supported``: the q8_0 cache tier quantizes K/V planes; it
-    needs plain-softmax decode attention with ``head_dim % 32 == 0``
-    and at least one KV plane to quantize (pure-recurrent lanes have
-    none — their O(1) state stays ``recurrent_dtype``)."""
+    ``quant_tiers``: the quantized cache tiers this family can serve
+    under (``"q8_0"``: int8+scale planes; ``"q4_0"``: nibble-packed
+    planes). Both tiers quantize K/V planes blocked along head_dim, so
+    they need plain-softmax decode attention with
+    ``head_dim % 32 == 0`` and at least one KV plane to quantize
+    (pure-recurrent lanes have none — their O(1) state stays
+    ``recurrent_dtype``). ``q8_supported`` is kept as a derived
+    property for older call sites."""
     family: str
     self_kv: bool
     cross_kv: bool
@@ -72,7 +76,18 @@ class LaneStateSpec:
     moe_experts: int = 0
     moe_top_k: int = 0
     prefill_exact: bool = False
-    q8_supported: bool = False
+    quant_tiers: tuple = ()
+
+    @property
+    def q8_supported(self) -> bool:
+        return "q8_0" in self.quant_tiers
+
+    def supports_tier(self, cache_dtype: str) -> bool:
+        """True if ``cache_dtype`` (a tier string or array-dtype name)
+        can hold this family's lane state."""
+        if cache_dtype in ("q8_0", "q4_0"):
+            return cache_dtype in self.quant_tiers
+        return True
 
     @property
     def state_kinds(self) -> tuple:
@@ -165,9 +180,9 @@ class Model:
     # ---- cache ------------------------------------------------------------
     def init_cache(self, batch: int, max_len: int, enc_len: int = 1500,
                    dtype=jnp.bfloat16):
-        """``dtype``: an array dtype, or the string ``"q8_0"`` for the
-        serving engine's quantized KV-cache policy (int8+scale planes;
-        recurrent states stay bf16)."""
+        """``dtype``: an array dtype, or a tier string (``"q8_0"`` /
+        ``"q4_0"``) for the serving engine's quantized KV-cache policies
+        (code+scale planes; recurrent states stay bf16)."""
         if self.cfg.enc_dec:
             return encdec_mod.init_encdec_cache(self.cfg, batch, max_len,
                                                 enc_len, dtype)
@@ -198,7 +213,8 @@ class Model:
         if cfg.enc_dec:
             return LaneStateSpec(
                 family=cfg.family, self_kv=True, cross_kv=True,
-                q8_supported=cfg.head_dim % 32 == 0)
+                quant_tiers=(("q8_0", "q4_0")
+                             if cfg.head_dim % 32 == 0 else ()))
         blocks = [bt for bt, _ in tf_mod.segment_pattern(cfg)
                   + tf_mod.tail_pattern(cfg)]
         recurrent = []
@@ -215,7 +231,8 @@ class Model:
             recurrent=tuple(recurrent),
             moe_experts=cfg.n_experts if cfg.is_moe else 0,
             moe_top_k=cfg.top_k if cfg.is_moe else 0,
-            prefill_exact=bool(recurrent), q8_supported=q8)
+            prefill_exact=bool(recurrent),
+            quant_tiers=("q8_0", "q4_0") if q8 else ())
 
     def lane_state_bytes(self, max_len: int, enc_len: int = 1500,
                          dtype=jnp.bfloat16) -> dict:
@@ -229,7 +246,8 @@ class Model:
 
         def walk(tree):
             if isinstance(tree, dict):
-                if set(tree) in ({"k", "v"}, {"kq", "ks", "vq", "vs"}):
+                if set(tree) in ({"k", "v"}, {"kq", "ks", "vq", "vs"},
+                                 {"kp", "ks", "vp", "vs"}):
                     return (sum(int(l.size * l.dtype.itemsize)
                                 for l in jax.tree.leaves(tree)), 0)
                 kv = st = 0

@@ -171,9 +171,9 @@ def _block_cache(cfg: ArchConfig, btype: str, kind: str, batch: int,
             # LaneStateSpec "routing": per-lane executed top-k counters
             c["routing"] = jnp.zeros((batch, cfg.n_experts), jnp.int32)
         return c
-    # "q8_0" applies to KV planes only; recurrent states stay bf16
+    # "q8_0"/"q4_0" apply to KV planes only; recurrent states stay bf16
     # (they are O(1)-sized and fully rewritten every step — no LOAD win)
-    if isinstance(dtype, str) and dtype == "q8_0":
+    if isinstance(dtype, str) and dtype in ("q8_0", "q4_0"):
         dtype = jnp.bfloat16
     if btype == "mamba":
         return {"ssm": ssm_mod.init_mamba_cache(cfg, batch, dtype)}

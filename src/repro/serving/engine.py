@@ -87,9 +87,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import flags
-from repro.core.quantize import quantize_q8_0, stored_bytes
+from repro.core.quantize import (Q4Tensor, Q8Tensor, quantize_q4_0,
+                                 quantize_q8_0, quantize_tree,
+                                 stored_bytes)
 from repro.kernels.api import (DispatchContext, dispatch_counters,
                                dispatch_trace, use_context)
+from repro.kernels.q4_attention.ops import cache_traffic_ratio_q4
 from repro.kernels.q8_attention.ops import cache_traffic_ratio
 from repro.models import encdec as encdec_mod
 from repro.models.attention import quantize_kv_cache
@@ -114,7 +117,9 @@ def _quiet_donation():
 
 EOS_DEFAULT = 2
 
-CACHE_DTYPES = ("bf16", "q8_0")
+CACHE_DTYPES = ("bf16", "q8_0", "q4_0")
+
+QUANT_TIERS = ("q8_0", "q4_0")
 
 _ENGINE_SEQ = itertools.count()   # unique dispatch-trace tags per engine
 
@@ -275,7 +280,9 @@ class ServeEngine:
                  dispatch_ctx: Optional[DispatchContext] = None,
                  paged: bool = False, page_size: int = 8,
                  n_pages: Optional[int] = None,
-                 n_cross_pages: Optional[int] = None):
+                 n_cross_pages: Optional[int] = None,
+                 spec_k: int = 0, draft_dtype: str = "q4_0",
+                 draft_params: Optional[Any] = None):
         """``platform``: a registered hardware target (name or
         ``repro.platforms.Platform``). Supplies the default dispatch
         context (``DispatchContext.for_platform``) and enables
@@ -288,8 +295,20 @@ class ServeEngine:
         context. Routing is baked in at first trace, so construct one
         engine per context.
 
-        ``cache_dtype``: "bf16" (dense planes) or "q8_0" (int8+scale
-        planes, decode reads via the q8_decode_attention op).
+        ``cache_dtype``: "bf16" (dense planes), "q8_0" (int8+scale
+        planes, decode reads via the q8_decode_attention op), or
+        "q4_0" (nibble-packed uint8+scale planes via
+        q4_decode_attention — ~0.28x bf16 cache bytes/step).
+
+        ``spec_k``: > 0 enables self-speculative decoding — each round
+        drafts ``spec_k - 1`` tokens with ``draft_dtype``-quantized
+        weights and verifies all ``spec_k`` positions in ONE full-model
+        forward, inside the same donated tick (still exactly one host
+        sync per tick). ``decode_block`` must be a multiple of
+        ``spec_k``. Greedy decode only; token-identical to plain
+        serving. ``draft_params`` overrides the engine-built draft
+        weights (``quantize_tree(params, tier=draft_dtype)``) — pass it
+        when the served params are already quantized.
 
         ``decode_block``: decode steps fused per ``step()`` tick (one
         host sync per tick regardless of the block size). A mutable
@@ -319,26 +338,33 @@ class ServeEngine:
         # q8_0 tier applies — every family-specific decision below keys
         # off this instead of the config
         self.spec = model.state_spec()
-        if cache_dtype == "q8_0":
+        if cache_dtype in QUANT_TIERS:
             if flags.BASELINE:
-                raise ValueError("cache_dtype='q8_0' needs the stacked "
-                                 "decode path (unset REPRO_BASELINE)")
+                raise ValueError(f"cache_dtype={cache_dtype!r} needs the "
+                                 f"stacked decode path (unset "
+                                 f"REPRO_BASELINE)")
             if not self.spec.self_kv and not self.spec.cross_kv:
                 raise ValueError(
-                    f"cache_dtype='q8_0' quantizes attention KV planes; "
-                    f"{cfg.name} lanes carry only recurrent state "
-                    f"({'/'.join(self.spec.recurrent)}) — serve it with "
-                    f"cache_dtype='bf16'")
+                    f"cache_dtype={cache_dtype!r} quantizes attention KV "
+                    f"planes; {cfg.name} lanes carry only recurrent "
+                    f"state ({'/'.join(self.spec.recurrent)}) — serve it "
+                    f"with cache_dtype='bf16'")
             if cfg.attn_softcap is not None or cfg.sliding_window \
                     is not None or cfg.local_global:
                 raise ValueError(
-                    f"cache_dtype='q8_0' supports plain softmax decode "
-                    f"attention only; {cfg.name} uses softcap/windowed "
-                    f"attention")
+                    f"cache_dtype={cache_dtype!r} supports plain softmax "
+                    f"decode attention only; {cfg.name} uses "
+                    f"softcap/windowed attention")
             if cfg.head_dim % 32:
                 raise ValueError(
-                    f"cache_dtype='q8_0' blocks scales 32-wide along "
-                    f"head_dim; {cfg.name} has head_dim={cfg.head_dim}")
+                    f"cache_dtype={cache_dtype!r} blocks scales 32-wide "
+                    f"along head_dim; {cfg.name} has "
+                    f"head_dim={cfg.head_dim}")
+            if not self.spec.supports_tier(cache_dtype):
+                raise ValueError(
+                    f"{cfg.name} declares quant tiers "
+                    f"{self.spec.quant_tiers}; cache_dtype="
+                    f"{cache_dtype!r} is not among them")
         self.platform: Optional[Platform] = \
             get_platform(platform) if platform is not None else None
         if dispatch_ctx is None and self.platform is not None:
@@ -356,7 +382,59 @@ class ServeEngine:
         self.enc_dec = bool(cfg.enc_dec)
         self.cache_dtype = cache_dtype
         self.decode_block = int(decode_block)
-        cdt = "q8_0" if cache_dtype == "q8_0" else jnp.bfloat16
+        cdt = cache_dtype if cache_dtype in QUANT_TIERS else jnp.bfloat16
+        # --- self-speculative decoding (draft with quantized weights,
+        # verify every position in one full-model multi-query forward)
+        self.spec_k = int(spec_k)
+        self.draft_dtype = draft_dtype
+        self.draft_params = None
+        if self.spec_k:
+            if self.spec_k < 2:
+                raise ValueError(f"spec_k must be >= 2 (1 draft + 1 "
+                                 f"verify minimum), got {spec_k}")
+            if flags.BASELINE:
+                raise ValueError("speculative decoding needs the stacked "
+                                 "decode path (unset REPRO_BASELINE)")
+            if draft_dtype not in QUANT_TIERS:
+                raise ValueError(f"draft_dtype {draft_dtype!r}: expected "
+                                 f"one of {QUANT_TIERS}")
+            if not self.spec.self_kv:
+                raise ValueError(
+                    f"speculative decoding rewinds self-KV write "
+                    f"cursors; {cfg.name} lanes carry "
+                    f"{'/'.join(self.spec.recurrent) or 'no'} recurrent "
+                    f"state, which cannot be rolled back")
+            if self.spec.moe_experts:
+                raise ValueError(
+                    f"speculative decoding does not thread the per-lane "
+                    f"routing counters through draft/verify; {cfg.name} "
+                    f"is MoE")
+            if cfg.attn_softcap is not None or cfg.sliding_window \
+                    is not None or cfg.local_global:
+                raise ValueError(
+                    f"speculative decoding supports plain softmax decode "
+                    f"attention only; {cfg.name} uses softcap/windowed "
+                    f"attention")
+            if self.decode_block % self.spec_k:
+                raise ValueError(
+                    f"decode_block ({decode_block}) must be a multiple "
+                    f"of spec_k ({spec_k}): a tick scans "
+                    f"decode_block // spec_k draft-verify rounds")
+            if draft_params is not None:
+                self.draft_params = draft_params
+            else:
+                # QTensors are pytree nodes: flattening blindly would
+                # dissolve them into plain arrays and hide the tier
+                leaves = jax.tree.leaves(
+                    params,
+                    is_leaf=lambda l: isinstance(l, (Q4Tensor, Q8Tensor)))
+                if not all(isinstance(l, jax.Array) for l in leaves):
+                    raise ValueError(
+                        "served params are already quantized; pass "
+                        "draft_params= explicitly (the engine builds "
+                        "draft weights from float params only)")
+                self.draft_params = quantize_tree(params,
+                                                  tier=draft_dtype)
         self.paged = bool(paged)
         self.page_size = int(page_size)
         self.pages: Optional[PagedKV] = None
@@ -421,13 +499,21 @@ class ServeEngine:
                 functools.partial(
                     _extend_paged_cross_cache if self.paged
                     else _extend_cross_cache,
-                    q8=cache_dtype == "q8_0"),
+                    tier=cache_dtype if cache_dtype in QUANT_TIERS
+                    else None),
                 donate_argnums=(0,))
         # serving-energy accounting (energy_report)
         self._ticks = 0         # executed fused decode ticks (host syncs)
-        self._decode_steps = 0  # executed decode steps (= ticks x block)
+        self._decode_steps = 0  # executed full-model decode steps
         self._generated = 0     # tokens emitted (prefill firsts + decode)
         self._host_syncs = 0    # device->host fetches on the decode path
+        # speculative accounting: draft forwards, multi-query verify
+        # forwards, rounds, and the emit stats behind the acceptance rate
+        self._draft_steps = 0
+        self._verify_steps = 0
+        self._spec_rounds = 0
+        self._spec_emitted = 0      # tokens emitted by spec ticks
+        self._spec_live_rounds = 0  # (round, lane) pairs that emitted
 
     # ------------------------------------------------------------------
     def _build_decode(self, k: int):
@@ -443,6 +529,8 @@ class ServeEngine:
         argument; the tick never remaps pages, so the tables pass
         through unchanged (aliased outputs) and the engine re-adopts
         them after the donation invalidated the inputs."""
+        if self.spec_k:
+            return self._build_spec_decode(k)
         model, enc_dec, max_len = self.model, self.enc_dec, self.max_len
 
         if self.paged:
@@ -505,6 +593,129 @@ class ServeEngine:
 
         return decode_block
 
+    def _build_spec_decode(self, k: int):
+        """The fused *speculative* decode tick: ``k // spec_k``
+        draft-verify rounds scanned inside one donated jit.
+
+        Each round, per lane:
+
+        * **draft** — ``spec_k - 1`` greedy steps with the quantized
+          draft weights, writing draft KV at ``pos .. pos+spec_k-2``;
+        * **verify** — ONE multi-query full-model forward over
+          ``[token, d_0, .., d_{spec_k-2}]`` at the same positions
+          (its writes overwrite every draft KV entry with
+          full-precision-projected values), giving the true greedy
+          continuation ``o_j`` at every position;
+        * **accept** — the emitted prefix is ``o_0 .. o_{m-1}`` where
+          ``m-1`` counts leading draft hits (``d_j == o_j``), cut
+          further by the same EOS/max_new/max_len stops the plain tick
+          applies. ``pos`` advances by ``m`` — rejected tails are
+          rolled back by *not* advancing the write cursor; the next
+          round's writes land on top of the garbage before any query
+          ever attends it.
+
+        ``o_0`` is exactly the plain tick's argmax, so the emitted
+        stream is token-identical to plain greedy decode; a round
+        always makes >= 1 token of progress per active lane. Stacked
+        rounds yield the same ``(k, n_slots)`` token/emit block
+        contract (rows ``r*spec_k .. r*spec_k+m-1`` of round ``r`` are
+        emitted; the emit mask is no longer prefix-contiguous across
+        rounds, which ``step_replay`` handles). Still exactly one host
+        sync per tick."""
+        model, enc_dec, max_len = self.model, self.enc_dec, self.max_len
+        spec_k = self.spec_k
+        gamma = spec_k - 1
+        n_rounds = k // spec_k
+        draft_params_const = self.draft_params
+        paged = self.paged
+
+        def spec_round(params, tables, enc_lens, eos, max_new, carry, _):
+            cache, tokens, pos, active, n_out = carry
+            kw = {"pages": tables} if paged else {}
+
+            # --- draft: gamma greedy steps with the quantized weights
+            def draft_one(c, _):
+                dcache, dtok, dpos = c
+                batch = {"tokens": dtok}
+                if enc_dec:
+                    batch["enc_lens"] = enc_lens
+                logits, dcache = model.forward(
+                    draft_params_const, batch, mode="decode",
+                    cache=dcache, pos=dpos, **kw)
+                nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+                return (dcache, nxt[:, None], dpos + 1), nxt
+
+            (cache, _, _), drafts = jax.lax.scan(
+                draft_one, (cache, tokens, pos), None, length=gamma)
+            drafts = drafts.T                      # (B, gamma)
+
+            # --- verify: one multi-query full-model forward over the
+            # current token plus every draft, at positions pos..pos+gamma
+            ver_in = jnp.concatenate([tokens, drafts], axis=1)
+            batch = {"tokens": ver_in}
+            if enc_dec:
+                batch["enc_lens"] = enc_lens
+            logits, cache = model.forward(
+                params, batch, mode="decode", cache=cache, pos=pos, **kw)
+            o = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (B, spec_k)
+
+            # --- accept: leading draft hits, cut by the stop conditions
+            nb = tokens.shape[0]
+            match = drafts == o[:, :gamma]
+            prefix_ok = jnp.concatenate(
+                [jnp.ones((nb, 1), bool),
+                 jnp.cumprod(match, axis=1) > 0], axis=1)
+            jj = jnp.arange(spec_k)[None, :]
+            cand_stop = (o == eos[:, None]) \
+                | (n_out[:, None] + jj + 1 >= max_new[:, None]) \
+                | (pos[:, None] + jj + 1 >= max_len - 1)
+            no_prior_stop = jnp.concatenate(
+                [jnp.ones((nb, 1), bool),
+                 jnp.cumprod(~cand_stop[:, :-1], axis=1) > 0], axis=1)
+            emit = active[:, None] & prefix_ok & no_prior_stop
+            m = emit.sum(axis=1).astype(jnp.int32)
+            last = jnp.take_along_axis(
+                o, jnp.clip(m - 1, 0, spec_k - 1)[:, None], axis=1)[:, 0]
+            tokens = jnp.where(m > 0, last, tokens[:, 0])[:, None]
+            pos = pos + m
+            n_out = n_out + m
+            active = active & ~(emit & cand_stop).any(axis=1)
+            return (cache, tokens, pos, active, n_out), (o.T, emit.T)
+
+        if paged:
+            @functools.partial(jax.jit,
+                               donate_argnums=(1, 2, 3, 4, 5, 6))
+            def paged_spec_block(params, cache, tables, tokens, pos,
+                                 active, n_out, enc_lens, eos, max_new):
+                carry = (cache, tokens, pos, active, n_out)
+                carry, (tok_blk, emit_blk) = jax.lax.scan(
+                    functools.partial(spec_round, params, tables,
+                                      enc_lens, eos, max_new),
+                    carry, None, length=n_rounds)
+                cache, tokens, pos, active, n_out = carry
+                # (n_rounds, spec_k, B) -> the plain (k, B) block shape
+                tok_blk = tok_blk.reshape(k, -1)
+                emit_blk = emit_blk.reshape(k, -1)
+                return (tok_blk, emit_blk, cache, tables, tokens, pos,
+                        active, n_out)
+
+            return paged_spec_block
+
+        @functools.partial(jax.jit, donate_argnums=(1, 2, 3, 4, 5))
+        def spec_block(params, cache, tokens, pos, active, n_out,
+                       enc_lens, eos, max_new):
+            carry = (cache, tokens, pos, active, n_out)
+            carry, (tok_blk, emit_blk) = jax.lax.scan(
+                functools.partial(spec_round, params, None, enc_lens,
+                                  eos, max_new),
+                carry, None, length=n_rounds)
+            cache, tokens, pos, active, n_out = carry
+            tok_blk = tok_blk.reshape(k, -1)
+            emit_blk = emit_blk.reshape(k, -1)
+            return tok_blk, emit_blk, cache, tokens, pos, active, n_out
+
+        return spec_block
+
     def _decode_fn(self, k: int):
         fn = self._decode_fns.get(k)
         if fn is None:
@@ -531,7 +742,8 @@ class ServeEngine:
         key = (bucket, enc_s, from_states)
         if key not in self._prefill_fns:
             model, max_len, enc_len = self.model, self.max_len, self.enc_len
-            q8 = self.cache_dtype == "q8_0"
+            tier = self.cache_dtype \
+                if self.cache_dtype in QUANT_TIERS else None
             enc_key = "enc_states" if from_states else "enc_frames"
             page_size = self.page_size
 
@@ -545,8 +757,8 @@ class ServeEngine:
                         batch[enc_key] = enc
                     logits, cache = model.forward(
                         params, batch, mode="prefill", cache=cache)
-                    if q8:
-                        cache = quantize_kv_cache(cache)
+                    if tier:
+                        cache = quantize_kv_cache(cache, tier)
                     pool = _scatter_pages(pool, cache, pv_self, pv_cross,
                                           page_size)
                     first = jnp.argmax(
@@ -567,8 +779,8 @@ class ServeEngine:
                     batch[enc_key] = enc
                 logits, cache = model.forward(params, batch,
                                               mode="prefill", cache=cache)
-                if q8:
-                    cache = quantize_kv_cache(cache)
+                if tier:
+                    cache = quantize_kv_cache(cache, tier)
                 pool = _scatter_slot(pool, cache, slot)
                 first = jnp.argmax(
                     jnp.take(logits[0], n - 1, axis=0)).astype(jnp.int32)
@@ -599,10 +811,18 @@ class ServeEngine:
         accounting classifies by ``code``."""
         C = RejectCode
         n = len(req.tokens)
-        if n + req.max_new >= self.max_len:
+        # speculative lanes write draft/verify KV up to spec_k - 1
+        # positions past the last emitted token before the stop masks
+        # bind — keep that whole extent inside the pool so slab writes
+        # never clamp onto live positions
+        headroom = self.spec_k - 1 if self.spec_k else 0
+        if n + req.max_new + headroom >= self.max_len:
             return Rejection(C.TOO_LONG,
                              f"request {req.uid} too long for engine "
-                             f"({n}+{req.max_new} vs {self.max_len})")
+                             f"({n}+{req.max_new}"
+                             + (f"+{headroom} speculative headroom"
+                                if headroom else "")
+                             + f" vs {self.max_len})")
         d_model = self.model.cfg.d_model
         if self.enc_dec:
             if isinstance(req, StreamingAudioRequest):
@@ -620,8 +840,8 @@ class ServeEngine:
                         C.ENC_OVERFLOW,
                         f"request {req.uid}: {total} streamed encoder "
                         f"frames exceed the pool enc_len {self.enc_len}")
-                if self.paged and not self.pages.fits(n, req.max_new,
-                                                      total):
+                if self.paged and not self.pages.fits(
+                        n, req.max_new + headroom, total):
                     return Rejection(
                         C.POOL_EXHAUSTED,
                         f"request {req.uid}: page demand exceeds the "
@@ -652,7 +872,8 @@ class ServeEngine:
                     C.ENC_OVERFLOW,
                     f"request {req.uid}: {shp[0]} encoder positions "
                     f"exceed the pool enc_len {self.enc_len}")
-            if self.paged and not self.pages.fits(n, req.max_new, shp[0]):
+            if self.paged and not self.pages.fits(
+                    n, req.max_new + headroom, shp[0]):
                 return Rejection(
                     C.POOL_EXHAUSTED,
                     f"request {req.uid}: page demand exceeds the whole "
@@ -712,8 +933,11 @@ class ServeEngine:
                 req.enc_states if from_states else req.enc_frames,
                 "states" if from_states else "frames")
             try:
-                self.pages.admit_lane(slot, req.tokens, digest,
-                                      max_new=req.max_new, enc_s=enc_s)
+                self.pages.admit_lane(
+                    slot, req.tokens, digest,
+                    max_new=req.max_new + (self.spec_k - 1
+                                           if self.spec_k else 0),
+                    enc_s=enc_s)
             except PageAllocError:
                 # transient: pages drain as lanes finish — same retry
                 # contract as a full slot pool (scheduler re-queues)
@@ -873,7 +1097,9 @@ class ServeEngine:
                 # first anchor: allocate the lane's full self-KV extent
                 # (prompt + decode budget) so no tick ever allocates
                 try:
-                    self.pages.alloc_self(slot, n, req.max_new)
+                    self.pages.alloc_self(
+                        slot, n, req.max_new + (self.spec_k - 1
+                                                if self.spec_k else 0))
                 except PageAllocError as e:
                     raise RejectionError(Rejection(
                         RejectCode.POOL_EXHAUSTED,
@@ -948,6 +1174,9 @@ class ServeEngine:
         k = self.decode_block if k is None else int(k)
         if k < 1:   # a 0-length scan would emit nothing and never drain
             raise ValueError(f"decode block must be >= 1, got {k}")
+        if self.spec_k and k % self.spec_k:
+            raise ValueError(f"decode block ({k}) must be a multiple of "
+                             f"spec_k ({self.spec_k})")
         fn = self._decode_fn(k)
         with use_context(self.dispatch_ctx), _quiet_donation():
             if self.paged:
@@ -983,9 +1212,35 @@ class ServeEngine:
             (pending.tok_blk, pending.emit_blk))
         self._host_syncs += 1
         self._ticks += 1
-        self._decode_steps += pending.k
-        self._generated += int(emit_blk.sum())
+        emitted = int(emit_blk.sum())
+        self._generated += emitted
+        if self.spec_k:
+            # a spec tick executes rounds, not plain steps: each round
+            # is spec_k - 1 draft forwards + ONE multi-query verify
+            # forward of the full model
+            rounds = pending.k // self.spec_k
+            self._spec_rounds += rounds
+            self._draft_steps += rounds * (self.spec_k - 1)
+            self._verify_steps += rounds
+            self._spec_emitted += emitted
+            # (round, lane) pairs that emitted at all — the denominator
+            # of the draft-acceptance rate
+            live = emit_blk.reshape(rounds, self.spec_k, -1).any(axis=1)
+            self._spec_live_rounds += int(live.sum())
+        else:
+            self._decode_steps += pending.k
         return tok_blk, emit_blk
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of draft tokens the verify forward accepted so far
+        (0.0 if no speculative round has emitted yet). Each live round
+        emits 1 verified token plus ``accepted`` drafts out of
+        ``spec_k - 1``."""
+        if not self._spec_live_rounds or self.spec_k < 2:
+            return 0.0
+        accepted = self._spec_emitted - self._spec_live_rounds
+        return accepted / (self._spec_live_rounds * (self.spec_k - 1))
 
     def step_replay(self, pending: PendingTick, tok_blk,
                     emit_blk) -> list[RequestState]:
@@ -997,7 +1252,11 @@ class ServeEngine:
         for slot, st in list(self.active.items()):
             for j in range(k):
                 if not emit_blk[j, slot]:
-                    break    # lane froze at step j; no later emits
+                    # plain ticks freeze lanes prefix-contiguously, but
+                    # a speculative round that accepts m < spec_k tokens
+                    # leaves a gap before the next round's rows — keep
+                    # scanning the whole block
+                    continue
                 tok = int(tok_blk[j, slot])
                 st.out.append(tok)
                 st.pos += 1
@@ -1096,7 +1355,8 @@ class ServeEngine:
         (C3)."""
         kv_bytes, state_bytes = _cache_bytes(self.cache)
         cfg = self.model.cfg
-        dt = "q8_0" if self.cache_dtype == "q8_0" else "bf16"
+        dt = self.cache_dtype if self.cache_dtype in QUANT_TIERS \
+            else "bf16"
         per_tok = 2 * cfg.n_layers * stored_bytes(
             (cfg.n_kv_heads, cfg.head_dim), dt)
         state_per_step = 2 * state_bytes
@@ -1110,7 +1370,9 @@ class ServeEngine:
             "bytes_per_step": kv_bytes + state_per_step,
             "self_kv_bytes_per_token": per_tok,
             "traffic_ratio_vs_bf16":
-                cache_traffic_ratio() if self.cache_dtype == "q8_0" else 1.0,
+                cache_traffic_ratio() if self.cache_dtype == "q8_0"
+                else cache_traffic_ratio_q4()
+                if self.cache_dtype == "q4_0" else 1.0,
         }
         if self.paged:
             # paged pools stream only MAPPED pages per step (the gather
@@ -1213,6 +1475,11 @@ class ServeEngine:
         self._decode_steps = 0
         self._generated = 0
         self._host_syncs = 0
+        self._draft_steps = 0
+        self._verify_steps = 0
+        self._spec_rounds = 0
+        self._spec_emitted = 0
+        self._spec_live_rounds = 0
 
     def _param_stats(self) -> tuple[int, int]:
         """(element count, stored bytes) of the served parameters."""
@@ -1259,9 +1526,36 @@ class ServeEngine:
         ticks = self._ticks
         steps = self._decode_steps
         tokens = self._generated
-        cache_bytes = steps * cache["bytes_per_step"]
+        cbs = cache["bytes_per_step"]
+        cache_bytes = steps * cbs
         stream_bytes = steps * weight_bytes + cache_bytes
         flops = 2.0 * n_elems * tokens
+        spec = None
+        if self.spec_k:
+            # speculative roofline: every draft forward streams the
+            # (smaller) draft weights + the cache once; every verify
+            # forward streams the full weights + the cache ONCE for all
+            # spec_k positions — that amortization is the whole win
+            d_leaves = jax.tree.leaves(self.draft_params)
+            d_elems = sum(int(l.size) for l in d_leaves)
+            d_bytes = sum(int(l.nbytes) for l in d_leaves)
+            cache_bytes += (self._draft_steps + self._verify_steps) * cbs
+            stream_bytes = cache_bytes \
+                + steps * weight_bytes \
+                + self._draft_steps * d_bytes \
+                + self._verify_steps * weight_bytes
+            flops = 2.0 * n_elems * (steps
+                                     + self._verify_steps * self.spec_k) \
+                + 2.0 * d_elems * self._draft_steps
+            spec = {
+                "spec_k": self.spec_k,
+                "draft_dtype": self.draft_dtype,
+                "rounds": self._spec_rounds,
+                "draft_steps": self._draft_steps,
+                "verify_steps": self._verify_steps,
+                "acceptance_rate": self.acceptance_rate,
+                "draft_weight_bytes": d_bytes,
+            }
         bw = max(p.memory.main_bw, 1e-9)
         rate = p.peak_flops("q8_0" if kernel == "q8_0" else "f16")
         t_mem = stream_bytes / bw
@@ -1306,13 +1600,17 @@ class ServeEngine:
             "accel_flops_share":
                 accel_flops / trace_flops if trace_flops else 0.0,
             "trace_records": len(recs),
+            "modeled_tokens_per_s":
+                tokens / latency_s if latency_s > 0 else 0.0,
+            **({"speculative": spec} if spec else {}),
         }
 
 
 def _cache_bytes(tree) -> tuple[int, int]:
     """(KV-plane bytes, recurrent-state bytes) of a cache pytree."""
     if isinstance(tree, dict):
-        if set(tree) in ({"k", "v"}, {"kq", "ks", "vq", "vs"}):
+        if set(tree) in ({"k", "v"}, {"kq", "ks", "vq", "vs"},
+                         {"kp", "ks", "vp", "vs"}):
             return sum(int(l.nbytes) for l in jax.tree.leaves(tree)), 0
         kv = st = 0
         for sub in tree.values():
@@ -1338,8 +1636,19 @@ def _scatter_slot(pool: Any, one: Any, slot) -> Any:
     return jax.tree.map(scat, pool, one)
 
 
+def _quantize_cross_planes(k, v, tier: str) -> dict:
+    """Chunk cross-K/V -> the tier's plane dict (pre-write)."""
+    if tier == "q4_0":
+        kt = quantize_q4_0(k, axis=-1)
+        vt = quantize_q4_0(v, axis=-1)
+        return {"kp": kt.q, "ks": kt.scale, "vp": vt.q, "vs": vt.scale}
+    kt = quantize_q8_0(k, axis=-1)
+    vt = quantize_q8_0(v, axis=-1)
+    return {"kq": kt.q, "ks": kt.scale, "vq": vt.q, "vs": vt.scale}
+
+
 def _extend_cross_cache(cache: dict, k, v, slot, offset, *,
-                        q8: bool) -> dict:
+                        tier: Optional[str]) -> dict:
     """Write new cross-K/V positions ((L, 1, s_new, Hkv, ·)) into lane
     ``slot`` of the pool's cross cache at ``offset`` (streaming audio:
     the chunk's planes land after the already-cached positions). Jitted
@@ -1350,13 +1659,10 @@ def _extend_cross_cache(cache: dict, k, v, slot, offset, *,
         return jax.lax.dynamic_update_slice(
             plane, new.astype(plane.dtype), (0, slot, offset, 0, 0))
 
-    if q8:
-        kt = quantize_q8_0(k, axis=-1)
-        vt = quantize_q8_0(v, axis=-1)
-        new_cross = {"kq": dus(cross["kq"], kt.q),
-                     "ks": dus(cross["ks"], kt.scale),
-                     "vq": dus(cross["vq"], vt.q),
-                     "vs": dus(cross["vs"], vt.scale)}
+    if tier:
+        planes = _quantize_cross_planes(k, v, tier)
+        new_cross = {key: dus(cross[key], val)
+                     for key, val in planes.items()}
     else:
         new_cross = {"k": dus(cross["k"], k), "v": dus(cross["v"], v)}
     return {"layers": {**cache["layers"], "cross": new_cross}}
@@ -1399,7 +1705,7 @@ def _scatter_pages(pool: Any, one: Any, pv_self, pv_cross,
 
 
 def _extend_paged_cross_cache(cache: dict, k, v, phys, off, *,
-                              q8: bool) -> dict:
+                              tier: Optional[str]) -> dict:
     """Paged variant of ``_extend_cross_cache``: the chunk's s_new new
     positions land at ``(layer, phys[i], off[i])`` in the shared cross
     planes (gather targets from ``PagedKV.extend_cross``). Jitted with
@@ -1410,13 +1716,10 @@ def _extend_paged_cross_cache(cache: dict, k, v, phys, off, *,
     def scat(plane, new):
         return plane.at[:, phys, off].set(new[:, 0].astype(plane.dtype))
 
-    if q8:
-        kt = quantize_q8_0(k, axis=-1)
-        vt = quantize_q8_0(v, axis=-1)
-        new_cross = {"kq": scat(cross["kq"], kt.q),
-                     "ks": scat(cross["ks"], kt.scale),
-                     "vq": scat(cross["vq"], vt.q),
-                     "vs": scat(cross["vs"], vt.scale)}
+    if tier:
+        planes = _quantize_cross_planes(k, v, tier)
+        new_cross = {key: scat(cross[key], val)
+                     for key, val in planes.items()}
     else:
         new_cross = {"k": scat(cross["k"], k), "v": scat(cross["v"], v)}
     return {"layers": {**cache["layers"], "cross": new_cross}}

@@ -40,8 +40,8 @@ from repro.staticcheck.report import Finding
 
 CHECK = "SC-DTYPE"
 
-_STORAGE_DTYPES = {jnp.dtype(jnp.int8), jnp.dtype(jnp.bfloat16),
-                   jnp.dtype(jnp.float16)}
+_STORAGE_DTYPES = {jnp.dtype(jnp.int8), jnp.dtype(jnp.uint8),
+                   jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.float16)}
 
 
 def _plane_upcasts(prog: HotProgram) -> list[dict]:

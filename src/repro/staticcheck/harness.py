@@ -91,13 +91,27 @@ def build_family_engines(cache_dtypes: tuple = ("bf16",)
         model = build(reduced(get_config(arch)))
         params = model.init_values(jax.random.key(0))
         for cd in cache_dtypes:
-            if cd == "q8_0" and not model.state_spec().q8_supported:
+            if cd != "bf16" and not model.state_spec().supports_tier(cd):
                 continue
             out.append(ServeEngine(model, params, n_slots=N_SLOTS,
                                    max_len=MAX_LEN, enc_len=ENC_LEN,
                                    cache_dtype=cd,
                                    decode_block=DECODE_BLOCK))
     return out
+
+
+def build_spec_engine(cache_dtype: str = "q4_0",
+                      arch: str = "whisper-tiny-en",
+                      spec_k: int = DECODE_BLOCK) -> ServeEngine:
+    """A self-speculative engine: quantized draft weights + the fused
+    draft-verify tick. spec_k defaults to DECODE_BLOCK so the traced
+    tick is exactly one draft-verify round."""
+    cfg = reduced(get_config(arch))
+    model = build(cfg)
+    params = model.init_values(jax.random.key(0))
+    return ServeEngine(model, params, n_slots=N_SLOTS, max_len=MAX_LEN,
+                       enc_len=ENC_LEN, cache_dtype=cache_dtype,
+                       decode_block=DECODE_BLOCK, spec_k=spec_k)
 
 
 def build_paged_engine(cache_dtype: str = "q8_0",
@@ -124,7 +138,8 @@ def _state_shapes(cache) -> tuple:
 
     def walk(tree):
         if isinstance(tree, dict):
-            if set(tree) in ({"k", "v"}, {"kq", "ks", "vq", "vs"}):
+            if set(tree) in ({"k", "v"}, {"kq", "ks", "vq", "vs"},
+                             {"kp", "ks", "vp", "vs"}):
                 return
             for v in tree.values():
                 walk(v)
@@ -181,6 +196,10 @@ def hot_programs(eng: ServeEngine,
     cfg = eng.model.cfg
     tag = f"[{eng.cache_dtype}]" if cfg.enc_dec \
         else f"[{cfg.name}|{eng.cache_dtype}]"
+    if eng.spec_k:
+        # speculative engines trace the draft-verify tick under their
+        # own subject names (the draft weights ride inside params)
+        tag = f"[spec{eng.spec_k}|{eng.cache_dtype}]"
     programs = []
 
     # --- fused decode tick (the per-tick program) ---

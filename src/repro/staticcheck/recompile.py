@@ -53,6 +53,8 @@ def check_recompile(eng) -> list[Finding]:
     ptag = "paged_" if eng.paged else ""
     dtag = f"[{eng.cache_dtype}]" if cfg.enc_dec \
         else f"[{cfg.name}|{eng.cache_dtype}]"
+    if eng.spec_k:
+        dtag = f"[spec{eng.spec_k}|{eng.cache_dtype}]"
     with warnings.catch_warnings():
         # CPU has no donation support: jit warns per compile; the
         # engine's own paths silence it the same way.

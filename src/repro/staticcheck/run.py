@@ -50,7 +50,7 @@ def apply_waivers(findings: list[Finding],
 
 def run_all(config: Optional[StaticcheckConfig] = None,
             only: Optional[set] = None,
-            cache_dtypes: tuple = ("q8_0", "bf16"),
+            cache_dtypes: tuple = ("q8_0", "q4_0", "bf16"),
             root: Optional[str] = None) -> Report:
     """Run the selected checks (default: all) and return the Report.
     ``only`` is a set of check IDs; unknown IDs raise."""
@@ -68,9 +68,14 @@ def run_all(config: Optional[StaticcheckConfig] = None,
         from repro.staticcheck.harness import (build_engine,
                                                build_family_engines,
                                                build_paged_engine,
+                                               build_spec_engine,
                                                hot_programs,
                                                paged_hot_programs)
         engines = [build_engine(cd) for cd in cache_dtypes]
+        # the self-speculative draft-verify tick: its donated program
+        # carries the q4 draft weights, so SC-DON/SC-SYNC/SC-DTYPE see
+        # the draft dequants and the accept-mask rollback logic
+        engines.append(build_spec_engine("q4_0"))
         paged_engines = [build_paged_engine(cd) for cd in cache_dtypes]
         # model-zoo coverage: every served family at bf16, plus one
         # q8_0 twin (the MoE arch) so the quantized tier is exercised

@@ -54,7 +54,7 @@ def _drain(eng, k=None):
 # ------------------------------------------------------------- parity
 
 
-@pytest.mark.parametrize("cache_dtype", ["bf16", "q8_0"])
+@pytest.mark.parametrize("cache_dtype", ["bf16", "q8_0", "q4_0"])
 def test_fused_tick_parity(cache_dtype):
     """K-step fused decode == K sequential step() calls, token for
     token, for bf16 and q8_0 cache pools."""
@@ -78,7 +78,7 @@ def test_fused_tick_parity(cache_dtype):
     assert eng_fus._ticks < eng_seq._ticks
 
 
-@pytest.mark.parametrize("cache_dtype", ["bf16", "q8_0"])
+@pytest.mark.parametrize("cache_dtype", ["bf16", "q8_0", "q4_0"])
 def test_fused_tick_parity_eos_mid_block(cache_dtype):
     """A lane that hits EOS at a step that is NOT a block boundary must
     freeze mid-scan: its later in-block emits are masked, and every

@@ -37,8 +37,9 @@ def _q8_operands(m=8, k=256, n=128):
 
 def test_registry_has_all_builtin_ops():
     assert registry.list_ops() == sorted([
-        "q8_matmul", "fp16_matmul", "flash_attention",
-        "q8_decode_attention", "paged_decode_attention", "slstm_scan"])
+        "q8_matmul", "q4_matmul", "fp16_matmul", "flash_attention",
+        "q8_decode_attention", "q4_decode_attention",
+        "paged_decode_attention", "slstm_scan"])
 
 
 def test_registry_unknown_op_raises():

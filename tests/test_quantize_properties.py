@@ -1,0 +1,216 @@
+"""Q4_0/Q8_0 tier properties: analytic round-trip bounds, nibble
+pack/unpack bijection, idempotence on saturated planes.
+
+The deterministic versions always run; the hypothesis-driven sweeps
+(arbitrary shapes/axes/value ranges) engage when hypothesis is
+installed (``pip install -e .[test]``), mirroring
+tests/test_paging_properties.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quantize import (BYTES_PER_ELEM, Q4_BYTES_PER_ELEM,
+                                 QBLOCK, Q4Tensor, bytes_per_elem,
+                                 dequantize_q4_0, dequantize_q8_0,
+                                 pack_q4, pad_to_block,
+                                 quantization_error_bound,
+                                 quantize_q4_0, quantize_q8_0,
+                                 quantize_tree, unpack_q4)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# deterministic versions (always run)
+# ---------------------------------------------------------------------------
+
+def _check_q4_roundtrip(x, axis=-1):
+    t = quantize_q4_0(x, axis=axis)
+    err = jnp.abs(dequantize_q4_0(t, axis=axis) - x)
+    bound = jnp.repeat(quantization_error_bound(t), QBLOCK, axis=axis)
+    # 1% headroom for the f16 scale representation error
+    bound = bound * 1.01 + 1e-6
+    assert bool(jnp.all(err <= bound)), float(jnp.max(err - bound))
+
+
+def test_q4_roundtrip_error_within_bound():
+    x = jax.random.normal(jax.random.key(0), (8, 256), jnp.float32)
+    _check_q4_roundtrip(x)
+
+
+def test_q4_roundtrip_along_leading_axis():
+    x = jax.random.normal(jax.random.key(1), (64, 5), jnp.float32)
+    _check_q4_roundtrip(x, axis=0)
+
+
+def test_q4_shapes_and_dtypes():
+    x = jnp.ones((4, 64), jnp.bfloat16)
+    t = quantize_q4_0(x)
+    # nibble-packed: the quantize axis halves in the uint8 plane
+    assert t.q.shape == (4, 32) and t.q.dtype == jnp.uint8
+    assert t.scale.shape == (4, 2) and t.scale.dtype == jnp.float16
+    assert t.shape == (4, 32)
+
+
+def test_pack_unpack_bijection():
+    rng = np.random.default_rng(0)
+    codes = rng.integers(-8, 8, size=(6, 96), dtype=np.int64)
+    c = jnp.asarray(codes, jnp.int8)
+    packed = pack_q4(c)
+    assert packed.shape == (6, 48) and packed.dtype == jnp.uint8
+    np.testing.assert_array_equal(np.asarray(unpack_q4(packed)),
+                                  codes)
+
+
+def test_pack_unpack_bijection_leading_axis():
+    rng = np.random.default_rng(1)
+    codes = rng.integers(-8, 8, size=(32, 7), dtype=np.int64)
+    c = jnp.asarray(codes, jnp.int8)
+    np.testing.assert_array_equal(
+        np.asarray(unpack_q4(pack_q4(c, axis=0), axis=0)), codes)
+
+
+def test_pack_odd_length_raises_and_pad_fixes():
+    with pytest.raises(ValueError):
+        pack_q4(jnp.zeros((2, 33), jnp.int8))
+    x = jnp.ones((2, 33))
+    with pytest.raises(ValueError):
+        quantize_q4_0(x)
+    xp = pad_to_block(x)
+    assert xp.shape == (2, 64)
+    t = quantize_q4_0(xp)      # no raise
+    assert t.q.shape == (2, 32)
+
+
+def test_q4_saturated_plane_idempotent():
+    # a plane pinned at +/-amax maps to codes +/-7 and dequantizes back
+    # exactly (amax/7 * 7); re-quantizing is a fixed point
+    amax = 3.0
+    sign = jnp.asarray(np.random.default_rng(2).choice(
+        [-1.0, 1.0], size=(4, 64)), jnp.float32)
+    x = sign * amax
+    t = quantize_q4_0(x)
+    y = dequantize_q4_0(t)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x),
+                               rtol=1e-3)   # f16 scale rounding only
+    t2 = quantize_q4_0(y)
+    np.testing.assert_array_equal(np.asarray(t.q), np.asarray(t2.q))
+    np.testing.assert_array_equal(np.asarray(t.scale),
+                                  np.asarray(t2.scale))
+
+
+def test_zero_plane_is_exact():
+    t = quantize_q4_0(jnp.zeros((1, 32)))
+    assert float(jnp.max(jnp.abs(dequantize_q4_0(t)))) == 0.0
+
+
+def test_q4_packed_bytes_ratio():
+    x = jnp.ones((16, 320))
+    t = quantize_q4_0(x)
+    assert t.nbytes_packed == int(x.size * Q4_BYTES_PER_ELEM)
+
+
+def test_bytes_per_elem_table():
+    assert bytes_per_elem("q4_0") == Q4_BYTES_PER_ELEM == 0.5625
+    assert bytes_per_elem("q8_0") == 1.0625
+    with pytest.raises(ValueError) as e:
+        bytes_per_elem("q2_k")
+    # the error names every supported tier
+    for tier in BYTES_PER_ELEM:
+        assert tier in str(e.value)
+
+
+def test_quantize_tree_q4_selectivity():
+    params = {"w": jnp.ones((64, 8)), "norm": jnp.ones((8,)),
+              "odd": jnp.ones((33, 5))}
+    qt = quantize_tree(params, tier="q4_0")
+    assert isinstance(qt["w"], Q4Tensor)
+    assert not isinstance(qt["norm"], Q4Tensor)
+    assert not isinstance(qt["odd"], Q4Tensor)
+    with pytest.raises(ValueError):
+        quantize_tree(params, tier="q2_k")
+
+
+def test_q4_vs_q8_bound_ordering():
+    # q4's 15-level grid is coarser than q8's 255-level grid: on the
+    # same data the q4 analytic bound dominates, and both hold
+    x = jax.random.normal(jax.random.key(3), (4, 128), jnp.float32)
+    b4 = quantization_error_bound(quantize_q4_0(x))
+    b8 = quantization_error_bound(quantize_q8_0(x))
+    assert bool(jnp.all(b4 >= b8))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweeps
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    _dims = st.tuples(st.integers(1, 6),
+                      st.integers(1, 4).map(lambda b: b * QBLOCK))
+
+    @settings(max_examples=40, deadline=None)
+    @given(_dims, st.integers(0, 2 ** 31 - 1), st.floats(0.1, 100.0))
+    def test_prop_q4_roundtrip_bound(dims, seed, scale):
+        rows, k = dims
+        x = jax.random.normal(jax.random.key(seed), (rows, k),
+                              jnp.float32) * scale
+        _check_q4_roundtrip(x)
+
+    @settings(max_examples=40, deadline=None)
+    @given(_dims, st.integers(0, 2 ** 31 - 1), st.floats(0.1, 100.0))
+    def test_prop_q8_roundtrip_bound(dims, seed, scale):
+        rows, k = dims
+        x = jax.random.normal(jax.random.key(seed), (rows, k),
+                              jnp.float32) * scale
+        t = quantize_q8_0(x)
+        err = jnp.abs(dequantize_q8_0(t) - x)
+        bound = jnp.repeat(quantization_error_bound(t), QBLOCK,
+                           axis=-1) * 1.01 + 1e-6
+        assert bool(jnp.all(err <= bound))
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(1, 8), st.integers(1, 64),
+           st.integers(0, 2 ** 31 - 1))
+    def test_prop_pack_unpack_bijection(rows, half_k, seed):
+        rng = np.random.default_rng(seed)
+        codes = rng.integers(-8, 8, size=(rows, 2 * half_k))
+        c = jnp.asarray(codes, jnp.int8)
+        np.testing.assert_array_equal(np.asarray(unpack_q4(pack_q4(c))),
+                                      codes)
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(1, 5).map(lambda n: 2 * n + 1),
+           st.integers(0, 2 ** 31 - 1))
+    def test_prop_odd_lastdim_pads_then_roundtrips(k_odd, seed):
+        # odd / non-block last dims: pad_to_block, quantize, and the
+        # valid prefix round-trips within bound
+        x = jax.random.normal(jax.random.key(seed), (3, k_odd),
+                              jnp.float32)
+        xp = pad_to_block(x)
+        assert xp.shape[-1] % QBLOCK == 0
+        t = quantize_q4_0(xp)
+        err = jnp.abs(dequantize_q4_0(t)[:, :k_odd] - x)
+        bound = jnp.repeat(quantization_error_bound(t), QBLOCK,
+                           axis=-1)[:, :k_odd] * 1.01 + 1e-6
+        assert bool(jnp.all(err <= bound))
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(0, 2 ** 31 - 1), st.floats(0.25, 16.0))
+    def test_prop_saturated_plane_idempotent(seed, amax):
+        sign = jnp.asarray(
+            np.random.default_rng(seed).choice([-1.0, 1.0],
+                                               size=(2, QBLOCK)),
+            jnp.float32)
+        t = quantize_q4_0(sign * amax)
+        t2 = quantize_q4_0(dequantize_q4_0(t))
+        np.testing.assert_array_equal(np.asarray(t.q), np.asarray(t2.q))
+        np.testing.assert_array_equal(np.asarray(t.scale),
+                                      np.asarray(t2.scale))

@@ -1,0 +1,279 @@
+"""Self-speculative decoding: token parity, rollback, sync counts.
+
+The speculative tick (``ServeEngine(spec_k=K)``) drafts ``K - 1``
+tokens with q4-quantized weights and verifies all ``K`` positions in
+one full-model multi-query forward, inside the same donated jit as the
+plain fused tick. Greedy outputs must be token-identical to plain
+``decode_block`` serving in every configuration — EOS mid-draft,
+zero-acceptance drafts, paged pools, streaming whisper lanes — while
+still syncing to host exactly once per tick.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.quantize import quantize_tree
+from repro.models.model import build
+from repro.serving.engine import (AudioRequest, Request, ServeEngine,
+                                  StreamingAudioRequest)
+from repro.serving.scheduler import BatchScheduler
+
+WHISPER_PROMPTS = [[5, 6, 7, 8], [9, 10, 11], [3, 4, 5, 6, 7]]
+
+
+def _setup(arch="whisper-tiny-en", seed=0):
+    cfg = reduced(get_config(arch))
+    model = build(cfg)
+    params = model.init_values(jax.random.key(seed))
+    return cfg, model, params
+
+
+def _engine(model, params, **kw):
+    kw.setdefault("n_slots", 4)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("enc_len", 16)
+    return ServeEngine(model, params, **kw)
+
+
+def _frames(cfg, rng, lens=(8, 12, 8)):
+    return [rng.standard_normal((n, cfg.d_model)).astype(np.float32) * 0.5
+            for n in lens]
+
+
+def _admit_all(eng, frames, max_new=8, eos=-2, prompts=None):
+    prompts = prompts or WHISPER_PROMPTS
+    return [eng.admit(AudioRequest(uid=i, tokens=list(p), max_new=max_new,
+                                   eos_id=eos, enc_frames=f))
+            for i, (p, f) in enumerate(zip(prompts, frames))]
+
+
+def _drain(eng, k=None):
+    n = 0
+    while eng.n_active:
+        eng.step(k)
+        n += 1
+    return n
+
+
+# ------------------------------------------------------------- parity
+
+
+@pytest.mark.parametrize("cache_dtype", ["bf16", "q8_0", "q4_0"])
+def test_spec_tick_parity(cache_dtype):
+    """The speculative tick == the plain fused tick, token for token,
+    on every cache tier — with exactly one host sync per tick."""
+    cfg, model, params = _setup()
+    rng = np.random.default_rng(0)
+    frames = _frames(cfg, rng)
+
+    eng_p = _engine(model, params, cache_dtype=cache_dtype,
+                    decode_block=4)
+    sts_p = _admit_all(eng_p, frames)
+    _drain(eng_p)
+
+    eng_s = _engine(model, params, cache_dtype=cache_dtype,
+                    decode_block=4, spec_k=4)
+    sts_s = _admit_all(eng_s, frames)
+    syncs0 = eng_s._host_syncs
+    ticks = _drain(eng_s)
+
+    assert [st.out for st in sts_s] == [st.out for st in sts_p]
+    assert eng_s._host_syncs - syncs0 == ticks == eng_s._ticks
+    # round accounting: every tick ran decode_block // spec_k rounds
+    assert eng_s._spec_rounds == eng_s._ticks
+    assert eng_s._draft_steps == 3 * eng_s._spec_rounds
+    assert eng_s._verify_steps == eng_s._spec_rounds
+    assert 0.0 <= eng_s.acceptance_rate <= 1.0
+
+
+def test_spec_parity_eos_mid_draft():
+    """A lane whose greedy stream hits EOS *inside* a draft window must
+    stop exactly there: later in-round candidates are masked even if
+    the draft happened to match them."""
+    cfg, model, params = _setup()
+    rng = np.random.default_rng(0)
+    frames = _frames(cfg, rng)
+
+    probe = _engine(model, params)
+    sts = _admit_all(probe, frames, max_new=8)
+    _drain(probe, k=1)
+    eos = sts[0].out[2]   # lands at round position 2 of a spec_k=4 round
+
+    eng_p = _engine(model, params, decode_block=4)
+    sts_p = _admit_all(eng_p, frames, max_new=8, eos=eos)
+    _drain(eng_p)
+
+    eng_s = _engine(model, params, decode_block=4, spec_k=4)
+    sts_s = _admit_all(eng_s, frames, max_new=8, eos=eos)
+    _drain(eng_s)
+
+    assert [st.out for st in sts_s] == [st.out for st in sts_p]
+    assert sts_s[0].out[-1] == eos
+    assert all(st.done for st in sts_s)
+
+
+def test_spec_zero_acceptance_worst_case():
+    """An adversarial draft (weights from a different init) almost
+    never matches the target — the engine must degrade to one verified
+    token per round with outputs still token-identical to plain
+    decode."""
+    cfg, model, params = _setup()
+    _, _, other = _setup(seed=7)
+    rng = np.random.default_rng(0)
+    frames = _frames(cfg, rng)
+
+    eng_p = _engine(model, params, decode_block=4)
+    sts_p = _admit_all(eng_p, frames)
+    _drain(eng_p)
+
+    eng_s = _engine(model, params, decode_block=4, spec_k=4,
+                    draft_params=quantize_tree(other, tier="q4_0"))
+    sts_s = _admit_all(eng_s, frames)
+    _drain(eng_s)
+
+    assert [st.out for st in sts_s] == [st.out for st in sts_p]
+    # near-total rejection: progress comes from the verify forward
+    assert eng_s.acceptance_rate < 0.5
+    assert eng_s._spec_emitted >= eng_s._spec_live_rounds
+
+
+def test_spec_paged_parity():
+    """Speculative decode over the paged pool: rejected-tail writes
+    land on allocated headroom/scratch pages, never on another lane."""
+    cfg, model, params = _setup()
+    rng = np.random.default_rng(0)
+    frames = _frames(cfg, rng)
+
+    eng_p = _engine(model, params, decode_block=4, paged=True,
+                    page_size=8, cache_dtype="q4_0")
+    sts_p = _admit_all(eng_p, frames)
+    _drain(eng_p)
+
+    eng_s = _engine(model, params, decode_block=4, spec_k=4, paged=True,
+                    page_size=8, cache_dtype="q4_0")
+    sts_s = _admit_all(eng_s, frames)
+    _drain(eng_s)
+
+    assert [st.out for st in sts_s] == [st.out for st in sts_p]
+    # every page returned: no leak through the speculative headroom
+    rep = eng_s.paging_report()
+    assert rep["self"]["pages_in_use"] == 0
+    assert rep["cross"]["pages_in_use"] == 0
+
+
+def test_spec_streaming_whisper_parity():
+    """Streaming lanes (chunked audio, mid-stream parking, final
+    re-anchor) served by a speculative engine match the plain engine's
+    transcript and partial hypotheses."""
+    cfg, model, params = _setup()
+    rng = np.random.default_rng(1)
+    chunks = [rng.standard_normal((4, cfg.d_model)).astype(np.float32) * 0.5
+              for _ in range(3)]
+    frames = _frames(cfg, rng, lens=(8,))
+
+    def serve(spec_k):
+        eng = _engine(model, params, decode_block=4, spec_k=spec_k)
+        sched = BatchScheduler(eng)
+        sched.submit(StreamingAudioRequest(uid=0, tokens=[5, 6], max_new=2,
+                                           eos_id=-2, chunks=chunks))
+        sched.submit(AudioRequest(uid=1, tokens=[7, 8, 9], max_new=9,
+                                  eos_id=-2, enc_frames=frames[0]))
+        sched.run_until_drained(max_ticks=100)
+        assert sched.drained
+        return sched.results
+
+    plain, spec = serve(0), serve(4)
+    assert spec[0].out == plain[0].out
+    assert spec[0].partials == plain[0].partials
+    assert spec[1].out == plain[1].out
+
+
+def test_spec_decoder_only_parity():
+    cfg, model, params = _setup("qwen3-4b")
+    prompts = [[5, 6, 7, 8], [9, 10, 11]]
+
+    def serve(spec_k):
+        eng = _engine(model, params, max_len=96, decode_block=4,
+                      spec_k=spec_k)
+        sts = [eng.admit(Request(uid=i, tokens=p, max_new=9, eos_id=-2))
+               for i, p in enumerate(prompts)]
+        _drain(eng)
+        return [st.out for st in sts]
+
+    assert serve(0) == serve(2) == serve(4)
+
+
+# --------------------------------------------- donation / validation
+
+
+def test_spec_decode_jit_donates_cache_and_state():
+    cfg, model, params = _setup()
+    eng = _engine(model, params, decode_block=4, spec_k=4)
+    fn = eng._build_decode(4)
+    lowered = fn.lower(params, eng.cache, eng._tokens, eng._pos,
+                       eng._lane_active, eng._lane_out, eng._enc_lens,
+                       eng._lane_eos, eng._lane_max)
+    assert lowered.as_text().count("tf.aliasing_output") >= 5
+
+
+def test_spec_knob_validation():
+    cfg, model, params = _setup()
+    with pytest.raises(ValueError, match="spec_k"):
+        _engine(model, params, spec_k=1)
+    with pytest.raises(ValueError, match="multiple"):
+        _engine(model, params, decode_block=3, spec_k=2)
+    with pytest.raises(ValueError, match="draft_dtype"):
+        _engine(model, params, decode_block=2, spec_k=2,
+                draft_dtype="int3")
+    eng = _engine(model, params, decode_block=4, spec_k=4)
+    rng = np.random.default_rng(0)
+    _admit_all(eng, _frames(cfg, rng))
+    with pytest.raises(ValueError, match="multiple"):
+        eng.step_begin(k=6)
+    # quantized served params need explicit draft weights
+    with pytest.raises(ValueError, match="draft_params"):
+        _engine(model, quantize_tree(params), decode_block=2, spec_k=2)
+
+
+def test_spec_recurrent_lane_rejected():
+    cfg, model, params = _setup("xlstm-350m")
+    with pytest.raises(ValueError, match="roll"):
+        _engine(model, params, decode_block=2, spec_k=2)
+
+
+def test_spec_validate_headroom():
+    """Speculative lanes keep spec_k - 1 extra KV positions of
+    headroom; a request that fits a plain engine exactly is TOO_LONG
+    for the speculative one."""
+    cfg, model, params = _setup()
+    plain = _engine(model, params)
+    spec = _engine(model, params, decode_block=4, spec_k=4)
+    req = AudioRequest(uid=0, tokens=list(range(2, 33)), max_new=32,
+                       eos_id=-2,
+                       enc_frames=np.zeros((8, cfg.d_model), np.float32))
+    assert plain.validate(req) is None         # 31 + 32 < 64
+    rej = spec.validate(req)
+    assert rej is not None and rej.code.value == "too_long"
+    req2 = AudioRequest(uid=1, tokens=list(range(2, 30)), max_new=32,
+                        eos_id=-2,
+                        enc_frames=np.zeros((8, cfg.d_model), np.float32))
+    assert spec.validate(req2) is None         # 28 + 32 + 3 < 64
+
+
+def test_spec_energy_report_fields():
+    cfg, model, params = _setup()
+    rng = np.random.default_rng(0)
+    eng = _engine(model, params, decode_block=4, spec_k=4,
+                  cache_dtype="q4_0", platform="imax3-28nm/32k")
+    _admit_all(eng, _frames(cfg, rng))
+    _drain(eng)
+    er = eng.energy_report()
+    spec = er["speculative"]
+    assert spec["spec_k"] == 4 and spec["draft_dtype"] == "q4_0"
+    assert spec["draft_steps"] == 3 * spec["rounds"]
+    assert spec["verify_steps"] == spec["rounds"]
+    assert 0.0 <= spec["acceptance_rate"] <= 1.0
+    assert 0 < spec["draft_weight_bytes"] < er["weight_bytes"]
+    assert er["modeled_tokens_per_s"] > 0
